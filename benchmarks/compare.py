@@ -1,0 +1,55 @@
+"""Baseline vs optimized dry-run comparison (markdown, for EXPERIMENTS.md).
+
+Note: the baseline artifacts predate the trip-count-corrected accounting, so
+the comparison uses the columns that are directly comparable across both
+snapshots (HBM bytes, raw per-instruction costs) plus the corrected terms
+for the optimized run.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from .roofline import HBM_BW, LINK_BW, PEAK_FLOPS, roofline_row
+
+
+def load(d):
+    out = {}
+    for p in sorted(Path(d).glob("*.json")):
+        r = json.loads(p.read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def hbm(r):
+    return (r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]) / 2**30
+
+
+def main(base_dir="results/dryrun_baseline", opt_dir="results/dryrun_opt",
+         mesh="single"):
+    base, opt = load(base_dir), load(opt_dir)
+    print("| arch | shape | HBM/dev base→opt (GiB) | raw bytes/dev base→opt "
+          "(GB) | raw coll bytes base→opt (GB) | opt dominant | opt rl-frac |")
+    print("|---|---|---|---|---|---|---|")
+    for key in sorted(opt):
+        if key[2] != mesh:
+            continue
+        ro = opt[key]
+        rb = base.get(key)
+        if ro.get("status") != "ok":
+            continue
+        row = roofline_row(ro)
+        b_hbm = f"{hbm(rb):.1f}" if rb and rb.get("status") == "ok" else "—"
+        b_bytes = (f"{rb['cost']['bytes_accessed']/1e9:.1f}"
+                   if rb and rb.get("status") == "ok" else "—")
+        b_coll = (f"{rb.get('collective_link_bytes',0)/1e9:.1f}"
+                  if rb and rb.get("status") == "ok" else "—")
+        print(f"| {key[0]} | {key[1]} | {b_hbm}→{hbm(ro):.1f} "
+              f"| {b_bytes}→{ro['cost']['bytes_accessed']/1e9:.1f} "
+              f"| {b_coll}→{ro.get('collective_link_bytes',0)/1e9:.1f} "
+              f"| {row['dominant']} | {row['roofline_frac']:.3f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

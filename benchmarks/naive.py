@@ -1,0 +1,85 @@
+"""Deliberately unoptimized hardware-agnostic implementations.
+
+These play the role of the paper's *hardware-agnostic OpenCL* variants
+(§VI-A): functionally portable code with every hardware-specific optimization
+removed — no blocking/tiling, no fused accumulation, structure-oblivious
+memory traffic.  They are correct, they run everywhere, and they are slow —
+which is exactly the point of Table VI/VII.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def mmm_naive(a, b):
+    """Outer-product formulation: materializes the full (M,K,N) tensor."""
+    return jnp.sum(a[:, :, None] * b[None, :, :], axis=1)
+
+
+@jax.jit
+def ewmm_naive(a, b):
+    """Row-serialized elementwise multiply (fori_loop over rows)."""
+    def body(i, out):
+        return out.at[i].set(a[i] * b[i])
+    return jax.lax.fori_loop(0, a.shape[0], body, jnp.zeros_like(a))
+
+
+@jax.jit
+def ewmd_naive(a, b):
+    def body(i, out):
+        return out.at[i].set(a[i] / b[i])
+    return jax.lax.fori_loop(0, a.shape[0], body, jnp.zeros_like(a))
+
+
+@jax.jit
+def mvm_naive(a, x):
+    """Row-serialized GEMV."""
+    def body(i, y):
+        return y.at[i].set(jnp.sum(a[i] * x))
+    return jax.lax.fori_loop(0, a.shape[0], body,
+                             jnp.zeros(a.shape[0], a.dtype))
+
+
+@jax.jit
+def vdp_naive(x, y):
+    """Chunk-serialized dot product (1k-element chunks, scalar carry)."""
+    n = x.shape[0] // 1024 * 1024
+    xc = x[:n].reshape(-1, 1024)
+    yc = y[:n].reshape(-1, 1024)
+
+    def body(i, acc):
+        return acc + jnp.sum(xc[i] * yc[i])
+    acc = jax.lax.fori_loop(0, xc.shape[0], body, jnp.float32(0))
+    return acc + jnp.sum(x[n:] * y[n:])
+
+
+@jax.jit
+def jacobi_step_naive(a, x, b):
+    """Row-serialized Jacobi sweep."""
+    d = jnp.diagonal(a)
+
+    def body(i, out):
+        r = jnp.sum(a[i] * x) - d[i] * x[i]
+        return out.at[i].set((b[i] - r) / d[i])
+    return jax.lax.fori_loop(0, a.shape[0], body, jnp.zeros_like(x))
+
+
+@jax.jit
+def conv1d_naive(x, w):
+    """Output-serialized valid convolution (fori over output positions)."""
+    n, k = x.shape[0], w.shape[0]
+    out_len = n - k + 1
+
+    def body(i, out):
+        seg = jax.lax.dynamic_slice(x, (i,), (k,))
+        return out.at[i].set(jnp.sum(seg * w))
+    return jax.lax.fori_loop(0, out_len, body,
+                             jnp.zeros(out_len, x.dtype))
+
+
+@jax.jit
+def smmm_naive(a_dense, b):
+    """Sparsity-oblivious: dense outer-product matmul of the sparse operand."""
+    return jnp.sum(a_dense[:, :, None] * b[None, :, :], axis=1)

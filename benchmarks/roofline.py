@@ -1,0 +1,88 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms (per device; cost_analysis/memory_analysis on the SPMD-partitioned
+module are per-device — verified in DESIGN.md §7):
+
+  compute    = flops_per_dev / 197e12           [TPU v5e bf16 peak]
+  memory     = bytes_per_dev / 819e9            [HBM bandwidth]
+  collective = coll_link_bytes_per_dev / 50e9   [ICI per link, ring model]
+
+Dominant term = bottleneck.  Also reports MODEL_FLOPS/HLO_FLOPS (useful-
+compute fraction: remat/redundancy waste shows up here; >1 means HLO counts
+less than 6·N·D because cost_analysis folds some ops).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load_records(dryrun_dir: str = "results/dryrun") -> List[Dict]:
+    out = []
+    for p in sorted(Path(dryrun_dir).glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    # prefer trip-count-corrected costs (scan bodies × repeats; see dryrun)
+    cc = rec.get("cost_corrected")
+    if cc:
+        flops = cc["flops"]
+        bytes_acc = cc["bytes_accessed"]
+        coll = cc["collective_link_bytes"]
+    else:
+        flops = rec["cost"]["flops"]
+        bytes_acc = rec["cost"]["bytes_accessed"]
+        coll = rec.get("collective_link_bytes", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_acc / HBM_BW
+    t_l = coll / LINK_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_l, "collective"))[1]
+    model_flops_dev = rec["model_flops"] / chips
+    useful = model_flops_dev / flops if flops else 0.0
+    bound = max(t_c, t_m, t_l)
+    frac = t_c / bound if bound else 0.0     # roofline fraction (compute/bound)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+        "dominant": dominant, "useful_flops_frac": useful,
+        "roofline_frac": frac,
+        "mem_gib": (rec["memory"]["argument_bytes"]
+                    + rec["memory"]["temp_bytes"]) / 2**30,
+    }
+
+
+def table(dryrun_dir: str = "results/dryrun", mesh: Optional[str] = None
+          ) -> List[Dict]:
+    rows = []
+    for rec in load_records(dryrun_dir):
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def main(dryrun_dir: str = "results/dryrun"):
+    print("arch,shape,mesh,compute_ms,memory_ms,collective_ms,dominant,"
+          "useful_flops_frac,roofline_frac,mem_GiB")
+    for r in table(dryrun_dir):
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['compute_s']*1e3:.3f},{r['memory_s']*1e3:.3f},"
+              f"{r['collective_s']*1e3:.3f},{r['dominant']},"
+              f"{r['useful_flops_frac']:.3f},{r['roofline_frac']:.3f},"
+              f"{r['mem_gib']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

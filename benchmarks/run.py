@@ -1,0 +1,89 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table (VI/VII/VIII) + the roofline table from dry-run
+artifacts (if present) + a model-step microbench.  Output: CSV
+(``name,us_per_call,derived``) per the harness contract, with section
+headers as comments.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+
+def _section(title: str):
+    print(f"# === {title} ===", flush=True)
+
+
+def main() -> None:
+    from repro.core.portability import KernelReport
+
+    # Tables VI (penalty), VII (portability), VIII (overhead) — one pass
+    from .tables import run_tables
+    _section("paper tables VI/VII/VIII: kernel portability (per subroutine)")
+    print(KernelReport.csv_header())
+    reports = run_tables(verbose=True)
+
+    _section("table VI analogue: performance penalty (%) vs baseline")
+    print("kernel,halo_penalty_pct,naive_penalty_pct")
+    for r in reports:
+        halo_pen = (r.t3_halo_s - r.t3_baseline_s) / r.t3_baseline_s * 100
+        naive_pen = (r.t3_agnostic_s - r.t3_baseline_s) / r.t3_baseline_s * 100
+        print(f"{r.kernel},{halo_pen:.1f},{naive_pen:.1f}")
+
+    _section("table VII analogue: portability score (HALO vs HA-naive)")
+    print("kernel,halo_score,naive_score,halo_gain_x")
+    for r in reports:
+        print(f"{r.kernel},{r.halo_score:.4f},{r.agnostic_score:.4f},"
+              f"{r.halo_gain:.1f}")
+
+    _section("table VIII analogue: HALO overhead ratio T1/T4")
+    print("kernel,T1_us,T4_us,overhead_ratio_pct")
+    for r in reports:
+        print(f"{r.kernel},{r.t1_s*1e6:.2f},{r.t4_s*1e6:.1f},"
+              f"{r.overhead*100:.5f}")
+
+    # Roofline tables from dry-run artifacts (baseline + optimized)
+    from .roofline import main as roofline_main
+    found = False
+    for name, d in [("paper-faithful baseline", "results/dryrun_baseline"),
+                    ("optimized (EXPERIMENTS §Perf)", "results/dryrun_opt"),
+                    ("dry-run", "results/dryrun")]:
+        dr = Path(d)
+        if dr.exists() and any(dr.glob("*.json")):
+            _section(f"roofline per (arch x shape x mesh) [{name}]")
+            roofline_main(str(dr))
+            found = True
+    if not found:
+        _section("roofline: no dry-run artifacts found (run "
+                 "`python -m repro.launch.dryrun` first)")
+
+    # Model-step microbench (reduced configs, CPU)
+    _section("model step microbench (reduced configs, CPU)")
+    print("name,us_per_call,derived")
+    from repro.configs import get_config
+    from repro.core.portability import time_fn
+    from repro.models import build_model
+    from repro.data import SyntheticLM
+    from repro.train.trainer import TrainHyper, make_train_step, TrainState
+    from repro.optim.adamw import adamw_init
+    for arch in ["h2o-danube-1.8b", "mamba2-370m", "moonshot-v1-16b-a3b"]:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        state = TrainState(params=params, opt=adamw_init(params), err_fb=None)
+        pipe = SyntheticLM(cfg, seq_len=64, global_batch=4)
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+        step = jax.jit(make_train_step(model, TrainHyper()))
+        t = time_fn(lambda s, b: step(s, b)[0].params, state, batch,
+                    warmup=1, iters=3)
+        tokens = 64 * 4
+        print(f"train_step/{arch},{t.mean_us:.1f},"
+              f"tok_per_s={tokens / t.mean_s:.0f}")
+
+
+if __name__ == "__main__":
+    main()

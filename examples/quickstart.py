@@ -1,0 +1,60 @@
+"""Quickstart: the paper's hardware-agnostic host-code template (Table V).
+
+The same host code — claim by alias, send a compute-object, receive the
+result — runs all eight HPC subroutines with zero hardware-specific logic.
+The runtime agent routes each invocation to the best registered kernel
+(pallas > xla > jnp fail-safe) based on Table-II attributes and feasibility.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (MPIX_Claim, MPIX_Finalize, MPIX_Initialize, MPIX_Recv,
+                        MPIX_Send, halo_session)
+from repro.kernels.spmm import dense_to_bell, random_block_sparse
+
+
+def main():
+    MPIX_Initialize()                                   # start the session
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    n = 512
+    a = jax.random.normal(k1, (n, n), jnp.float32)
+    b = jax.random.normal(k2, (n, n), jnp.float32) + 3.0
+    x = jax.random.normal(k1, (n,), jnp.float32)
+    a_dd = a + n * jnp.eye(n)                           # diagonally dominant
+    sp = random_block_sparse(k2, n, n, 64, 128, 0.25)
+    vals, idx = dense_to_bell(sp, 64, 128)
+    sig = jax.random.normal(k1, (8192,), jnp.float32)
+    taps = jax.random.normal(k2, (17,), jnp.float32)
+
+    jobs = {
+        "MMM": (a, b),
+        "EWMM": (a, b),
+        "EWMD": (a, b),
+        "MVM": (a, x),
+        "VDP": (x, x),
+        "JS": (a_dd, jnp.zeros(n), x),
+        "1DCONV": (sig, taps),
+        "SMMM": (vals, idx, b),
+    }
+
+    # ---- the paper's template: unified control flow for every kernel ------
+    for alias, args in jobs.items():
+        cr = MPIX_Claim(alias)                          # claim a child rank
+        MPIX_Send(args, cr)                             # marshal compute-obj
+        out = MPIX_Recv(cr)                             # retrieve result
+        out = jax.tree.leaves(out)[0]
+        print(f"{alias:8s} -> shape {np.shape(out)} "
+              f"finite={bool(jnp.all(jnp.isfinite(jnp.asarray(out))))}")
+
+    t1 = halo_session().t1_seconds_per_call
+    print(f"\nHALO overhead T1 per call: {t1 * 1e6:.1f} us "
+          f"(paper: ~1.9 us on ZeroMQ IPC)")
+    MPIX_Finalize()
+
+
+if __name__ == "__main__":
+    main()

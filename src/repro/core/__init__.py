@@ -1,0 +1,36 @@
+"""HALO 1.0 core: hardware-agnostic accelerator orchestration in JAX.
+
+The paper's contribution, as a composable library:
+
+* :mod:`repro.core.compute_object` — unified compute-object (C2MPI §IV-D)
+* :mod:`repro.core.registry`       — kernel attributes + selection (§IV-C)
+* :mod:`repro.core.manifest`       — unified configuration file (Table I)
+* :mod:`repro.core.agents`         — runtime + virtualization agents (§V)
+* :mod:`repro.core.c2mpi`          — MPIX_* application interface (§IV)
+* :mod:`repro.core.portability`    — performance-portability metrics (§VI)
+"""
+from .compute_object import BufferHandle, ComputeObject, as_compute_object
+from .registry import (GLOBAL_REGISTRY, KernelAttributes, KernelRecord,
+                       KernelRegistry, SelectionError, PLATFORM_PREFERENCE)
+from .manifest import FuncEntry, HostEntry, Manifest, default_manifest
+from .agents import (ChildRank, JnpAgent, PallasAgent, RuntimeAgent,
+                     ShardedAgent, VirtualizationAgent, XlaAgent)
+from .c2mpi import (MPIX_Claim, MPIX_CreateBuffer, MPIX_Finalize, MPIX_Free,
+                    MPIX_Initialize, MPIX_Recv, MPIX_Send, MPIX_SendFwd,
+                    halo_dispatch, halo_session)
+from .portability import (KernelReport, Timing, overhead_ratio,
+                          performance_penalty, portability_score, time_fn)
+
+__all__ = [
+    "BufferHandle", "ComputeObject", "as_compute_object",
+    "GLOBAL_REGISTRY", "KernelAttributes", "KernelRecord", "KernelRegistry",
+    "SelectionError", "PLATFORM_PREFERENCE",
+    "FuncEntry", "HostEntry", "Manifest", "default_manifest",
+    "ChildRank", "JnpAgent", "PallasAgent", "RuntimeAgent", "ShardedAgent",
+    "VirtualizationAgent", "XlaAgent",
+    "MPIX_Claim", "MPIX_CreateBuffer", "MPIX_Finalize", "MPIX_Free",
+    "MPIX_Initialize", "MPIX_Recv", "MPIX_Send", "MPIX_SendFwd",
+    "halo_dispatch", "halo_session",
+    "KernelReport", "Timing", "overhead_ratio", "performance_penalty",
+    "portability_score", "time_fn",
+]

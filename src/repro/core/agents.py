@@ -1,0 +1,435 @@
+"""HALO 1.0 multi-agent system: runtime agent + virtualization agents (§V).
+
+Topology is the paper's star pattern: one :class:`RuntimeAgent` per
+application acts as the crossbar between application parent ranks (PRs) and a
+set of :class:`VirtualizationAgent` peers, each encapsulating one execution
+substrate:
+
+* ``jnp``     — pure-jnp reference implementations (the fail-safe path),
+* ``xla``     — XLA-optimized implementations (jit-compiled lax/jnp),
+* ``pallas``  — Pallas TPU kernels (MXU/VMEM-tiled; interpreted on CPU),
+* ``sharded`` — pjit/shard_map distributed implementations over a mesh.
+
+TPU adaptation (see DESIGN.md §2): agents are in-process modules rather than
+forked ZeroMQ peers — a TPU host is single-process — but the agent contract
+(asynchronous execute, three-stage pipeline, metrics, plug-and-play
+registration) is preserved.  Buffers stay device-resident between invocations
+(JAX async dispatch), which is what makes the runtime-agent overhead invariant
+to working-set size, the paper's key overhead property.
+
+Two dispatch paths exist:
+
+* :meth:`RuntimeAgent.dispatch` — **pure, trace-safe**.  Used *inside* jitted
+  model code; selection happens at trace time so the chosen kernel is fused
+  into the step program (zero per-step overhead).
+* ``claim/send/recv/send_fwd`` — the full C2MPI DRPC surface with child ranks,
+  tagged FIFO mailboxes, stateful internal buffers, and fail-safe fallback.
+  Used by host-level orchestration (examples, serving loops, benchmarks).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import logging
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .compute_object import BufferHandle, ComputeObject, as_compute_object
+from .manifest import Manifest, default_manifest
+from .registry import (GLOBAL_REGISTRY, KernelRecord, KernelRegistry,
+                       SelectionError)
+
+log = logging.getLogger("repro.halo.agents")
+
+
+# ---------------------------------------------------------------------------
+# Virtualization agents
+# ---------------------------------------------------------------------------
+class VirtualizationAgent:
+    """Encapsulates one execution substrate behind the C2MPI accelerator
+    interface.  The paper's three-stage pipeline (network manager → system
+    services → device services) maps to ``_ingest`` → ``_services`` →
+    ``_device_execute``."""
+
+    platform: str = "jnp"
+
+    def __init__(self, name: Optional[str] = None):
+        self.name = name or f"{self.platform}-agent"
+        self.metrics = collections.Counter()
+        self._lock = threading.Lock()
+
+    # stage 1: network manager — validate & normalize the request
+    def _ingest(self, record: KernelRecord, args: Tuple, kwargs: Dict):
+        return args, kwargs
+
+    # stage 2: system services — requests resolvable without hardware
+    def _services(self, record: KernelRecord, args: Tuple):
+        with self._lock:
+            self.metrics["requests"] += 1
+            for a in args:
+                if hasattr(a, "nbytes"):
+                    self.metrics["bytes_in"] += int(a.nbytes)
+
+    # stage 3: device services — vendor logic / device manager
+    def _device_execute(self, record: KernelRecord, args: Tuple, kwargs: Dict):
+        return record.fn(*args, **kwargs)
+
+    def available(self) -> bool:
+        return True
+
+    def execute(self, record: KernelRecord, *args, **kwargs):
+        args, kwargs = self._ingest(record, args, kwargs)
+        self._services(record, args)
+        out = self._device_execute(record, args, kwargs)
+        with self._lock:
+            self.metrics["completed"] += 1
+        return out
+
+
+class JnpAgent(VirtualizationAgent):
+    """Reference/fail-safe substrate: executes the pure-jnp oracle as-is."""
+    platform = "jnp"
+
+
+class XlaAgent(VirtualizationAgent):
+    """XLA substrate: jit-compiles implementations, caching per record."""
+    platform = "xla"
+
+    def __init__(self, name: Optional[str] = None):
+        super().__init__(name)
+        self._jit_cache: Dict[int, Callable] = {}
+
+    def _device_execute(self, record: KernelRecord, args, kwargs):
+        key = id(record)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = jax.jit(record.fn)
+            self._jit_cache[key] = fn
+        return fn(*args, **kwargs)
+
+
+class PallasAgent(XlaAgent):
+    """Pallas-TPU substrate.  Kernel wrappers (kernels/*/ops.py) select
+    ``interpret=True`` automatically off-TPU, so the same records serve the
+    TPU target and the CPU validation environment."""
+    platform = "pallas"
+
+    def available(self) -> bool:
+        return True  # interpret fallback keeps the agent usable everywhere
+
+
+class ShardedAgent(XlaAgent):
+    """Distributed substrate: executes records under a device mesh so pjit /
+    shard_map collectives partition across it."""
+    platform = "sharded"
+
+    def __init__(self, mesh=None, name: Optional[str] = None):
+        super().__init__(name)
+        self.mesh = mesh
+
+    def available(self) -> bool:
+        return self.mesh is not None
+
+    def _device_execute(self, record: KernelRecord, args, kwargs):
+        if self.mesh is None:
+            raise RuntimeError("ShardedAgent has no mesh attached")
+        with jax.sharding.use_mesh(self.mesh):
+            return super()._device_execute(record, args, kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Child ranks
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ChildRank:
+    """Opaque virtual handle to a claimed system resource (§IV-C).
+
+    A CR is not tied to a physical resource: the runtime agent may route each
+    invocation to any compatible record/agent (it has "full authority to move
+    both functionality and allocation").  A CR can also represent a *pipeline*
+    (series of dependent kernel invocations)."""
+
+    uid: int
+    alias: str                       # or tuple of aliases when pipeline
+    pipeline: Tuple[str, ...] = ()
+    overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    failsafe: Optional[Callable] = None
+    # tag -> FIFO of pending results (paper: repeated recv w/ same tag = FIFO)
+    mailboxes: Dict[int, collections.deque] = dataclasses.field(
+        default_factory=lambda: collections.defaultdict(collections.deque))
+    buffers: Dict[str, BufferHandle] = dataclasses.field(default_factory=dict)
+    freed: bool = False
+    # claim-time resolution cache: arg signature -> selected records
+    resolution_cache: Dict[Any, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def stateful(self) -> bool:
+        return bool(self.buffers)
+
+
+# ---------------------------------------------------------------------------
+# Runtime agent
+# ---------------------------------------------------------------------------
+class RuntimeAgent:
+    """The C2MPI crossbar: implements both the application interface (claim/
+    send/recv/…) and the accelerator interface (agent registration, buffer
+    table, manifests).  One runtime agent exists per application in progress
+    (multi-tenancy = multiple RuntimeAgents)."""
+
+    def __init__(self,
+                 registry: Optional[KernelRegistry] = None,
+                 manifest: Optional[Manifest] = None,
+                 agents: Optional[Sequence[VirtualizationAgent]] = None,
+                 mesh=None):
+        self.registry = registry or GLOBAL_REGISTRY
+        self.manifest = manifest or default_manifest()
+        if agents is None:
+            agents = [JnpAgent(), XlaAgent(), PallasAgent(), ShardedAgent(mesh)]
+        self.agents: Dict[str, VirtualizationAgent] = {a.platform: a for a in agents}
+        self._cr_counter = 0
+        self._crs: Dict[int, ChildRank] = {}
+        self._buffer_table: Dict[int, Any] = {}      # BufferHandle.uid -> array
+        self._lock = threading.RLock()
+        self.finalized = False
+        # T1 instrumentation: host-side dispatch overhead accounting
+        self._t1_seconds = 0.0
+        self._t1_calls = 0
+
+    # -- agent interoperability (plug-and-play, §V-A5) -------------------------
+    def attach_agent(self, agent: VirtualizationAgent) -> None:
+        with self._lock:
+            self.agents[agent.platform] = agent
+
+    def detach_agent(self, platform: str) -> Optional[VirtualizationAgent]:
+        with self._lock:
+            return self.agents.pop(platform, None)
+
+    def attach_mesh(self, mesh) -> None:
+        a = self.agents.get("sharded")
+        if isinstance(a, ShardedAgent):
+            a.mesh = mesh
+        else:
+            self.attach_agent(ShardedAgent(mesh))
+
+    def _allowed_platforms(self) -> List[str]:
+        return [p for p, a in self.agents.items() if a.available()]
+
+    def _platform_preference(self) -> Optional[Sequence[str]]:
+        """Hardware recommendation strategy (paper §IV-C, platform_list).
+
+        The manifest order is the TPU-target order (pallas first).  Off-TPU,
+        the pallas substrate runs in interpret mode — a validation vehicle,
+        not a performance one — so the runtime agent demotes it below xla,
+        exactly the per-device kernel-selection behavior that gives HALO its
+        Φ=1.0 portability score."""
+        pref = self.manifest.platform_preference()
+        if pref is None:
+            return None
+        if jax.default_backend() != "tpu" and "pallas" in pref and "xla" in pref:
+            pref = [p for p in pref if p != "pallas"]
+            pref.insert(pref.index("xla") + 1, "pallas")
+        return tuple(pref)
+
+    # -- resource allocation (§IV-F) -------------------------------------------
+    def claim(self, alias, failsafe: Optional[Callable] = None,
+              overrides: Optional[Dict[str, Any]] = None) -> ChildRank:
+        """MPIX_Claim: allocate a CR for ``alias`` (str) or a pipeline (list).
+
+        Config-file overrides for the alias (Table I func_list entries) merge
+        under explicit ``overrides`` (the MPI_Info-style runtime override)."""
+        self._check_live()
+        pipeline: Tuple[str, ...] = ()
+        if isinstance(alias, (tuple, list)):
+            pipeline = tuple(alias)
+            alias = pipeline[0]
+        merged: Dict[str, Any] = {}
+        entry = self.manifest.func(alias)
+        if entry is not None:
+            merged.update(entry.overrides)
+        if overrides:
+            merged.update(overrides)
+        with self._lock:
+            self._cr_counter += 1
+            cr = ChildRank(uid=self._cr_counter, alias=alias, pipeline=pipeline,
+                           overrides=merged, failsafe=failsafe)
+            self._crs[cr.uid] = cr
+        return cr
+
+    def create_buffer(self, cr: Optional[ChildRank], shape, dtype,
+                      init=None, name: Optional[str] = None) -> BufferHandle:
+        """MPIX_CreateBuffer: allocate an internal (framework-managed) buffer.
+
+        Passing ``cr=None`` (paper: CR handle 0) associates the buffer with
+        the framework itself; otherwise it becomes CR state, turning the CR's
+        invocations stateful."""
+        self._check_live()
+        handle = BufferHandle.allocate(shape, dtype,
+                                       owner_rank=0 if cr is None else cr.uid)
+        import jax.numpy as jnp
+        arr = jnp.zeros(shape, dtype) if init is None else jnp.asarray(init, dtype)
+        with self._lock:
+            self._buffer_table[handle.uid] = arr
+            if cr is not None:
+                cr.buffers[name or f"buf{handle.uid}"] = handle
+        return handle
+
+    def read_buffer(self, handle: BufferHandle):
+        return self._buffer_table[handle.uid]
+
+    def free(self, cr: ChildRank) -> None:
+        """MPIX_Free: deallocate the CR and its internal buffers."""
+        with self._lock:
+            for h in cr.buffers.values():
+                self._buffer_table.pop(h.uid, None)
+            cr.buffers.clear()
+            cr.mailboxes.clear()
+            cr.freed = True
+            self._crs.pop(cr.uid, None)
+
+    def finalize(self) -> None:
+        """MPIX_Finalize: free all outstanding resources."""
+        with self._lock:
+            for cr in list(self._crs.values()):
+                self.free(cr)
+            self._buffer_table.clear()
+            self.finalized = True
+
+    def _check_live(self):
+        if self.finalized:
+            raise RuntimeError("runtime agent already finalized")
+
+    # -- selection + execution --------------------------------------------------
+    def _select(self, alias: str, args: Tuple,
+                overrides: Optional[Dict[str, Any]] = None) -> KernelRecord:
+        overrides = overrides or {}
+        allowed = overrides.get("allowed_platforms", self._allowed_platforms())
+        pref = overrides.get("platform_preference", self._platform_preference())
+        return self.registry.select(alias, *args, allowed_platforms=allowed,
+                                    platform_preference=pref)
+
+    def dispatch(self, alias: str, *args, overrides: Optional[Dict] = None,
+                 **kwargs):
+        """Pure trace-safe dispatch: select at trace time, inline the kernel.
+
+        This is the hot path used by hardware-agnostic model code.  No
+        mailboxes, no buffer table, no host synchronization — the selected
+        record's fn is traced straight into the enclosing jit program."""
+        t0 = time.perf_counter()
+        try:
+            record = self._select(alias, args, overrides)
+        except SelectionError:
+            if overrides and overrides.get("failsafe") is not None:
+                return overrides["failsafe"](*args, **kwargs)
+            raise
+        finally:
+            self._t1_seconds += time.perf_counter() - t0
+            self._t1_calls += 1
+        return record.fn(*args, **kwargs)
+
+    def _execute_record(self, record: KernelRecord, cr: ChildRank,
+                        args: Tuple, kwargs: Dict):
+        agent = self.agents.get(record.platform)
+        if agent is None or not agent.available():
+            fs = self.registry.failsafe(record.alias)
+            if fs is None:
+                raise SelectionError(
+                    f"no agent for platform {record.platform!r} and no fail-safe")
+            record, agent = fs, self.agents["jnp"]
+        if cr.stateful:
+            state = {n: self._buffer_table[h.uid] for n, h in cr.buffers.items()}
+            out, new_state = agent.execute(record, *args, state=state, **kwargs)
+            with self._lock:
+                for n, h in cr.buffers.items():
+                    if n in new_state:
+                        self._buffer_table[h.uid] = new_state[n]
+            return out
+        return agent.execute(record, *args, **kwargs)
+
+    def _run_cr(self, cr: ChildRank, payload, kwargs: Optional[Dict] = None):
+        co = as_compute_object(payload)
+        args = tuple(co.inputs[k] for k in sorted(co.inputs))
+        kwargs = dict(kwargs or {})
+        kwargs.update(co.meta)
+        t0 = time.perf_counter()
+        aliases = cr.pipeline or (cr.alias,)
+        # claim-style resolution caching: a CR re-resolves only when the
+        # abstract argument signature changes (paper: selection happens at
+        # claim time from the config; runtime overrides may re-resolve)
+        sig = tuple((getattr(a, "shape", None), str(getattr(a, "dtype", "")))
+                    for a in args)
+        records = cr.resolution_cache.get(sig)
+        if records is None:
+            try:
+                records = [self._select(a, args, cr.overrides)
+                           for a in aliases]
+            except SelectionError:
+                self._t1_seconds += time.perf_counter() - t0
+                self._t1_calls += 1
+                if cr.failsafe is not None:
+                    log.warning("CR %d (%s): fail-safe callback engaged",
+                                cr.uid, cr.alias)
+                    return cr.failsafe(*args, **kwargs)
+                raise
+            cr.resolution_cache[sig] = records
+        self._t1_seconds += time.perf_counter() - t0
+        self._t1_calls += 1
+        out = self._execute_record(records[0], cr, args, kwargs)
+        # Pipeline CRs: series of dependent kernel invocations (§IV-C).  The
+        # intermediate never returns to the host — the C2MPI SendFwd semantics.
+        for rec in records[1:]:
+            nxt = out if isinstance(out, tuple) else (out,)
+            out = self._execute_record(rec, cr, nxt, {})
+        return out
+
+    # -- data-movement interface (§IV-E) ----------------------------------------
+    def send(self, payload, cr: ChildRank, tag: int = 0, **kwargs) -> None:
+        """MPIX_Send: marshal a compute-object to a CR.  Asynchronous: JAX
+        dispatch returns immediately; the (future) result is queued on the
+        CR's mailbox for this tag, to be fetched by ``recv``."""
+        self._check_live()
+        if cr.freed:
+            raise RuntimeError(f"CR {cr.uid} was freed")
+        out = self._run_cr(cr, payload, kwargs)
+        with self._lock:
+            cr.mailboxes[tag].append(out)
+
+    def recv(self, cr: ChildRank, tag: int = 0, block: bool = True):
+        """MPIX_Recv: retrieve the oldest pending result for (cr, tag)."""
+        self._check_live()
+        with self._lock:
+            box = cr.mailboxes[tag]
+            if not box:
+                raise RuntimeError(
+                    f"MPIX_Recv on empty mailbox (cr={cr.uid}, tag={tag})")
+            out = box.popleft()
+        if block:
+            out = jax.block_until_ready(out)
+        return out
+
+    def send_fwd(self, payload, cr: ChildRank, dest: ChildRank,
+                 tag: int = 0, **kwargs) -> None:
+        """MPIX_SendFwd: like send, but the result is forwarded to ``dest``'s
+        mailbox instead of returning to the source PR.  Device-resident end to
+        end (the unified-memory adaptation — only references move)."""
+        self._check_live()
+        out = self._run_cr(cr, payload, kwargs)
+        with self._lock:
+            dest.mailboxes[tag].append(out)
+
+    def invoke(self, cr: ChildRank, *args, tag: int = 0, **kwargs):
+        """Synchronous convenience: send + recv in one call."""
+        self.send(tuple(args), cr, tag=tag, **kwargs)
+        return self.recv(cr, tag=tag)
+
+    # -- overhead instrumentation (paper T1) -------------------------------------
+    @property
+    def t1_seconds_per_call(self) -> float:
+        return self._t1_seconds / max(1, self._t1_calls)
+
+    def reset_t1(self) -> None:
+        self._t1_seconds = 0.0
+        self._t1_calls = 0

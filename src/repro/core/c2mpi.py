@@ -1,0 +1,106 @@
+"""C2MPI v1.0 application-interface surface (paper §IV, Tables III–V).
+
+Thin, MPI-flavored functions over a process-global :class:`RuntimeAgent`
+session, so host applications read exactly like the paper's template:
+
+    MPIX_Initialize()
+    cr = MPIX_Claim("MMM")
+    MPIX_Send((a, b), cr)
+    out = MPIX_Recv(cr)
+    MPIX_Finalize()
+
+The pythonic object API (``halo_session().invoke(...)``) and the trace-safe
+``halo_dispatch`` used inside jitted model code sit on the same runtime agent.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Optional
+
+from .agents import ChildRank, RuntimeAgent
+from .compute_object import BufferHandle, ComputeObject, as_compute_object
+from .manifest import Manifest, default_manifest
+from .registry import GLOBAL_REGISTRY, KernelRegistry
+
+_session_lock = threading.RLock()
+_session: Optional[RuntimeAgent] = None
+
+
+# ---------------------------------------------------------------------------
+# Session management
+# ---------------------------------------------------------------------------
+def MPIX_Initialize(manifest: Optional[Manifest] = None,
+                    registry: Optional[KernelRegistry] = None,
+                    mesh=None) -> RuntimeAgent:
+    """Create (or replace) the process-global HALO session."""
+    global _session
+    from .. import kernels  # ensure built-in kernel records are registered
+    kernels.register_all()
+    with _session_lock:
+        _session = RuntimeAgent(registry=registry or GLOBAL_REGISTRY,
+                                manifest=manifest or default_manifest(),
+                                mesh=mesh)
+    return _session
+
+
+def halo_session() -> RuntimeAgent:
+    """The live session; auto-initializes with defaults on first touch."""
+    global _session
+    with _session_lock:
+        if _session is None or _session.finalized:
+            return MPIX_Initialize()
+        return _session
+
+
+def MPIX_Finalize() -> None:
+    global _session
+    with _session_lock:
+        if _session is not None:
+            _session.finalize()
+        _session = None
+
+
+# ---------------------------------------------------------------------------
+# Resource allocation / deallocation (Table IV)
+# ---------------------------------------------------------------------------
+def MPIX_Claim(func_alias, failsafe_func: Optional[Callable] = None,
+               overrides: Optional[Dict[str, Any]] = None) -> ChildRank:
+    return halo_session().claim(func_alias, failsafe=failsafe_func,
+                                overrides=overrides)
+
+
+def MPIX_CreateBuffer(child_rank: Optional[ChildRank], shape, dtype,
+                      init=None, name: Optional[str] = None) -> BufferHandle:
+    return halo_session().create_buffer(child_rank, shape, dtype,
+                                        init=init, name=name)
+
+
+def MPIX_Free(child_rank: ChildRank) -> None:
+    halo_session().free(child_rank)
+
+
+# ---------------------------------------------------------------------------
+# Data movement (Table III / Figure 3)
+# ---------------------------------------------------------------------------
+def MPIX_Send(payload, child_rank: ChildRank, tag: int = 0, **kwargs) -> None:
+    halo_session().send(payload, child_rank, tag=tag, **kwargs)
+
+
+def MPIX_Recv(child_rank: ChildRank, tag: int = 0, block: bool = True):
+    return halo_session().recv(child_rank, tag=tag, block=block)
+
+
+def MPIX_SendFwd(payload, child_rank: ChildRank, dest: ChildRank,
+                 tag: int = 0, **kwargs) -> None:
+    halo_session().send_fwd(payload, child_rank, dest, tag=tag, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Trace-safe dispatch for hardware-agnostic model code
+# ---------------------------------------------------------------------------
+def halo_dispatch(alias: str, *args, overrides: Optional[Dict] = None, **kwargs):
+    """Select-and-inline a kernel inside a jitted region (zero step overhead).
+
+    This is the DME-facing call used throughout ``repro.models``: model code
+    names *what* to compute (the alias), never *how* or *where*."""
+    return halo_session().dispatch(alias, *args, overrides=overrides, **kwargs)

@@ -1,0 +1,115 @@
+"""Unified compute-object (C2MPI §IV-D).
+
+The compute-object is the single vehicle for marshaling all arguments of a
+distributed remote procedure call (DRPC) between parent ranks (PRs) and child
+ranks (CRs).  It generalizes the paper's ``MPIX_ComputeObj`` reflective
+structure into a JAX pytree so it can cross jit boundaries unchanged.
+
+Two buffer classes exist, mirroring the paper's enumerations:
+
+* **external** buffers — owned by the application PR (ordinary arrays, passed
+  in ``inputs``).  Compute-objects carrying only external buffers describe
+  *stateless* RPC invocations.
+* **internal** buffers — owned by the HALO framework and addressed by opaque
+  :class:`BufferHandle`.  Their presence makes the invocation *stateful*; the
+  runtime agent resolves handles to device-resident arrays at dispatch time
+  (the unified-memory model: only handles travel, never copies).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Optional
+
+import jax
+
+_handle_counter = itertools.count(1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferHandle:
+    """Opaque handle to a framework-managed (internal) buffer.
+
+    Mirrors the handle returned by ``MPIX_CreateBuffer``.  The handle is a
+    plain integer id plus static metadata; the backing array lives in the
+    runtime agent's buffer table and never crosses process/host boundaries —
+    the TPU adaptation of HALO's pass-pointers-through-shared-memory design.
+    """
+
+    uid: int
+    shape: tuple
+    dtype: Any
+    owner_rank: int  # CR uid that owns the state (0 = framework-global)
+
+    @staticmethod
+    def allocate(shape, dtype, owner_rank: int = 0) -> "BufferHandle":
+        return BufferHandle(next(_handle_counter), tuple(shape), dtype, owner_rank)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ComputeObject:
+    """Unified compute-object: named external inputs + internal buffer refs.
+
+    ``inputs`` are pytree leaves (traced through jit); ``buffers`` and ``meta``
+    are static aux data.  ``tag`` implements the C2MPI out-of-order retrieval
+    semantics (repeated sends with one tag behave FIFO per tag).
+    """
+
+    inputs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    buffers: Dict[str, BufferHandle] = dataclasses.field(default_factory=dict)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    tag: int = 0
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.inputs))
+        leaves = tuple(self.inputs[n] for n in names)
+        aux = (names, tuple(sorted(self.buffers.items())),
+               tuple(sorted(self.meta.items())), self.tag)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        names, buffers, meta, tag = aux
+        return cls(inputs=dict(zip(names, leaves)), buffers=dict(buffers),
+                   meta=dict(meta), tag=tag)
+
+    # -- convenience --------------------------------------------------------
+    @property
+    def stateful(self) -> bool:
+        """Stateful RPC = at least one internal buffer attached (§IV-D)."""
+        return bool(self.buffers)
+
+    def with_input(self, name: str, value) -> "ComputeObject":
+        new = dict(self.inputs)
+        new[name] = value
+        return dataclasses.replace(self, inputs=new)
+
+    def with_buffer(self, name: str, handle: BufferHandle) -> "ComputeObject":
+        new = dict(self.buffers)
+        new[name] = handle
+        return dataclasses.replace(self, buffers=new)
+
+    def working_set_bytes(self) -> int:
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self.inputs):
+            if hasattr(leaf, "nbytes"):
+                total += leaf.nbytes
+        return total
+
+
+def as_compute_object(obj, tag: int = 0) -> ComputeObject:
+    """Coerce plain arrays / dicts / tuples into a compute-object.
+
+    Implements the paper's *single-input optimization*: simple payloads may be
+    passed as one would with traditional MPI, skipping explicit encapsulation.
+    """
+    if isinstance(obj, ComputeObject):
+        return obj
+    if isinstance(obj, dict):
+        return ComputeObject(inputs=dict(obj), tag=tag)
+    if isinstance(obj, (tuple, list)):
+        return ComputeObject(inputs={f"arg{i:03d}": v for i, v in enumerate(obj)},
+                             tag=tag)
+    return ComputeObject(inputs={"arg000": obj}, tag=tag)

@@ -1,0 +1,200 @@
+"""Kernel registry + attribute-based selection (C2MPI §IV-C, Table II).
+
+Every hardware-specific kernel implementation is registered as a
+:class:`KernelRecord` carrying the paper's kernel attributes (VID/PID/SS_VID/
+SS_PID/SW_VID/SW_PID/SW_FID/SW_VERID).  The registry is the TPU adaptation of
+HALO's *accelerator multi-source kernel repository*: instead of dynamically
+linked ``.ha`` bundles, implementations are Python callables whose metadata is
+indexed for the resource-selection process.
+
+Selection semantics (used by the runtime agent when a CR is claimed/invoked):
+
+1. filter records by alias (or ``sw_fid`` override),
+2. filter by the ``supports(*abstract_args)`` predicate (shape/dtype/platform
+   feasibility — evaluated against trace-time abstract values),
+3. filter by platform compatibility with the executing agent set,
+4. order by (strategy-declared platform preference, record priority,
+   semantic version), round-robin among exact ties,
+5. if nothing survives: fall back to the alias's **fail-safe** record (the
+   pure-jnp reference oracle) to preserve functional portability (§IV-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import logging
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+log = logging.getLogger("repro.halo.registry")
+
+# Platform ids, ordered by default performance preference on the TPU target.
+PLATFORM_PREFERENCE: Tuple[str, ...] = ("sharded", "pallas", "xla", "jnp")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelAttributes:
+    """Table II attributes.  ``"*"`` means wildcard / any."""
+
+    vid: str = "*"          # HW vendor id          e.g. "google"
+    pid: str = "*"          # HW product id         e.g. "tpu-v5e"
+    ss_vid: str = "*"       # HW sub-system vendor id
+    ss_pid: str = "*"       # HW sub-system product id
+    sw_vid: str = "repro"   # SW vendor id
+    sw_pid: str = "halo"    # SW product id
+    sw_fid: str = ""        # SW function id — the stable lookup key
+    sw_verid: str = "1.0.0" # SW version id
+
+    def matches(self, other: "KernelAttributes") -> bool:
+        for f in ("vid", "pid", "ss_vid", "ss_pid", "sw_vid", "sw_pid"):
+            a, b = getattr(self, f), getattr(other, f)
+            if a != "*" and b != "*" and a != b:
+                return False
+        return True
+
+    def version_tuple(self) -> Tuple[int, ...]:
+        try:
+            return tuple(int(x) for x in self.sw_verid.split("."))
+        except ValueError:
+            return (0,)
+
+
+@dataclasses.dataclass
+class KernelRecord:
+    """One hardware-specific implementation of a functional abstraction."""
+
+    alias: str                       # func_alias, e.g. "MMM"
+    fn: Callable                     # the implementation (trace-safe)
+    platform: str                    # "jnp" | "xla" | "pallas" | "sharded"
+    attrs: KernelAttributes = dataclasses.field(default_factory=KernelAttributes)
+    priority: int = 0                # higher wins within a platform
+    supports: Optional[Callable[..., bool]] = None   # predicate over abstract args
+    cost_model: Optional[Callable[..., float]] = None  # est. seconds for args
+    is_failsafe: bool = False        # reference oracle for the alias
+    doc: str = ""
+
+    def feasible(self, *args, **kwargs) -> bool:
+        if self.supports is None:
+            return True
+        try:
+            return bool(self.supports(*args, **kwargs))
+        except Exception:  # an over-strict predicate must never break dispatch
+            log.debug("supports() raised for %s/%s; treating as infeasible",
+                      self.alias, self.platform, exc_info=True)
+            return False
+
+
+class SelectionError(KeyError):
+    pass
+
+
+class KernelRegistry:
+    """Open-ended, thread-safe multi-source kernel repository."""
+
+    def __init__(self):
+        self._records: Dict[str, List[KernelRecord]] = {}
+        self._fid_index: Dict[str, str] = {}   # sw_fid -> alias
+        self._rr: Dict[str, itertools.count] = {}
+        self._lock = threading.RLock()
+
+    # -- registration -------------------------------------------------------
+    def register(self, record: KernelRecord) -> KernelRecord:
+        with self._lock:
+            recs = self._records.setdefault(record.alias, [])
+            recs.append(record)
+            if record.attrs.sw_fid:
+                self._fid_index[record.attrs.sw_fid] = record.alias
+            self._rr.setdefault(record.alias, itertools.count())
+        log.debug("registered %s [%s] prio=%d failsafe=%s",
+                  record.alias, record.platform, record.priority, record.is_failsafe)
+        return record
+
+    def register_fn(self, alias: str, platform: str, *, priority: int = 0,
+                    attrs: Optional[KernelAttributes] = None,
+                    supports=None, cost_model=None, is_failsafe: bool = False,
+                    doc: str = ""):
+        """Decorator form: ``@registry.register_fn("MMM", "pallas")``."""
+        def deco(fn):
+            self.register(KernelRecord(
+                alias=alias, fn=fn, platform=platform,
+                attrs=attrs or KernelAttributes(sw_fid=alias),
+                priority=priority, supports=supports, cost_model=cost_model,
+                is_failsafe=is_failsafe, doc=doc or (fn.__doc__ or "")))
+            return fn
+        return deco
+
+    def deregister(self, alias: str, platform: Optional[str] = None) -> int:
+        """Plug-and-play: agents may disconnect without affecting host code."""
+        with self._lock:
+            recs = self._records.get(alias, [])
+            keep = [r for r in recs if platform is not None and r.platform != platform]
+            removed = len(recs) - len(keep)
+            if keep:
+                self._records[alias] = keep
+            else:
+                self._records.pop(alias, None)
+            return removed
+
+    # -- lookup --------------------------------------------------------------
+    def aliases(self) -> List[str]:
+        return sorted(self._records)
+
+    def records(self, alias: str) -> List[KernelRecord]:
+        return list(self._records.get(alias, ()))
+
+    def resolve_fid(self, sw_fid: str) -> Optional[str]:
+        return self._fid_index.get(sw_fid)
+
+    def failsafe(self, alias: str) -> Optional[KernelRecord]:
+        for r in self._records.get(alias, ()):
+            if r.is_failsafe:
+                return r
+        return None
+
+    # -- the selection process (§IV-C) ----------------------------------------
+    def select(self, alias: str, *args,
+               allowed_platforms: Sequence[str] = PLATFORM_PREFERENCE,
+               platform_preference: Optional[Sequence[str]] = None,
+               required_attrs: Optional[KernelAttributes] = None,
+               **kwargs) -> KernelRecord:
+        if alias not in self._records:
+            mapped = self.resolve_fid(alias)
+            if mapped is None:
+                raise SelectionError(f"unknown kernel alias/sw_fid: {alias!r}")
+            alias = mapped
+        pref = tuple(platform_preference or PLATFORM_PREFERENCE)
+        allowed = set(allowed_platforms)
+        candidates = [
+            r for r in self._records[alias]
+            if r.platform in allowed
+            and (required_attrs is None or r.attrs.matches(required_attrs))
+            and r.feasible(*args, **kwargs)
+        ]
+        if not candidates:
+            fs = self.failsafe(alias)
+            if fs is not None:
+                log.warning("alias %r: no feasible candidate; fail-safe mode", alias)
+                return fs
+            raise SelectionError(
+                f"alias {alias!r}: no feasible candidate and no fail-safe registered")
+
+        def rank(r: KernelRecord):
+            try:
+                p = pref.index(r.platform)
+            except ValueError:
+                p = len(pref)
+            # lower tuple = better
+            return (p, -r.priority, tuple(-v for v in r.attrs.version_tuple()))
+
+        best = min(rank(r) for r in candidates)
+        ties = [r for r in candidates if rank(r) == best]
+        if len(ties) == 1:
+            return ties[0]
+        # round-robin recommendation strategy among exact ties (§V-C)
+        with self._lock:
+            i = next(self._rr[alias]) % len(ties)
+        return ties[i]
+
+
+# A process-global default registry; sessions may also build private ones.
+GLOBAL_REGISTRY = KernelRegistry()

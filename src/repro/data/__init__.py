@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLM, batch_specs, make_batch

@@ -1,0 +1,2 @@
+from .sharding import (MeshContext, ParamSpec, current_context, logical_spec,
+                       mesh_context, named_sharding, shard, ShardingRules)

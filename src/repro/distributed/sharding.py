@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules (MaxText-style) for DP/FSDP/TP/EP/SP.
+
+Model code names *logical* axes ("batch", "fsdp", "tp", "expert", "seq",
+"vocab"); a :class:`ShardingRules` table maps them to physical mesh axes per
+deployment.  ``shard(x, …)`` applies a sharding constraint only when a mesh
+context is active and the dimension is divisible by the mapped axis product —
+so the same model code runs unsharded on CPU tests, on the 256-chip pod, and
+on the 512-chip multi-pod mesh without edits (the HALO property, applied to
+distribution).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis → tuple of mesh axes."""
+    batch: Tuple[str, ...] = ("pod", "data")
+    fsdp: Tuple[str, ...] = ("pod", "data")
+    tp: Tuple[str, ...] = ("model",)
+    expert: Tuple[str, ...] = ("model",)
+    seq: Tuple[str, ...] = ("model",)
+    vocab: Tuple[str, ...] = ("model",)
+    # Megatron-style sequence parallelism for the residual stream between
+    # layers: () = off (baseline), ("model",) = shard the carry's seq dim so
+    # the remat-saved per-layer activation stack shrinks tp-fold.
+    seq_act: Tuple[str, ...] = ()
+
+    def axes_for(self, name: str) -> Tuple[str, ...]:
+        return getattr(self, name)
+
+
+def sp_rules() -> "ShardingRules":
+    """Rules with sequence-parallel residual activations enabled."""
+    return ShardingRules(seq_act=("model",))
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Optional[Mesh]
+    rules: ShardingRules
+
+    def axis_size(self, mesh_axes: Sequence[str]) -> int:
+        if self.mesh is None:
+            return 1
+        size = 1
+        for a in mesh_axes:
+            size *= self.mesh.shape.get(a, 1)
+        return size
+
+
+_tls = threading.local()
+
+
+def current_context() -> MeshContext:
+    ctx = getattr(_tls, "ctx", None)
+    if ctx is None:
+        ctx = MeshContext(mesh=None, rules=ShardingRules())
+    return ctx
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], rules: Optional[ShardingRules] = None):
+    """Activate a mesh + rules for model code in this thread."""
+    prev = getattr(_tls, "ctx", None)
+    # drop rule axes the mesh does not have (e.g. "pod" on single-pod)
+    rules = rules or ShardingRules()
+    if mesh is not None:
+        have = set(mesh.axis_names)
+        rules = ShardingRules(**{
+            f.name: tuple(a for a in getattr(rules, f.name) if a in have)
+            for f in dataclasses.fields(rules)})
+    _tls.ctx = MeshContext(mesh=mesh, rules=rules)
+    try:
+        yield _tls.ctx
+    finally:
+        _tls.ctx = prev
+
+
+def _dim_entry(ctx: MeshContext, logical: Logical, size: int):
+    """Resolve one dim's logical name to a PartitionSpec entry (or None)."""
+    if logical is None:
+        return None
+    names = (logical,) if isinstance(logical, str) else tuple(logical)
+    mesh_axes: Tuple[str, ...] = ()
+    for n in names:
+        mesh_axes += ctx.rules.axes_for(n)
+    if not mesh_axes:
+        return None
+    if size % ctx.axis_size(mesh_axes) != 0:
+        return None          # indivisible → replicate this dim
+    return mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+
+
+def logical_spec(shape: Sequence[int], logical: Sequence[Logical],
+                 ctx: Optional[MeshContext] = None) -> P:
+    ctx = ctx or current_context()
+    assert len(shape) == len(logical), (shape, logical)
+    return P(*(_dim_entry(ctx, l, s) for s, l in zip(shape, logical)))
+
+
+def shard(x: jax.Array, *logical: Logical) -> jax.Array:
+    """Apply a logical sharding constraint (no-op without a mesh context)."""
+    ctx = current_context()
+    if ctx.mesh is None:
+        return x
+    spec = logical_spec(x.shape, logical, ctx)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(shape: Sequence[int], logical: Sequence[Logical],
+                   ctx: Optional[MeshContext] = None) -> Optional[NamedSharding]:
+    ctx = ctx or current_context()
+    if ctx.mesh is None:
+        return None
+    return NamedSharding(ctx.mesh, logical_spec(shape, logical, ctx))
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Planning record for one parameter tensor."""
+    shape: Tuple[int, ...]
+    dtype: Any
+    logical: Tuple[Logical, ...]
+    init_kind: str = "normal"  # normal | ones | zeros | a_log | dt_bias
+
+    def struct(self, ctx: Optional[MeshContext] = None) -> jax.ShapeDtypeStruct:
+        sh = named_sharding(self.shape, self.logical, ctx)
+        if sh is None:
+            return jax.ShapeDtypeStruct(self.shape, self.dtype)
+        return jax.ShapeDtypeStruct(self.shape, self.dtype, sharding=sh)

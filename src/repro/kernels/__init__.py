@@ -1,0 +1,124 @@
+"""HME region: multi-source kernel repository (paper §V-A4).
+
+Each subpackage ships three artifacts per kernel:
+  * ``<name>.py`` — the Pallas TPU kernel (pl.pallas_call + BlockSpec),
+  * ``ops.py``    — the jit'd public wrapper (padding, layout, interpret),
+  * ``ref.py``    — the pure-jnp oracle (the C2MPI fail-safe implementation).
+
+:func:`register_all` publishes every implementation into the HALO registry
+with Table-II attributes, so the runtime agent can resolve aliases to the
+best feasible substrate (pallas > xla > jnp by default) per invocation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.registry import GLOBAL_REGISTRY, KernelAttributes, KernelRecord
+from .common import small_enough_off_tpu
+
+_REGISTERED = False
+
+_TPU_ATTRS = dict(vid="google", pid="tpu-v5e")
+_ANY_ATTRS = dict(vid="*", pid="*")
+
+
+def _floaty(*args, **kw) -> bool:
+    for a in args:
+        dt = getattr(a, "dtype", None)
+        if dt is not None and dt not in (jnp.float32, jnp.bfloat16, jnp.float16):
+            return False
+    return True
+
+
+def _pallas_ok(*args, **kw) -> bool:
+    return _floaty(*args) and small_enough_off_tpu(*args)
+
+
+def _rec(alias, fn, platform, prio, *, failsafe=False, supports=None,
+         cost=None, doc=""):
+    hw = _TPU_ATTRS if platform == "pallas" else _ANY_ATTRS
+    return KernelRecord(
+        alias=alias, fn=fn, platform=platform, priority=prio,
+        attrs=KernelAttributes(sw_fid=f"fid:{alias.lower()}", **hw),
+        supports=supports, cost_model=cost, is_failsafe=failsafe, doc=doc)
+
+
+def register_all(registry=None) -> None:
+    """Idempotently publish all built-in kernels to the registry."""
+    global _REGISTERED
+    registry = registry or GLOBAL_REGISTRY
+    if _REGISTERED and registry is GLOBAL_REGISTRY:
+        return
+
+    from .matmul import mmm, mmm_ref
+    from .matmul.ref import mmm_xla
+    from .ewise import ewmd, ewmd_ref, ewmm, ewmm_ref
+    from .spmm import smmm, smmm_ref
+    from .mvm import mvm, mvm_ref
+    from .vdp import vdp, vdp_ref
+    from .jacobi import jacobi_step, jacobi_step_ref
+    from .conv1d import conv1d, conv1d_ref
+    from .flash_attention import attention_ref, flash_attention
+    from .flash_attention.xla import mea_attention
+    from .rmsnorm import rmsnorm, rmsnorm_ref
+    from .rmsnorm.ref import rmsnorm_xla
+    from .ssd import ssd_chunked, ssd_decode_step, ssd_ref
+    from .moe_ffn import grouped_ffn, grouped_ffn_ref
+
+    def mmm_cost(a, b, **kw):
+        m, k = a.shape
+        n = b.shape[1]
+        return 2.0 * m * n * k / 197e12
+
+    table = [
+        # (alias, ref_fn, xla_fn, pallas_fn, cost)
+        ("MMM", mmm_ref, mmm_xla, mmm, mmm_cost),
+        ("EWMM", ewmm_ref, ewmm_ref, ewmm, None),
+        ("EWMD", ewmd_ref, ewmd_ref, ewmd, None),
+        ("MVM", mvm_ref, mvm_ref, mvm, None),
+        ("VDP", vdp_ref, vdp_ref, vdp, None),
+        ("JS", jacobi_step_ref, jacobi_step_ref, jacobi_step, None),
+        ("1DCONV", conv1d_ref, conv1d_ref, conv1d, None),
+        ("RMSNORM", rmsnorm_ref, rmsnorm_xla, rmsnorm, None),
+        ("FLASH_ATTN", attention_ref, mea_attention, flash_attention, None),
+    ]
+    for alias, ref_fn, xla_fn, pallas_fn, cost in table:
+        registry.register(_rec(alias, ref_fn, "jnp", 0, failsafe=True))
+        registry.register(_rec(alias, xla_fn, "xla", 10, cost=cost))
+        registry.register(_rec(alias, pallas_fn, "pallas", 20,
+                               supports=_pallas_ok, cost=cost))
+
+    # SMMM: the xla variant is a dense-gather einsum over the blocked-ELL
+    # parts; it doubles as the jnp fail-safe (the ref.py oracle reconstructs
+    # a dense operand and is used by tests/benchmarks directly).
+    def smmm_xla(values, indices, b):
+        gathered = b.reshape(-1, values.shape[3], b.shape[1])[
+            jnp.maximum(indices, 0)]                     # (R,S,bk,N)
+        mask = (indices >= 0).astype(values.dtype)[..., None, None]
+        out = jnp.einsum("rsmk,rskn->rmn", values * mask, gathered,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(-1, b.shape[1]).astype(b.dtype)
+
+    registry.register(_rec("SMMM", smmm_xla, "jnp", 0, failsafe=True))
+    registry.register(_rec("SMMM", smmm_xla, "xla", 10))
+    registry.register(_rec("SMMM", smmm, "pallas", 20, supports=_pallas_ok))
+
+    # Sequence-model substrate aliases (no pallas variant: the chunked SSD
+    # is already MXU-shaped einsums; see EXPERIMENTS.md §Perf).
+    registry.register(_rec("SSD", ssd_ref, "jnp", 0, failsafe=True))
+    registry.register(_rec("SSD", ssd_chunked, "xla", 10))
+    registry.register(_rec("SSD_DECODE", ssd_decode_step, "jnp", 0, failsafe=True))
+    registry.register(_rec("SSD_DECODE", ssd_decode_step, "xla", 10))
+    registry.register(_rec("MOE_FFN", grouped_ffn_ref, "jnp", 0, failsafe=True))
+    registry.register(_rec("MOE_FFN", grouped_ffn, "xla", 10))
+
+    # Decode-time attention (GEMV-bound; XLA codegen is already optimal —
+    # registering only jnp/xla exercises selection across substrates).
+    def gqa_decode(q, k, v, **kw):
+        return attention_ref(q, k, v, causal=True, **kw)
+
+    registry.register(_rec("GQA_DECODE", gqa_decode, "jnp", 0, failsafe=True))
+    registry.register(_rec("GQA_DECODE", gqa_decode, "xla", 10))
+
+    if registry is GLOBAL_REGISTRY:
+        _REGISTERED = True

@@ -1,0 +1,86 @@
+"""Shared helpers for the HME kernel region (Pallas TPU kernels).
+
+All kernels target TPU (MXU 128×128 systolic array, 8×128 VPU lanes, ~16 MiB
+VMEM per core).  On non-TPU backends ``pallas_call`` runs with
+``interpret=True`` so the same kernel bodies validate on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# TPU tiling constants
+LANE = 128      # last-dim tile (VREG lane count / MXU edge)
+SUBLANE = 8     # second-to-last-dim tile for f32
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode: executes the kernel body in Python on CPU."""
+    return not on_tpu()
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, m: int) -> int:
+    return cdiv(x, m) * m
+
+
+def pad_dim(x: jax.Array, dim: int, multiple: int, value=0) -> jax.Array:
+    size = x.shape[dim]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[dim] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def pad_to_blocks(x: jax.Array, multiples: Sequence[Tuple[int, int]]) -> jax.Array:
+    """Pad dims to multiples; ``multiples`` is [(dim, multiple), ...]."""
+    for dim, m in multiples:
+        x = pad_dim(x, dim, m)
+    return x
+
+
+def pick_block(size: int, preferred: int, align: int) -> int:
+    """Largest aligned block ≤ preferred that does not overshoot wildly."""
+    if size >= preferred:
+        return preferred
+    return max(align, round_up(size, align))
+
+
+def compiler_params(dimension_semantics: Optional[Tuple[str, ...]] = None):
+    """Version-tolerant TPU compiler params (ignored in interpret mode)."""
+    if dimension_semantics is None:
+        return None
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        try:
+            return pltpu.CompilerParams(dimension_semantics=dimension_semantics)
+        except (AttributeError, TypeError):
+            return pltpu.TPUCompilerParams(dimension_semantics=dimension_semantics)
+    except Exception:
+        return None
+
+
+def small_enough_off_tpu(*args, limit: int = 1 << 22) -> bool:
+    """Hardware recommendation helper: in interpret mode (CPU container) the
+    Pallas substrate is only recommended for working sets small enough to
+    validate quickly; on real TPU there is no cap."""
+    if on_tpu():
+        return True
+    total = 0
+    for a in args:
+        size = getattr(a, "size", None)
+        if size is not None:
+            total += int(size)
+    return total <= limit

@@ -1,0 +1,2 @@
+from .ops import conv1d
+from .ref import conv1d_ref

@@ -1,0 +1,46 @@
+"""1DCONV: 1-D convolution (Pallas TPU kernel).
+
+TPU adaptation: GPU conv kernels stage halos through shared memory per thread
+block; on TPU the signal is kept lane-major in VMEM and each output tile is a
+sum of ``K`` statically-unrolled shifted loads scaled by SMEM-resident taps —
+pure VPU FMAs, no gather, no halo exchange.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import compiler_params
+
+
+def _conv1d_kernel(w_ref, x_ref, o_ref, *, bn: int, ntaps: int):
+    i = pl.program_id(0)
+    base = i * bn
+    acc = jnp.zeros((1, bn), jnp.float32)
+    for t in range(ntaps):                      # static unroll over taps
+        seg = x_ref[:, pl.dslice(base + t, bn)].astype(jnp.float32)
+        acc += w_ref[0, t] * seg
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def conv1d_pallas(x2: jax.Array, w2: jax.Array, out_len: int, *,
+                  bn: int = 1024, interpret: bool = False) -> jax.Array:
+    """x2 (1, N) ⋆ w2 (1, K) → (1, out_len_padded); out_len multiple of bn."""
+    ntaps = w2.shape[1]
+    grid = (out_len // bn,)
+    return pl.pallas_call(
+        functools.partial(_conv1d_kernel, bn=bn, ntaps=ntaps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # taps
+            pl.BlockSpec(x2.shape, lambda i: (0, 0)),        # full signal
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, out_len), x2.dtype),
+        compiler_params=compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(w2, x2)

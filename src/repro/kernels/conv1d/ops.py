@@ -1,0 +1,30 @@
+"""Jit'd wrapper for the 1DCONV Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pick_block, round_up
+from .conv1d import conv1d_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _conv1d_impl(x, w, interpret):
+    n, k = x.shape[0], w.shape[0]
+    out_len = n - k + 1
+    bn = pick_block(out_len, 1024, 128)
+    out_pad = round_up(out_len, bn)
+    # signal must cover out_pad + k - 1 samples for the last tile's loads
+    xp = jnp.pad(x, (0, out_pad + k - 1 - n)).reshape(1, -1)
+    wp = w.reshape(1, -1)
+    out = conv1d_pallas(xp, wp, out_pad, bn=bn, interpret=interpret)
+    return out[0, :out_len]
+
+
+def conv1d(x, w, *, interpret: bool | None = None):
+    """Valid 1-D cross-correlation of signal ``x`` (N,) with taps ``w`` (K,)."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _conv1d_impl(x, w, interpret)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for 1DCONV (valid 1-D convolution, correlation form)."""
+import jax.numpy as jnp
+
+
+def conv1d_ref(x, w):
+    """Valid cross-correlation: out[i] = sum_k x[i+k] * w[k]."""
+    return jnp.convolve(x, w[::-1], mode="valid")

@@ -1,0 +1,2 @@
+from .ops import ewmd, ewmm
+from .ref import ewmd_ref, ewmm_ref

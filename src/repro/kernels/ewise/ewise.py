@@ -1,0 +1,40 @@
+"""EWMM / EWMD: element-wise binary Pallas kernels.
+
+Memory-bound VPU work: 2-D blocks aligned to the (8, 128) vector registers;
+the grid walks row/col tiles so arbitrarily large operands stream through
+VMEM without spilling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import compiler_params
+
+_OPS = {
+    "mul": lambda a, b: a * b,
+    "div": lambda a, b: a / b,
+}
+
+
+def _ewise_kernel(a_ref, b_ref, o_ref, *, op: str):
+    o_ref[...] = _OPS[op](a_ref[...], b_ref[...])
+
+
+def ewise_pallas(a: jax.Array, b: jax.Array, *, op: str, bm: int = 512,
+                 bn: int = 1024, interpret: bool = False) -> jax.Array:
+    m, n = a.shape
+    bm, bn = min(bm, m), min(bn, n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_ewise_kernel, op=op),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))] * 2,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        compiler_params=compiler_params(("parallel", "parallel")),
+        interpret=interpret,
+    )(a, b)

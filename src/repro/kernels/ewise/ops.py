@@ -1,0 +1,39 @@
+"""Jit'd wrappers for EWMM / EWMD (reshape to 2-D, pad to VPU tiles)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_dim, pick_block
+from .ewise import ewise_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def _ewise_impl(a, b, op, interpret):
+    shape = a.shape
+    a2 = a.reshape(-1, shape[-1]) if a.ndim != 2 else a
+    b2 = b.reshape(a2.shape)
+    m, n = a2.shape
+    bm = pick_block(m, 512, 8)
+    bn = pick_block(n, 1024, 128)
+    # pad divisor with ones to keep EWMD finite in the dead region
+    pad_val = 1 if op == "div" else 0
+    ap = pad_dim(pad_dim(a2, 0, bm), 1, bn)
+    bp = jax.numpy.pad(b2, [(0, ap.shape[0] - m), (0, ap.shape[1] - n)],
+                       constant_values=pad_val)
+    out = ewise_pallas(ap, bp, op=op, bm=bm, bn=bn, interpret=interpret)
+    return out[:m, :n].reshape(shape)
+
+
+def ewmm(a, b, *, interpret: bool | None = None):
+    """Element-wise matrix multiplication."""
+    return _ewise_impl(a, b, "mul",
+                       interpret_default() if interpret is None else interpret)
+
+
+def ewmd(a, b, *, interpret: bool | None = None):
+    """Element-wise matrix division."""
+    return _ewise_impl(a, b, "div",
+                       interpret_default() if interpret is None else interpret)

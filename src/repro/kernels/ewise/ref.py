@@ -1,0 +1,9 @@
+"""Pure-jnp oracles for EWMM / EWMD (element-wise matrix multiply/divide)."""
+
+
+def ewmm_ref(a, b):
+    return a * b
+
+
+def ewmd_ref(a, b):
+    return a / b

@@ -1,0 +1,127 @@
+"""FLASH_ATTN: online-softmax attention (Pallas TPU kernel).
+
+FlashAttention re-thought for TPU: the GPU original tiles over SM thread
+blocks with shared-memory staging; here the grid is (B, H, Sq/bq, Skv/bk)
+with the KV axis innermost-sequential, running one MXU matmul per (q,k) tile
+pair and carrying the online-softmax state (m, l, acc) in VMEM scratch across
+KV steps.  GQA is expressed in the BlockSpec index maps (kv head = h // rep) —
+no materialized head repetition.  Supports causal, sliding-window, and
+bidirectional-prefix (prefix-LM) masking, plus KV-length masking so padded
+keys never contribute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import compiler_params
+
+_NEG_INF = -1e30
+_REPL = 128  # lane replication for the (bq, 128) m/l scratch
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: int | None,
+               prefix_len: int, kv_len: int, q_offset: int,
+               bq: int, bk: int, nk: int):
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qi = pl.program_id(2)
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    cols = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = cols < kv_len                                  # padded keys
+    if causal:
+        cm = rows >= cols
+        if prefix_len:
+            cm = cm | (cols < prefix_len)
+        mask = mask & cm
+    if window is not None:
+        wm = cols > rows - window
+        if prefix_len:
+            wm = wm | (cols < prefix_len)
+        mask = mask & wm
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]                                 # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)             # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                        # (bq, 1)
+    l_new = l_ref[:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+
+    v = v_ref[0, 0].astype(jnp.float32)                   # (bk, d)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kb == nk - 1)
+    def _done():
+        # fully-masked rows (l == 0) return 0 rather than NaN
+        l = l_ref[:, :1]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           prefix_len: int = 0, kv_len: int | None = None,
+                           q_offset: int | None = None,
+                           scale: float | None = None, bq: int = 256,
+                           bk: int = 512, interpret: bool = False) -> jax.Array:
+    """q (B,H,Sq,D), k/v (B,Hkv,Skv,D) → (B,H,Sq,D).  Sq % bq == Skv % bk == 0.
+
+    ``q_offset`` is the absolute position of query row 0 (pass the *unpadded*
+    Skv−Sq when the wrapper pads the sequence dims)."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    bq, bk = min(bq, sq), min(bk, skv)
+    kv_len = skv if kv_len is None else kv_len
+    q_offset = (skv - sq) if q_offset is None else q_offset
+    scale = scale if scale is not None else d ** -0.5
+    grid = (b, h, sq // bq, skv // bk)
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        prefix_len=prefix_len, kv_len=kv_len, q_offset=q_offset,
+        bq=bq, bk=bk, nk=grid[3])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, hh, ii, kk: (bb, hh, ii, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, ii, kk: (bb, hh // rep, kk, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, ii, kk: (bb, hh // rep, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, hh, ii, kk: (bb, hh, ii, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _REPL), jnp.float32),   # running max m
+            pltpu.VMEM((bq, _REPL), jnp.float32),   # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),       # output accumulator
+        ],
+        compiler_params=compiler_params(
+            ("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,64 @@
+"""Jit'd wrapper for FLASH_ATTN (pads seq/head dims to TPU tiles)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_dim, pick_block
+from .flash_attention import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "prefix_len", "bq", "bk", "interpret"))
+def _fa_impl(q, k, v, causal, window, prefix_len, bq, bk, interpret):
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    scale = d ** -0.5            # scale by the *unpadded* head dim
+    qp = pad_dim(pad_dim(q, 2, bq), 3, 128)
+    kp = pad_dim(pad_dim(k, 2, bk), 3, 128)
+    vp = pad_dim(pad_dim(v, 2, bk), 3, 128)
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, window=window, prefix_len=prefix_len,
+        kv_len=skv, q_offset=skv - sq, scale=scale, bq=bq, bk=bk,
+        interpret=interpret)
+    return out[:, :, :sq, :d]
+
+
+# Differentiable wrapper: pallas forward; backward differentiates the
+# chunked-lax (mea) formulation — recompute-based flash backward, no O(S²)
+# score materialization.
+@functools.lru_cache(maxsize=None)
+def _fa_diff(causal, window, prefix_len, bq, bk, interpret):
+    from .xla import mea_attention
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return _fa_impl(q, k, v, causal, window, prefix_len, bq, bk, interpret)
+
+    def fwd(q, k, v):
+        out = _fa_impl(q, k, v, causal, window, prefix_len, bq, bk, interpret)
+        return out, (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: mea_attention(
+                q_, k_, v_, causal=causal, window=window,
+                prefix_len=prefix_len), q, k, v)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    prefix_len: int = 0, bq: int = 256, bk: int = 512,
+                    interpret: bool | None = None):
+    """Online-softmax GQA attention; see flash_attention.py for semantics."""
+    if interpret is None:
+        interpret = interpret_default()
+    bq = pick_block(q.shape[2], bq, 8)
+    bk = pick_block(k.shape[2], bk, 128)
+    return _fa_diff(causal, window, prefix_len, bq, bk, interpret)(q, k, v)

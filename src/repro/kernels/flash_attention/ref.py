@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for FLASH_ATTN: full-materialization GQA attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  prefix_len: int = 0, scale: float | None = None):
+    """Reference attention.
+
+    q (B,H,Sq,D), k/v (B,Hkv,Skv,D); GQA via head repetition.  ``window``
+    limits each query to the last ``window`` keys (sliding-window attention);
+    ``prefix_len`` marks a bidirectional prefix region (prefix-LM / VLM).
+    Positions are aligned at the *end*: query i sits at absolute position
+    Skv - Sq + i (the decode convention).
+    """
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if h != hkv:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        cmask = qpos >= kpos
+        if prefix_len:
+            cmask = cmask | (kpos < prefix_len)
+        mask = mask & cmask
+    if window is not None:
+        wmask = kpos > qpos - window
+        if prefix_len:
+            wmask = wmask | (kpos < prefix_len)
+        mask = mask & wmask
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,109 @@
+"""XLA-substrate flash attention: block-tiled online-softmax in pure lax.
+
+The same FlashAttention recurrence as the Pallas kernel, expressed as a
+statically-unrolled double block loop (q-chunks × kv-chunks) so that:
+
+* no (Sq, Skv) score matrix is ever materialized (memory O(bq·bk)),
+* out-of-reach blocks are *skipped at trace time* — causal masking halves
+  the work, sliding-window attention does only O(S·W) instead of O(S²)
+  (32× fewer flops for gemma3's 1k-window local layers at 32k), and
+* the lowered HLO contains no while loop, so dry-run cost analysis counts
+  every block (while bodies are counted once regardless of trip count).
+
+This is the variant the ``xla`` virtualization agent serves for large
+shapes — and the program the multi-pod dry-run compiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _block(qf, kb, vb, q0, k0, bq_len, bk_len, *, causal, window, prefix_len,
+           skv, q_offset):
+    """One (q-chunk, kv-chunk) tile: returns (scores_max, exp_scores, pv)."""
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qf, kb.astype(jnp.float32))
+    qpos = q0 + jnp.arange(bq_len) + q_offset
+    kpos = k0 + jnp.arange(bk_len)
+    mask = kpos[None, :] < skv
+    if causal:
+        cm = qpos[:, None] >= kpos[None, :]
+        if prefix_len:
+            cm = cm | (kpos[None, :] < prefix_len)
+        mask = mask & cm
+    if window is not None:
+        wm = kpos[None, :] > qpos[:, None] - window
+        if prefix_len:
+            wm = wm | (kpos[None, :] < prefix_len)
+        mask = mask & wm
+    return jnp.where(mask[None, None, None], s, _NEG_INF)
+
+
+def _skip(q0, q1, k0, k1, *, causal, window, prefix_len, q_offset):
+    """True when the whole (q-chunk, kv-chunk) tile is masked (trace-time)."""
+    qmin, qmax = q0 + q_offset, q1 - 1 + q_offset
+    kmin, kmax = k0, k1 - 1
+    if causal and kmin > qmax:
+        return True                      # entirely in the future
+    if window is not None and kmax < qmin - window + 1:
+        if prefix_len and kmin < prefix_len:
+            return False                 # prefix columns stay visible
+        return True                      # entirely past the window
+    return False
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "prefix_len", "bq", "bk"))
+def mea_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                  prefix_len: int = 0, bq: int = 4096, bk: int = 2048):
+    """q (B,H,Sq,D), k/v (B,Hkv,Skv,D) → (B,H,Sq,D)."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    rep = h // hkv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    qpad = (-sq) % bq
+    kpad = (-skv) % bk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    nq = (sq + qpad) // bq
+    nk = (skv + kpad) // bk
+    scale = d ** -0.5
+    q_offset = skv - sq
+    qs = q.reshape(b, hkv, rep, nq * bq, d)
+
+    outs = []
+    for qi in range(nq):
+        q0 = qi * bq
+        qf = qs[:, :, :, q0:q0 + bq].astype(jnp.float32) * scale
+        m = jnp.full((b, hkv, rep, bq), _NEG_INF, jnp.float32)
+        l = jnp.zeros((b, hkv, rep, bq), jnp.float32)
+        acc = jnp.zeros((b, hkv, rep, bq, d), jnp.float32)
+        for kb_i in range(nk):
+            k0 = kb_i * bk
+            if _skip(q0, q0 + bq, k0, k0 + bk, causal=causal, window=window,
+                     prefix_len=prefix_len, q_offset=q_offset):
+                continue
+            kb = k[:, :, k0:k0 + bk]
+            vb = v[:, :, k0:k0 + bk]
+            s = _block(qf, kb, vb, q0, k0, bq, bk, causal=causal,
+                       window=window, prefix_len=prefix_len, skv=skv,
+                       q_offset=q_offset)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p, vb.astype(jnp.float32))
+            m = m_new
+        safe = jnp.where(l == 0.0, 1.0, l)
+        outs.append(acc / safe[..., None])
+    out = jnp.concatenate(outs, axis=3) if len(outs) > 1 else outs[0]
+    return out[:, :, :, :sq].reshape(b, h, sq + 0, d)[:, :, :sq].astype(q.dtype)

@@ -1,0 +1,62 @@
+"""JS: fused Jacobi sweep (Pallas TPU kernel).
+
+One kernel fuses the residual GEMV, the diagonal correction, and the update
+division — the three passes a naive implementation makes over HBM collapse to
+one.  Layout mirrors the MVM kernel: vectors ride in (1, N) lane-major form.
+
+x' = (b - A x + d∘x) / d,  d = diag(A)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import compiler_params
+
+
+def _jacobi_kernel(a_ref, xk_ref, xi_ref, b_ref, d_ref, o_ref, acc_ref,
+                   *, nk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)            # (bm, bk) row-block of A
+    xk = xk_ref[...].astype(jnp.float32)          # (1, bk)  x at k-block
+    acc_ref[...] += jnp.sum(a * xk, axis=1)[None, :]   # partial (A x)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        xi = xi_ref[...].astype(jnp.float32)      # (1, bm) x at row-block
+        b = b_ref[...].astype(jnp.float32)
+        d = d_ref[...].astype(jnp.float32)
+        o_ref[...] = ((b - acc_ref[...] + d * xi) / d).astype(o_ref.dtype)
+
+
+def jacobi_step_pallas(a: jax.Array, x2: jax.Array, b2: jax.Array,
+                       d2: jax.Array, *, bm: int = 512, bk: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    m, k = a.shape
+    bm, bk = min(bm, m), min(bk, k)
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        functools.partial(_jacobi_kernel, nk=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk: (i, kk)),   # A
+            pl.BlockSpec((1, bk), lambda i, kk: (0, kk)),    # x (contraction)
+            pl.BlockSpec((1, bm), lambda i, kk: (0, i)),     # x (row block)
+            pl.BlockSpec((1, bm), lambda i, kk: (0, i)),     # b
+            pl.BlockSpec((1, bm), lambda i, kk: (0, i)),     # diag
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda i, kk: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, m), x2.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bm), jnp.float32)],
+        compiler_params=compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, x2, x2, b2, d2)

@@ -1,0 +1,48 @@
+"""Jit'd wrappers for the Jacobi Pallas kernel (single sweep + full solve)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_dim, pick_block
+from .jacobi import jacobi_step_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _jacobi_step_impl(a, x, b, interpret):
+    m, k = a.shape
+    bm = pick_block(m, 512, 128)
+    bk = pick_block(k, 512, 128)
+    # pad A with identity on the diagonal so padded rows stay well-defined
+    mp = ((m + bm - 1) // bm) * bm
+    ap = pad_dim(pad_dim(a, 0, bm), 1, bk)
+    if mp > m:
+        eye_pad = jnp.pad(jnp.eye(mp - m, dtype=a.dtype),
+                          [(m, 0), (m, ap.shape[1] - mp)])
+        ap = ap + jnp.pad(eye_pad, [(0, 0), (0, 0)])
+    d = jnp.diagonal(ap)[:mp]
+    xp = pad_dim(x.reshape(1, -1), 1, bk)
+    bp = pad_dim(b.reshape(1, -1), 1, bm)
+    dp = pad_dim(d.reshape(1, -1), 1, bm)
+    out = jacobi_step_pallas(ap, xp, bp, dp, bm=bm, bk=bk, interpret=interpret)
+    return out[0, :m]
+
+
+def jacobi_step(a, x, b, *, interpret: bool | None = None):
+    """One fused Jacobi sweep for Ax = b."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _jacobi_step_impl(a, x, b, interpret)
+
+
+def jacobi_solve(a, b, iters: int = 20, x0=None, *,
+                 interpret: bool | None = None):
+    """Run ``iters`` fused sweeps (device-resident between sweeps)."""
+    if interpret is None:
+        interpret = interpret_default()
+    x = jnp.zeros_like(b) if x0 is None else x0
+    for _ in range(iters):
+        x = _jacobi_step_impl(a, x, b, interpret)
+    return x

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for JS (Jacobi solver) on Ax = b."""
+import jax
+import jax.numpy as jnp
+
+
+def jacobi_step_ref(a, x, b):
+    """One Jacobi sweep: x' = (b - (A - diag(A)) x) / diag(A)."""
+    d = jnp.diagonal(a)
+    r = jnp.dot(a, x, preferred_element_type=jnp.float32) - d * x
+    return ((b - r) / d).astype(x.dtype)
+
+
+def jacobi_solve_ref(a, b, iters: int = 20, x0=None):
+    x = jnp.zeros_like(b) if x0 is None else x0
+    def body(_, x):
+        return jacobi_step_ref(a, x, b)
+    return jax.lax.fori_loop(0, iters, body, x)

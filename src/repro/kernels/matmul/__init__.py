@@ -1,0 +1,2 @@
+from .ops import mmm
+from .ref import mmm_ref

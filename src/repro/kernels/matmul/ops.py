@@ -1,0 +1,57 @@
+"""Jit'd public wrapper for the MMM Pallas kernel (pads to MXU tiles)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_dim, pick_block
+from .matmul import mmm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _mmm_impl(a, b, bm, bn, bk, interpret):
+    m, k = a.shape
+    _, n = b.shape
+    ap = pad_dim(pad_dim(a, 0, bm), 1, bk)
+    bp = pad_dim(pad_dim(b, 0, bk), 1, bn)
+    out = mmm_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+def _mmm_raw(a, b, interpret: bool):
+    m, k = a.shape
+    _, n = b.shape
+    bm = pick_block(m, 256, 8)
+    bn = pick_block(n, 256, 128)
+    bk = pick_block(k, 512, 128)
+    return _mmm_impl(a, b, bm, bn, bk, interpret)
+
+
+# Differentiable wrapper: pallas forward; backward = two pallas matmuls
+# (dA = g Bᵀ, dB = Aᵀ g) — the kernel is its own gradient engine.
+@functools.lru_cache(maxsize=None)
+def _mmm_diff(interpret: bool):
+    @jax.custom_vjp
+    def f(a, b):
+        return _mmm_raw(a, b, interpret)
+
+    def fwd(a, b):
+        return _mmm_raw(a, b, interpret), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        da = _mmm_raw(g, b.T, interpret).astype(a.dtype)
+        db = _mmm_raw(a.T, g, interpret).astype(b.dtype)
+        return da, db
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def mmm(a, b, *, interpret: bool | None = None):
+    """Hardware-adapted MMM: MXU-aligned tiling, f32 VMEM accumulator."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _mmm_diff(interpret)(a, b)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for MMM (matrix-matrix multiplication)."""
+import jax
+import jax.numpy as jnp
+
+
+def mmm_ref(a, b):
+    """C = A @ B with f32 accumulation (the fail-safe reference)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+# XLA-substrate variant: forward and backward dots emit results in the
+# operand dtype directly (the MXU accumulates f32 internally regardless).
+# With the default `preferred_element_type=f32 → astype` pattern, the SPMD
+# partitioner places its tensor-parallel all-reduces on the *pre-convert f32*
+# partial outputs — doubling every row-parallel and activation-gradient
+# collective.  Measured on mistral-123b train: EXPERIMENTS.md §Perf.
+@jax.custom_vjp
+def mmm_xla(a, b):
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def _mmm_xla_fwd(a, b):
+    return mmm_xla(a, b), (a, b)
+
+
+def _mmm_xla_bwd(res, g):
+    a, b = res
+    da = jnp.dot(g, b.T, preferred_element_type=g.dtype).astype(a.dtype)
+    db = jnp.dot(a.T, g, preferred_element_type=g.dtype).astype(b.dtype)
+    return da, db
+
+
+mmm_xla.defvjp(_mmm_xla_fwd, _mmm_xla_bwd)

@@ -1,0 +1,2 @@
+from .ops import grouped_ffn
+from .ref import grouped_ffn_ref

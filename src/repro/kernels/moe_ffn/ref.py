@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for MOE_FFN (grouped per-expert gated FFN)."""
+import jax
+import jax.numpy as jnp
+
+
+def grouped_ffn_ref(xe, w_gate, w_up, w_down):
+    """xe (E,C,D) dispatched tokens; w_gate/w_up (E,D,F); w_down (E,F,D).
+
+    Per-expert SwiGLU FFN applied to each expert's capacity slots."""
+    h = jnp.einsum("ecd,edf->ecf", xe, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up)
+    act = jax.nn.silu(h.astype(jnp.float32)).astype(h.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", act, w_down)

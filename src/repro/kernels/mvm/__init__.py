@@ -1,0 +1,2 @@
+from .ops import mvm
+from .ref import mvm_ref

@@ -1,0 +1,54 @@
+"""MVM: matrix-vector multiplication (Pallas TPU kernel).
+
+TPU adaptation: the GPU-style one-thread-per-row GEMV does not map to a
+systolic array; instead rows are tiled (bm) and the contraction runs on the
+VPU as a broadcast-multiply + lane reduction, with the output kept in a
+(1, M) lane-major layout so every tensor stays (8,128)-tileable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import compiler_params
+
+
+def _mvm_kernel(a_ref, x_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)          # (bm, bk)
+    x = x_ref[...].astype(jnp.float32)          # (1, bk)
+    acc_ref[...] += jnp.sum(a * x, axis=1)[None, :]   # (1, bm)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def mvm_pallas(a: jax.Array, x2: jax.Array, *, bm: int = 512, bk: int = 1024,
+               interpret: bool = False) -> jax.Array:
+    """A (M,K) @ x (1,K) → y (1,M)."""
+    m, k = a.shape
+    bm, bk = min(bm, m), min(bk, k)
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        functools.partial(_mvm_kernel, nk=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((1, bk), lambda i, kk: (0, kk)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda i, kk: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, m), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bm), jnp.float32)],
+        compiler_params=compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, x2)

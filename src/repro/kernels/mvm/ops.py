@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the MVM Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_dim, pick_block
+from .mvm import mvm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _mvm_impl(a, x, interpret):
+    m, k = a.shape
+    bm = pick_block(m, 512, 128)
+    bk = pick_block(k, 1024, 128)
+    ap = pad_dim(pad_dim(a, 0, bm), 1, bk)
+    xp = pad_dim(x.reshape(1, k), 1, bk)
+    y = mvm_pallas(ap, xp, bm=bm, bk=bk, interpret=interpret)
+    return y[0, :m]
+
+
+def mvm(a, x, *, interpret: bool | None = None):
+    """y = A @ x for A (M,K), x (K,)."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _mvm_impl(a, x, interpret)

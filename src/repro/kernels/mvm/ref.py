@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for MVM (matrix-vector multiplication)."""
+import jax.numpy as jnp
+
+
+def mvm_ref(a, x):
+    return jnp.dot(a, x, preferred_element_type=jnp.float32).astype(a.dtype)

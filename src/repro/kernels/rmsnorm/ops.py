@@ -1,0 +1,53 @@
+"""Jit'd wrapper for the RMSNORM Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_dim, pick_block
+from .rmsnorm import rmsnorm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def _rmsnorm_impl(x, gamma, eps, interpret):
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    r = x2.shape[0]
+    br = pick_block(r, 256, 8)
+    x2 = pad_dim(pad_dim(x2, 0, br), 1, 128)
+    g2 = pad_dim(gamma.reshape(1, d), 1, 128)
+    out = rmsnorm_pallas(x2, g2, eps=eps, d_actual=d, br=br,
+                         interpret=interpret)
+    return out[:r, :d].reshape(shape)
+
+
+# Differentiable wrapper: pallas forward, exact recompute backward via the
+# jnp oracle's VJP (cheap: rmsnorm is memory-bound, recompute is one pass).
+@functools.lru_cache(maxsize=None)
+def _rmsnorm_diff(eps: float, interpret: bool):
+    from .ref import rmsnorm_ref
+
+    @jax.custom_vjp
+    def f(x, gamma):
+        return _rmsnorm_impl(x, gamma, eps, interpret)
+
+    def fwd(x, gamma):
+        return _rmsnorm_impl(x, gamma, eps, interpret), (x, gamma)
+
+    def bwd(res, g):
+        x, gamma = res
+        _, vjp = jax.vjp(lambda x_, g_: rmsnorm_ref(x_, g_, eps), x, gamma)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def rmsnorm(x, gamma, *, eps: float = 1e-6, interpret: bool | None = None):
+    """Fused RMSNorm over the last dim; gamma has shape (D,)."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _rmsnorm_diff(eps, interpret)(x, gamma)

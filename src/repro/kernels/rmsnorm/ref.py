@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for RMSNORM."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, gamma, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm_xla(x, gamma, eps: float = 1e-6):
+    """XLA-substrate variant: f32 only inside reductions; all tensors that
+    cross layer/sharding boundaries (output, dx) stay in the input dtype.
+
+    Two measured pathologies this avoids (EXPERIMENTS.md §Dry-run/§Perf):
+    * an f32 residual stream makes the remat backward hoist a full-precision
+      copy of the saved layer-input stack out of the while loop (2× memory);
+    * f32 cotangents make the SPMD partitioner run its tensor-parallel
+      all-reduces at 2× width."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * gamma.astype(x.dtype)
+
+
+def _rmsnorm_xla_fwd(x, gamma, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps)                     # f32 (rows,1)
+    out = x * scale.astype(x.dtype) * gamma.astype(x.dtype)
+    return out, (x, gamma, scale)
+
+
+def _rmsnorm_xla_bwd(eps, res, g):
+    x, gamma, scale = res
+    d = x.shape[-1]
+    xf = x.astype(jnp.float32)
+    gf = (g * gamma.astype(g.dtype)).astype(jnp.float32)  # dL/d(x*scale)
+    dot = jnp.sum(gf * xf, axis=-1, keepdims=True)
+    dx = (gf * scale - xf * (scale ** 3) * (dot / d)).astype(x.dtype)
+    dgamma = jnp.sum((g.astype(jnp.float32)
+                      * xf * scale).reshape(-1, d), axis=0)
+    return dx, dgamma.astype(gamma.dtype)
+
+
+rmsnorm_xla.defvjp(_rmsnorm_xla_fwd, _rmsnorm_xla_bwd)

@@ -1,0 +1,48 @@
+"""RMSNORM: fused root-mean-square normalization (Pallas TPU kernel).
+
+One pass over HBM instead of three (square-reduce, rsqrt-scale, gamma-mul):
+rows are tiled (br) with the full feature dim resident in VMEM, the variance
+reduction and the normalized+scaled write happen in-register.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import compiler_params
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float, d_actual: int):
+    x = x_ref[...].astype(jnp.float32)           # (br, D)
+    g = g_ref[...].astype(jnp.float32)           # (1, D)
+    # guard padded tail columns out of the variance
+    d = x.shape[1]
+    if d != d_actual:
+        lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        x = jnp.where(lane < d_actual, x, 0.0)
+    var = jnp.sum(x * x, axis=1, keepdims=True) / d_actual
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * g).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x2: jax.Array, g2: jax.Array, *, eps: float = 1e-6,
+                   d_actual: int | None = None, br: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    r, d = x2.shape
+    br = min(br, r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps,
+                          d_actual=d_actual or d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x2.dtype),
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(x2, g2)

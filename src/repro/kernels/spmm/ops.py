@@ -1,0 +1,27 @@
+"""Jit'd wrapper for the SMMM Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ..common import interpret_default, pad_dim, pick_block
+from .spmm import smmm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _smmm_impl(values, indices, b, interpret):
+    k, n = b.shape
+    bn = pick_block(n, 256, 128)
+    bp = pad_dim(b, 1, bn)
+    out = smmm_pallas(values, indices, bp, bn=bn, interpret=interpret)
+    return out[:, :n]
+
+
+def smmm(values, indices, b, *, interpret: bool | None = None):
+    """Blocked-ELL sparse(A) @ dense(B).
+
+    ``values``/``indices`` come from :func:`..spmm.ref.dense_to_bell`."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _smmm_impl(values, indices, b, interpret)

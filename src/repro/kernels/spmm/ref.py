@@ -1,0 +1,63 @@
+"""Pure-jnp oracle + format helpers for SMMM (sparse×dense matmul).
+
+TPU adaptation: GPU SpMM kernels stream CSR scalars; a systolic array wants
+*block* sparsity so each nonzero feeds a full MXU tile.  We use a blocked
+ELL format (fixed nonzero blocks per block-row, -1 padded):
+
+  values  (nrows, snnz, bm, bk)   dense nonzero blocks
+  indices (nrows, snnz)           block-column ids, -1 = padding
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_to_bell(a: jax.Array, bm: int, bk: int):
+    """Convert a dense matrix into (values, indices) blocked-ELL parts."""
+    m, k = a.shape
+    assert m % bm == 0 and k % bk == 0, (a.shape, bm, bk)
+    nrows, ncols = m // bm, k // bk
+    blocks = np.asarray(a).reshape(nrows, bm, ncols, bk).transpose(0, 2, 1, 3)
+    nz = np.abs(blocks).sum(axis=(2, 3)) != 0          # (nrows, ncols)
+    snnz = max(1, int(nz.sum(axis=1).max()))
+    values = np.zeros((nrows, snnz, bm, bk), np.asarray(a).dtype)
+    indices = -np.ones((nrows, snnz), np.int32)
+    for r in range(nrows):
+        cols = np.nonzero(nz[r])[0]
+        for s, c in enumerate(cols):
+            values[r, s] = blocks[r, c]
+            indices[r, s] = c
+    return jnp.asarray(values), jnp.asarray(indices)
+
+
+def bell_to_dense(values, indices, k: int):
+    nrows, snnz, bm, bk = values.shape
+    out = np.zeros((nrows * bm, k), np.asarray(values).dtype)
+    v = np.asarray(values)
+    idx = np.asarray(indices)
+    for r in range(nrows):
+        for s in range(snnz):
+            c = idx[r, s]
+            if c >= 0:
+                out[r * bm:(r + 1) * bm, c * bk:(c + 1) * bk] += v[r, s]
+    return jnp.asarray(out)
+
+
+def random_block_sparse(key, m: int, k: int, bm: int, bk: int,
+                        density: float = 0.25, dtype=jnp.float32):
+    """Random block-sparse dense matrix (for tests/benchmarks)."""
+    kb, kv = jax.random.split(key)
+    nrows, ncols = m // bm, k // bk
+    mask = jax.random.uniform(kb, (nrows, ncols)) < density
+    # guarantee ≥1 block per row so the format is never empty
+    mask = mask.at[:, 0].set(True)
+    vals = jax.random.normal(kv, (m, k), dtype)
+    full = jnp.repeat(jnp.repeat(mask, bm, axis=0), bk, axis=1)
+    return vals * full.astype(dtype)
+
+
+def smmm_ref(a_dense, b):
+    """Oracle: dense matmul of the (reconstructed) sparse operand."""
+    return jnp.dot(a_dense, b, preferred_element_type=jnp.float32).astype(b.dtype)

@@ -1,0 +1,59 @@
+"""SMMM: blocked-ELL sparse × dense matmul (Pallas TPU kernel).
+
+Uses scalar prefetch: the block-column index table rides in SMEM ahead of the
+grid so each step's *dense-operand tile fetch is steered by the sparsity
+pattern* (data-dependent BlockSpec index_map).  Padding blocks (index −1) are
+skipped with ``pl.when`` — no wasted MXU work, and the dense operand tile for
+a skipped block simply re-reads the previous slot (harmless, masked off).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _smmm_kernel(idx_ref, val_ref, b_ref, o_ref, acc_ref, *, ns: int):
+    i, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(idx_ref[i, s] >= 0)
+    def _accum():
+        acc_ref[...] += jnp.dot(val_ref[0, 0], b_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(s == ns - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def smmm_pallas(values: jax.Array, indices: jax.Array, b: jax.Array,
+                *, bn: int = 256, interpret: bool = False) -> jax.Array:
+    """values (R,S,bm,bk), indices (R,S) int32, b (K,N) → (R*bm, N)."""
+    nrows, snnz, bm, bk = values.shape
+    k, n = b.shape
+    bn = min(bn, n)
+    grid = (nrows, n // bn, snnz)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk), lambda i, j, s, idx: (i, s, 0, 0)),
+            pl.BlockSpec((bk, bn),
+                         lambda i, j, s, idx: (jnp.maximum(idx[i, s], 0), j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, idx: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_smmm_kernel, ns=snnz),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrows * bm, n), b.dtype),
+        interpret=interpret,
+    )(indices, values, b)

@@ -1,0 +1,2 @@
+from .ops import ssd_chunked, ssd_decode_step
+from .ref import ssd_ref

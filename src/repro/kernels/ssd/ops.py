@@ -1,0 +1,114 @@
+"""SSD chunked (quadratic-within-chunk, linear-across-chunks) algorithm.
+
+The Mamba-2 "state-space duality" formulation (arXiv:2405.21060, §6): split
+the sequence into chunks of length Q; within a chunk the recurrence is
+computed as a masked attention-like matmul (MXU-friendly), across chunks a
+short scan propagates the (H,P,N) states.  This is the TPU-native shape of
+the algorithm: the GPU kernel's warp-level scan becomes chunk matmuls that
+feed the systolic array plus a length-S/Q lax.scan.
+
+All einsums run in f32; the sequential scan is O(S/Q).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(x):
+    """(…, T) → (…, T, T) lower-triangular pairwise cumulative sums."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "return_state"))
+def ssd_chunked(x, dt, a, b, c, d, *, chunk: int = 128,
+                return_state: bool = False):
+    """Chunked SSD.  Shapes as in :func:`..ssd.ref.ssd_ref`.
+
+    With ``return_state=True`` also returns the final (B,H,P,N) SSM state
+    (used by prefill to seed the decode cache)."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # dt=0 ⇒ exp(dt·a)=1 and dt·x=0: padded steps are identity updates,
+        # so the final state and real positions are unaffected
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_orig, S = S, S + pad
+    nc = S // Q
+
+    xf = x.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, Q, H)
+    bf = jnp.repeat(b, rep, axis=2).astype(jnp.float32).reshape(B, nc, Q, H, N)
+    cf = jnp.repeat(c, rep, axis=2).astype(jnp.float32).reshape(B, nc, Q, H, N)
+    da = dtf * a.astype(jnp.float32)                    # (B,nc,Q,H) log-decay
+    da_t = da.transpose(0, 3, 1, 2)                     # (B,H,nc,Q)
+    da_cs = jnp.cumsum(da_t, axis=-1)                   # (B,H,nc,Q)
+
+    xdt = xf * dtf[..., None]                           # dt-weighted inputs
+
+    # 1. intra-chunk (diagonal blocks): masked "attention" against decay L
+    L = jnp.exp(_segsum(da_t))                          # (B,H,nc,Q,Q)
+    y_diag = jnp.einsum("bcqhn,bckhn,bhcqk,bckhp->bcqhp", cf, bf, L, xdt)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)     # (B,H,nc,Q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn", bf, decay_states, xdt)
+
+    # 3. inter-chunk recurrence (scan over nc chunk states)
+    chunk_decay = jnp.exp(da_cs[..., -1])               # (B,H,nc)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                   # (B,H,P,N), (B,H)
+        h_out = h                                       # state entering chunk
+        h = h * dec[..., None, None] + st
+        return h, h_out
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(2, 0, 1)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                # (B,nc,H,P,N)
+
+    # 4. contribution of entering states to each position
+    state_decay = jnp.exp(da_cs)                        # (B,H,nc,Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", cf, h_in, state_decay)
+
+    y = (y_diag + y_off).reshape(B, S, H, P) \
+        + x.astype(jnp.float32) * d.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)[:, :s_orig]
+    if return_state:
+        return y, h_final
+    return y
+
+
+@jax.jit
+def ssd_decode_step(h, x_t, dt_t, a, b_t, c_t, d):
+    """O(1) recurrent decode step.
+
+    h (B,H,P,N) f32 state; x_t (B,H,P); dt_t (B,H); b_t/c_t (B,G,N); d (H,).
+    Returns (h_new, y_t)."""
+    B, H, P, N = h.shape
+    G = b_t.shape[1]
+    rep = H // G
+    bf = jnp.repeat(b_t, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    cf = jnp.repeat(c_t, rep, axis=1).astype(jnp.float32)
+    xf = x_t.astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    da = jnp.exp(dtf * a.astype(jnp.float32))               # (B,H)
+    h = h * da[..., None, None] + (dtf[..., None] * xf)[..., None] * bf[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h, cf) \
+        + xf * d.astype(jnp.float32)[None, :, None]
+    return h, y.astype(x_t.dtype)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for SSD (Mamba-2 state-space duality, arXiv:2405.21060).
+
+Sequential scan over the discretized selective-SSM recurrence:
+
+    h_t = exp(dA_t) * h_{t-1} + dt_t * x_t ⊗ B_t
+    y_t = C_t · h_t + D * x_t
+
+Shapes: x (B,S,H,P), dt (B,S,H), a (H,) negative decay, b/c (B,S,G,N) with
+G group-shared states (G divides H), d (H,).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, b, c, d, *, chunk: int = 0, return_state: bool = False):
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bf = jnp.repeat(b, rep, axis=2).astype(jnp.float32)   # (B,S,H,N)
+    cf = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf * a.astype(jnp.float32))             # (B,S,H)
+
+    def step(h, inp):
+        da_t, x_t, b_t, c_t, dt_t = inp
+        # h: (B,H,P,N)
+        h = h * da_t[:, :, None, None] + (dt_t[:, :, None] * x_t)[..., None] \
+            * b_t[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    inps = (da.transpose(1, 0, 2), xf.transpose(1, 0, 2, 3),
+            bf.transpose(1, 0, 2, 3), cf.transpose(1, 0, 2, 3),
+            dtf.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, inps)
+    y = ys.transpose(1, 0, 2, 3) + xf * d.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, h_final
+    return y

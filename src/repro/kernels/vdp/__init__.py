@@ -1,0 +1,2 @@
+from .ops import vdp
+from .ref import vdp_ref

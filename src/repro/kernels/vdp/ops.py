@@ -1,0 +1,31 @@
+"""Jit'd wrapper for the VDP Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv, interpret_default, round_up
+from .vdp import vdp_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _vdp_impl(x, y, interpret):
+    n = x.shape[0]
+    cols = 1024 if n >= 1024 else round_up(n, 128)
+    rows = cdiv(n, cols)
+    total = rows * cols
+    xp = jnp.pad(x, (0, total - n)).reshape(rows, cols)
+    yp = jnp.pad(y, (0, total - n)).reshape(rows, cols)
+    br = min(256, rows)
+    while rows % br:
+        br -= 1
+    return vdp_pallas(xp, yp, br=br, interpret=interpret)[0, 0]
+
+
+def vdp(x, y, *, interpret: bool | None = None):
+    """Dot product of two 1-D vectors, f32 accumulation."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _vdp_impl(x, y, interpret)

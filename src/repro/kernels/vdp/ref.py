@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for VDP (vector dot product)."""
+import jax.numpy as jnp
+
+
+def vdp_ref(x, y):
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))

@@ -1,0 +1,41 @@
+"""VDP: vector dot product (Pallas TPU reduction kernel).
+
+The vector is reshaped to a (rows, 1024) panel; the grid walks row tiles and
+accumulates the full reduction into a single (1,1) output block that every
+grid step revisits (sequential grid ⇒ safe read-modify-write on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import compiler_params
+
+
+def _vdp_kernel(x_ref, y_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(x * y)[None, None]
+
+
+def vdp_pallas(x2: jax.Array, y2: jax.Array, *, br: int = 256,
+               interpret: bool = False) -> jax.Array:
+    r, c = x2.shape
+    br = min(br, r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        _vdp_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))] * 2,
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        compiler_params=compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(x2, y2)

@@ -1,0 +1,62 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Batched generation over the ServeEngine (prefill + incremental decode).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..distributed.sharding import mesh_context
+from ..models import build_model
+from ..serve.engine import RequestQueue, ServeEngine
+from .mesh import make_debug_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    engine = ServeEngine(model, max_len=args.prompt_len + args.max_new
+                         + cfg.prefix_len + 8)
+    queue = RequestQueue(engine, params, args.batch, args.prompt_len)
+
+    rng = jax.random.split(key, args.requests)
+    for i in range(args.requests):
+        prompt = list(map(int, jax.random.randint(
+            rng[i], (args.prompt_len,), 0, cfg.vocab_size)))
+        queue.submit(prompt, max_new=args.max_new)
+
+    t0 = time.perf_counter()
+    done = []
+    while queue._queue:
+        done.extend(queue.flush())
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.result) for r in done)
+    print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s)")
+    for r in done[:3]:
+        print(f"  req {r.uid}: {r.result[:8]}…")
+    return done
+
+
+if __name__ == "__main__":
+    main()

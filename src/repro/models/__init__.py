@@ -1,0 +1,6 @@
+"""DME region: hardware-agnostic model definitions.
+
+Every perf-critical op routes through ``halo_dispatch`` (the C2MPI trace-safe
+path) — model code names functional aliases, never backends.
+"""
+from .transformer import Model, build_model

@@ -1,0 +1,215 @@
+"""Attention blocks: GQA/MQA (+SWA, local:global, prefix-LM) and MLA.
+
+Hardware-agnostic host code: the sequence-level attention math routes through
+the FLASH_ATTN alias (pallas on TPU, chunked-lax on xla, naive jnp fail-safe);
+decode-time single-query attention is inline masked einsum (GEMV-bound, XLA
+codegen already optimal — see kernels registry notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import AttnConfig
+from ..core.c2mpi import halo_dispatch
+from ..distributed.sharding import ParamSpec, shard
+from .layers import dense, rms_norm, rope
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Parameter planning
+# ---------------------------------------------------------------------------
+def attn_param_specs(d_model: int, a: AttnConfig, dtype) -> Dict[str, ParamSpec]:
+    h, kv, dh = a.n_heads, a.n_kv_heads, a.head_dim
+    if a.kv_lora:                                   # MLA (DeepSeek-V2)
+        qk_nope = dh
+        return {
+            "wdq": ParamSpec((d_model, a.q_lora), dtype, ("fsdp", None)),
+            "q_ln": ParamSpec((a.q_lora,), dtype, (None,), init_kind="ones"),
+            "wuq": ParamSpec((a.q_lora, h * (qk_nope + a.rope_head_dim)),
+                             dtype, ("fsdp", "tp")),
+            "wdkv": ParamSpec((d_model, a.kv_lora), dtype, ("fsdp", None)),
+            "kv_ln": ParamSpec((a.kv_lora,), dtype, (None,), init_kind="ones"),
+            "wkrope": ParamSpec((d_model, a.rope_head_dim), dtype,
+                                ("fsdp", None)),
+            "wuk": ParamSpec((a.kv_lora, h * qk_nope), dtype, ("fsdp", "tp")),
+            "wuv": ParamSpec((a.kv_lora, h * a.v_head_dim), dtype,
+                             ("fsdp", "tp")),
+            "wo": ParamSpec((h * a.v_head_dim, d_model), dtype,
+                            ("tp", "fsdp")),
+        }
+    return {
+        "wq": ParamSpec((d_model, h * dh), dtype, ("fsdp", "tp")),
+        "wk": ParamSpec((d_model, kv * dh), dtype, ("fsdp", "tp")),
+        "wv": ParamSpec((d_model, kv * dh), dtype, ("fsdp", "tp")),
+        "wo": ParamSpec((h * dh, d_model), dtype, ("tp", "fsdp")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (sequence + decode)
+# ---------------------------------------------------------------------------
+def _split_heads(x, n, dh):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, dh)
+
+
+def gqa_forward(p: Params, x: jax.Array, a: AttnConfig, *,
+                positions: jax.Array, causal: bool = True,
+                prefix_len: int = 0,
+                cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                cache_pos: Optional[jax.Array] = None):
+    """Standard GQA attention.
+
+    Without cache: self-attention over x (train/prefill); returns (out, (k,v))
+    so prefill can seed a cache.  With cache (k,v of shape (B,Hkv,S,dh)) and
+    ``cache_pos``: single-step decode — x is (B,1,D), the new k/v are written
+    at cache_pos and attention runs over the full (masked) cache."""
+    b, s, _ = x.shape
+    h, kv, dh = a.n_heads, a.n_kv_heads, a.head_dim
+    q = _split_heads(dense(x, p["wq"]), h, dh)
+    k = _split_heads(dense(x, p["wk"]), kv, dh)
+    v = _split_heads(dense(x, p["wv"]), kv, dh)
+    q = rope(q, positions, a.rope_theta)
+    k = rope(k, positions, a.rope_theta)
+    q = shard(q.transpose(0, 2, 1, 3), "batch", "tp", None, None)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    if cache is None:
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+        out = halo_dispatch("FLASH_ATTN", q, k, v, causal=causal,
+                            window=a.window, prefix_len=prefix_len)
+        new_kv = (k, v)
+    else:
+        ck, cv = cache
+        lc = ck.shape[2]
+        # ring buffer when the cache is window-sized (see transformer.ring_len)
+        ring = a.window is not None and lc <= a.window and not prefix_len
+        slot = jnp.mod(cache_pos, lc) if ring else cache_pos
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, 0, slot, 0))
+        out = decode_attention(q, ck, cv, cache_pos, a,
+                               prefix_len=prefix_len, ring=ring)
+        new_kv = (ck, cv)
+
+    # pin the pre-projection layout (heads over tp): without it the multi-
+    # pod partitioner can fall back to replicating the (T, H·dh) operand
+    out = shard(out.transpose(0, 2, 1, 3).reshape(b, s, h * dh),
+                "batch", None, "tp")
+    out = dense(out, p["wo"])
+    return shard(out, "batch", None, None), new_kv
+
+
+def decode_attention(q, ck, cv, pos, a: AttnConfig, *, prefix_len: int = 0,
+                     ring: bool = False):
+    """Single-query attention over a (B,Hkv,S,dh) cache, masked at pos.
+
+    GEMV-bound; partitioner-friendly einsum with partial-softmax reductions
+    when the cache's S dim is sharded (sequence-parallel long-context).
+    With ``ring=True`` the cache is a window-sized ring buffer: every
+    occupied slot is in-window by construction, so masking reduces to slot
+    occupancy (slot index ≤ pos, trivially all-true once the ring wraps)."""
+    bq, h, sq, dh = q.shape
+    kvh = ck.shape[1]
+    rep = h // kvh
+    qf = q.astype(jnp.float32).reshape(bq, kvh, rep * sq, dh) * (dh ** -0.5)
+    s = jnp.einsum("bgqd,bgkd->bgqk", qf, ck.astype(jnp.float32))
+    kpos = jnp.arange(ck.shape[2])
+    mask = kpos[None, :] <= pos                     # causal up to current pos
+    if a.window is not None and not ring:
+        wm = kpos[None, :] > pos - a.window
+        if prefix_len:
+            wm = wm | (kpos[None, :] < prefix_len)
+        mask = mask & wm
+    s = jnp.where(mask[None, None], s, -1e30)
+    p_att = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgqk,bgkd->bgqd", p_att, cv.astype(jnp.float32))
+    return out.reshape(bq, h, sq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA forward (DeepSeek-V2, arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+def mla_forward(p: Params, x: jax.Array, a: AttnConfig, *,
+                positions: jax.Array, norm_eps: float = 1e-6,
+                cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                cache_pos: Optional[jax.Array] = None):
+    """Multi-head latent attention.
+
+    Sequence path: decompress K/V per head and run FLASH_ATTN on the
+    concatenated (nope‖rope) queries/keys.  Decode path: the *absorbed*
+    formulation — queries are projected into the kv_lora latent space and
+    attention runs against the cached latent (plus the shared rope key), so
+    the cache is (B,S,kv_lora) + (B,S,rope_dim) instead of per-head K/V —
+    the paper's 93%-smaller-cache property.
+    """
+    b, s, _ = x.shape
+    h, dh = a.n_heads, a.head_dim                    # dh = qk_nope dim
+    rdh, vdh, lat = a.rope_head_dim, a.v_head_dim, a.kv_lora
+
+    cq = rms_norm(dense(x, p["wdq"]), p["q_ln"], norm_eps)
+    q = dense(cq, p["wuq"]).reshape(b, s, h, dh + rdh)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = rope(q_rope, positions, a.rope_theta)
+
+    ckv = rms_norm(dense(x, p["wdkv"]), p["kv_ln"], norm_eps)   # (B,S,lat)
+    k_rope = rope(dense(x, p["wkrope"])[:, :, None, :], positions,
+                  a.rope_theta)[:, :, 0]                        # (B,S,rdh)
+
+    if cache is None:
+        # full-sequence: decompress and use the flash path
+        k_nope = dense(ckv, p["wuk"]).reshape(b, s, h, dh)
+        val = dense(ckv, p["wuv"]).reshape(b, s, h, vdh)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rdh))],
+            axis=-1)
+        qh = shard(q_full.transpose(0, 2, 1, 3), "batch", "tp", None, None)
+        kh = shard(k_full.transpose(0, 2, 1, 3), "batch", "tp", None, None)
+        # FLASH_ATTN kernels assume a uniform head dim: zero-pad V from
+        # v_head_dim (128) to qk dim (192) and slice after (cost noted in
+        # EXPERIMENTS.md §Perf).  Scale (dh+rdh)^-1/2 applied by the kernel.
+        vh = jnp.pad(val, ((0, 0), (0, 0), (0, 0), (0, dh + rdh - vdh)))
+        vh = shard(vh.transpose(0, 2, 1, 3), "batch", "tp", None, None)
+        out = halo_dispatch("FLASH_ATTN", qh, kh, vh, causal=True)
+        out = shard(out[..., :vdh].transpose(0, 2, 1, 3).reshape(b, s, h * vdh),
+                    "batch", None, "tp")
+        new_cache = (ckv, k_rope)
+    else:
+        # absorbed decode: q_nope' = q_nope @ W_uk per head → latent space
+        cl, cr = cache                               # (B,S,lat), (B,S,rdh)
+        cl = jax.lax.dynamic_update_slice(cl, ckv.astype(cl.dtype),
+                                          (0, cache_pos, 0))
+        cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype),
+                                          (0, cache_pos, 0))
+        wuk = p["wuk"].reshape(lat, h, dh)
+        q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32),
+                           wuk.astype(jnp.float32))  # (B,1,H,lat)
+        scale = (dh + rdh) ** -0.5
+        s_lat = jnp.einsum("bshl,btl->bhst", q_lat,
+                           cl.astype(jnp.float32))
+        s_rope = jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                            cr.astype(jnp.float32))
+        scores = (s_lat + s_rope) * scale
+        kpos = jnp.arange(cl.shape[1])
+        scores = jnp.where((kpos <= cache_pos)[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhst,btl->bshl", probs,
+                             cl.astype(jnp.float32))  # (B,1,H,lat)
+        wuv = p["wuv"].reshape(lat, h, vdh)
+        out = jnp.einsum("bshl,lhv->bshv", ctx_lat,
+                         wuv.astype(jnp.float32)).reshape(b, s, h * vdh)
+        out = out.astype(x.dtype)
+        new_cache = (cl, cr)
+
+    out = dense(out, p["wo"])
+    return shard(out, "batch", None, None), new_cache

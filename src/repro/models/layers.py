@@ -1,0 +1,96 @@
+"""Shared layers: projections, norms, RoPE, activations, embeddings, loss.
+
+All matmul-shaped work dispatches through HALO aliases; sharding is expressed
+with logical axes (see repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.c2mpi import halo_dispatch
+from ..distributed.sharding import shard
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (..., D) @ w (D, F) via the MMM alias (f32 accumulation)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = halo_dispatch("MMM", x2, w.astype(x.dtype))
+    return y.reshape(*shape[:-1], w.shape[-1])
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return halo_dispatch("RMSNORM", x, gamma, eps=eps)
+
+
+def act_fn(name: str, gate: jax.Array, up: Optional[jax.Array] = None):
+    if name == "swiglu":
+        return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+    if name == "geglu":
+        return jax.nn.gelu(gate.astype(jnp.float32),
+                           approximate=True).astype(gate.dtype) * up
+    if name == "gelu":
+        return jax.nn.gelu(gate.astype(jnp.float32),
+                           approximate=True).astype(gate.dtype)
+    raise ValueError(name)
+
+
+def ffn(params: dict, x: jax.Array, act: str) -> jax.Array:
+    """Gated (swiglu/geglu) or plain (gelu) FFN."""
+    if act in ("swiglu", "geglu"):
+        g = shard(dense(x, params["wg"]), "batch", None, "tp")
+        u = shard(dense(x, params["wu"]), "batch", None, "tp")
+        h = act_fn(act, g, u)
+    else:
+        h = act_fn(act, shard(dense(x, params["wu"]), "batch", None, "tp"))
+    h = shard(h, "batch", None, "tp")
+    # pin the row-parallel output (partial over tp → reduced, batch-sharded):
+    # without this the multi-pod partitioner can replicate the token dim
+    return shard(dense(h, params["wd"]), "batch", None, None)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, NeoX half-rotation.  x (B,S,H,dh), positions (B,S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Embedding lookup; table (V, D) sharded D over tp (gather stays local)."""
+    return jnp.take(embed, tokens, axis=0)
+
+
+def logits_from_hidden(unembed: jax.Array, h: jax.Array) -> jax.Array:
+    """h (..., D) @ unembed (D, V); V sharded over tp → softmax stats reduce."""
+    out = dense(h, unembed)
+    return shard(out, "batch", None, "vocab")
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy over a (possibly vocab-sharded) logits tensor.
+
+    Uses one-hot einsum for the label gather so the SPMD partitioner lowers
+    it to a partial-sum + small all-reduce instead of a cross-shard gather."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.bfloat16)
+    picked = jnp.einsum("...v,...v->...", lf, onehot)
+    nll = lse - picked
+    if mask is not None:
+        w = mask.astype(jnp.float32)
+        return (nll * w).sum() / jnp.maximum(w.sum(), 1.0), nll
+    return nll.mean(), nll

@@ -1,0 +1,153 @@
+"""Mamba-2 block (SSD, arXiv:2405.21060) — sequence + recurrent decode paths.
+
+TP adaptation (per the Mamba/Zamba TP discussions): the fused in_proj is
+split into separate z/x/BC/dt projections so the d_inner (head) dims shard
+over "tp" while the group-shared B/C projections stay replicated; the
+depthwise causal conv is channel-local so it shards with its channels.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SSMConfig
+from ..core.c2mpi import halo_dispatch
+from ..distributed.sharding import ParamSpec, shard
+from .layers import dense, rms_norm
+
+Params = Dict[str, jax.Array]
+
+
+def ssm_dims(d_model: int, s: SSMConfig):
+    d_in = s.expand * d_model
+    n_heads = d_in // s.head_dim
+    d_bc = 2 * s.n_groups * s.state_dim
+    return d_in, n_heads, d_bc
+
+
+def mamba_param_specs(d_model: int, s: SSMConfig, dtype) -> Dict[str, ParamSpec]:
+    d_in, h, d_bc = ssm_dims(d_model, s)
+    w = s.conv_width
+    return {
+        "wz": ParamSpec((d_model, d_in), dtype, ("fsdp", "tp")),
+        "wx": ParamSpec((d_model, d_in), dtype, ("fsdp", "tp")),
+        "wbc": ParamSpec((d_model, d_bc), dtype, ("fsdp", None)),
+        "wdt": ParamSpec((d_model, h), dtype, ("fsdp", None)),
+        "conv_x_w": ParamSpec((d_in, w), dtype, ("tp", None)),
+        "conv_x_b": ParamSpec((d_in,), dtype, ("tp",), init_kind="zeros"),
+        "conv_bc_w": ParamSpec((d_bc, w), dtype, (None, None)),
+        "conv_bc_b": ParamSpec((d_bc,), dtype, (None,), init_kind="zeros"),
+        "a_log": ParamSpec((h,), jnp.float32, (None,), init_kind="a_log"),
+        "dt_bias": ParamSpec((h,), jnp.float32, (None,), init_kind="dt_bias"),
+        "d_skip": ParamSpec((h,), jnp.float32, (None,), init_kind="ones"),
+        "norm": ParamSpec((d_in,), dtype, ("tp",), init_kind="ones"),
+        "out_proj": ParamSpec((d_in, d_model), dtype, ("tp", "fsdp")),
+    }
+
+
+def _causal_conv_seq(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via width static shifts.  u (B,S,C), w (C,W)."""
+    width = w.shape[1]
+    acc = jnp.zeros(u.shape, jnp.float32)
+    for i in range(width):
+        shift = width - 1 - i
+        if shift:
+            seg = jnp.pad(u[:, :-shift], ((0, 0), (shift, 0), (0, 0)))
+        else:
+            seg = u
+        acc += seg.astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    return (acc + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def _causal_conv_step(state: jax.Array, u_t: jax.Array, w: jax.Array,
+                      b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """state (B,C,W-1) holds the previous inputs; u_t (B,C)."""
+    width = w.shape[1]
+    full = jnp.concatenate([state, u_t[:, :, None]], axis=2)   # (B,C,W)
+    y = (full.astype(jnp.float32) * w.astype(jnp.float32)[None]
+         ).sum(axis=2) + b.astype(jnp.float32)
+    return full[:, :, 1:], y.astype(u_t.dtype)
+
+
+def mamba_forward(p: Params, x: jax.Array, s: SSMConfig, *,
+                  cache: Optional[Tuple] = None, want_cache: bool = False):
+    """x (B,S,D).  cache = (conv_x_state, conv_bc_state, ssm_state) for
+    single-step decode; ``want_cache`` makes the sequence path also return a
+    decode-ready cache (prefill)."""
+    b, seq, d_model = x.shape
+    d_in, h, d_bc = ssm_dims(d_model, s)
+    g, n, pdim = s.n_groups, s.state_dim, s.head_dim
+
+    z = shard(dense(x, p["wz"]), "batch", None, "tp")
+    xr = shard(dense(x, p["wx"]), "batch", None, "tp")
+    bc = dense(x, p["wbc"])
+    dt_raw = dense(x, p["wdt"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if cache is None:
+        xr = jax.nn.silu(_causal_conv_seq(xr, p["conv_x_w"], p["conv_x_b"])
+                         .astype(jnp.float32)).astype(x.dtype)
+        bcv = jax.nn.silu(_causal_conv_seq(bc, p["conv_bc_w"], p["conv_bc_b"])
+                          .astype(jnp.float32)).astype(x.dtype)
+        bmat = bcv[..., :g * n].reshape(b, seq, g, n)
+        cmat = bcv[..., g * n:].reshape(b, seq, g, n)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        # head-parallel SSD: shard heads over tp so the (B,H,nc,Q,Q)
+        # intra-chunk decay tensor partitions with them
+        xh = shard(xr.reshape(b, seq, h, pdim), "batch", None, "tp", None)
+        dt = shard(dt, "batch", None, "tp")
+        out = halo_dispatch("SSD", xh, dt, a, bmat, cmat, p["d_skip"],
+                            chunk=min(s.chunk, seq), return_state=want_cache)
+        if want_cache:
+            y, h_final = out
+            width = s.conv_width
+            # conv states = last W-1 *pre-activation* projected inputs
+            xr_pre = dense(x, p["wx"])                    # recompute tail only
+            conv_x_state = xr_pre[:, -(width - 1):].transpose(0, 2, 1)
+            conv_bc_state = bc[:, -(width - 1):].transpose(0, 2, 1)
+            if seq < width - 1:
+                padw = width - 1 - seq
+                conv_x_state = jnp.pad(conv_x_state, ((0, 0), (0, 0), (padw, 0)))
+                conv_bc_state = jnp.pad(conv_bc_state, ((0, 0), (0, 0), (padw, 0)))
+            new_cache = (conv_x_state, conv_bc_state, h_final)
+        else:
+            y, new_cache = out, None
+        y = y.reshape(b, seq, d_in)
+    else:
+        conv_x_state, conv_bc_state, hstate = cache
+        xt, bct, dtt = xr[:, 0], bc[:, 0], dt_raw[:, 0]
+        conv_x_state, xt = _causal_conv_step(conv_x_state, xt,
+                                             p["conv_x_w"], p["conv_x_b"])
+        conv_bc_state, bct = _causal_conv_step(conv_bc_state, bct,
+                                               p["conv_bc_w"], p["conv_bc_b"])
+        xt = jax.nn.silu(xt.astype(jnp.float32)).astype(x.dtype)
+        bct = jax.nn.silu(bct.astype(jnp.float32)).astype(x.dtype)
+        bmat = bct[..., :g * n].reshape(b, g, n)
+        cmat = bct[..., g * n:].reshape(b, g, n)
+        dt = jax.nn.softplus(dtt.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        hstate, y = halo_dispatch("SSD_DECODE", hstate,
+                                  xt.reshape(b, h, pdim), dt, a, bmat, cmat,
+                                  p["d_skip"])
+        y = y.reshape(b, 1, d_in)
+        new_cache = (conv_x_state, conv_bc_state, hstate)
+
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["norm"])
+    out = dense(y, p["out_proj"])
+    return shard(out, "batch", None, None), new_cache
+
+
+def mamba_cache_specs(d_model: int, s: SSMConfig, batch: int, dtype):
+    d_in, h, d_bc = ssm_dims(d_model, s)
+    w = s.conv_width
+    return (
+        ParamSpec((batch, d_in, w - 1), dtype, ("batch", "tp", None)),
+        ParamSpec((batch, d_bc, w - 1), dtype, ("batch", None, None)),
+        ParamSpec((batch, h, s.head_dim, s.state_dim), jnp.float32,
+                  ("batch", None, None, None)),
+    )

@@ -1,0 +1,62 @@
+"""Gradient compression for DP all-reduce: int8 quantization + error feedback.
+
+At 1000+-node scale the DP gradient all-reduce dominates the interconnect;
+8-bit block-quantized gradients cut it 4× vs f32 (2× vs bf16).  Error
+feedback (residual carried to the next step) keeps convergence unbiased
+[Seide et al. 2014; Karimireddy et al. 2019].
+
+Usage inside the train step (compression happens *before* the pjit-inserted
+all-reduce by quantize→dequantize around the psum point; the partitioner then
+reduces int8-scaled values):
+    g_q, scales, err = compress_gradients(grads, err)
+    grads = decompress_gradients(g_q, scales)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+_BLOCK = 2048
+
+
+def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape)
+
+
+def compress_gradients(grads: PyTree, err: Optional[PyTree] = None):
+    """Returns (quantized, scales, new_error_feedback)."""
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, err)
+    leaves, tdef = jax.tree.flatten(corrected)
+    pairs = [_quantize(l) for l in leaves]
+    q = jax.tree.unflatten(tdef, [p[0] for p in pairs])
+    scales = jax.tree.unflatten(tdef, [p[1] for p in pairs])
+    deq = jax.tree.map(
+        lambda qq, ss, g: _dequantize(qq, ss, g.shape), q, scales, corrected)
+    new_err = jax.tree.map(lambda c, d: c - d, corrected, deq)
+    return q, scales, new_err
+
+
+def decompress_gradients(q: PyTree, scales: PyTree, like: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda qq, ss, g: _dequantize(qq, ss, g.shape).astype(g.dtype),
+        q, scales, like)

@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr: float, total_steps: int,
+                    final_frac: float = 0.1):
+    t = jnp.clip(step.astype(jnp.float32) / max(1, total_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return base_lr * (final_frac + (1 - final_frac) * cos)
+
+
+def linear_warmup_cosine(step, *, base_lr: float, warmup_steps: int,
+                         total_steps: int, final_frac: float = 0.1):
+    step_f = step.astype(jnp.float32)
+    warm = step_f / max(1, warmup_steps)
+    after = cosine_schedule(step - warmup_steps, base_lr=base_lr,
+                            total_steps=max(1, total_steps - warmup_steps),
+                            final_frac=final_frac)
+    return jnp.where(step_f < warmup_steps, base_lr * warm, after)

@@ -1,0 +1,2 @@
+from .engine import ServeEngine
+from .kvcache import pad_caches

@@ -1,0 +1,116 @@
+"""Batched serving engine: prefill + incremental decode with a fixed-shape
+cache (one compiled prefill program, one compiled decode program).
+
+Request flow: ``generate`` takes a batch of equal-padded prompts, prefills
+once, then runs jitted single-token decode steps, sampling greedy or with
+temperature.  ``RequestQueue`` provides a minimal continuous-batching front:
+requests accumulate until the batch is full (or ``flush``), then run as one
+``generate`` — the production pattern for a fixed-shape step function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.transformer import Model
+from .kvcache import pad_caches
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    max_len: int = 256
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+
+    def _sample(self, logits, key, temperature: float):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate(self, params, prompts: jax.Array, max_new: int, *,
+                 temperature: float = 0.0, key: Optional[jax.Array] = None,
+                 batch_extra: Optional[Dict[str, jax.Array]] = None
+                 ) -> jax.Array:
+        """prompts (B, S0) int32 → (B, max_new) int32 generated tokens."""
+        b, s0 = prompts.shape
+        assert s0 + max_new <= self.max_len, "grow max_len"
+        key = key if key is not None else jax.random.PRNGKey(0)
+        batch = {"tokens": prompts}
+        if batch_extra:
+            batch.update(batch_extra)
+        logits, caches = self._prefill(params, batch)
+        caches = pad_caches(self.model.cfg, caches, self.max_len)
+        prefix = self.model.cfg.prefix_len if \
+            self.model.cfg.frontend == "patch_embed" else 0
+        pos = s0 + prefix                      # next cache slot to write
+        out = []
+        tok = self._sample(logits, key, temperature)[:, None]
+        out.append(tok)
+        for i in range(max_new - 1):
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(params, caches, tok,
+                                          jnp.asarray(pos + i, jnp.int32))
+            tok = self._sample(logits, sub, temperature)[:, None]
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new: int
+    result: Optional[List[int]] = None
+
+
+class RequestQueue:
+    """Minimal batched-request front for the fixed-shape engine."""
+
+    def __init__(self, engine: ServeEngine, params, batch_size: int,
+                 prompt_len: int):
+        self.engine = engine
+        self.params = params
+        self.batch_size = batch_size
+        self.prompt_len = prompt_len
+        self._queue: List[Request] = []
+        self._uid = 0
+
+    def submit(self, prompt: List[int], max_new: int = 16) -> int:
+        self._uid += 1
+        self._queue.append(Request(self._uid, prompt, max_new))
+        return self._uid
+
+    def ready(self) -> bool:
+        return len(self._queue) >= self.batch_size
+
+    def flush(self) -> List[Request]:
+        """Run one batched generate over the queued (padded) requests."""
+        batch = self._queue[: self.batch_size]
+        self._queue = self._queue[self.batch_size:]
+        if not batch:
+            return []
+        while len(batch) < self.batch_size:       # pad with echo of first
+            batch.append(Request(-1, batch[0].prompt, batch[0].max_new))
+        toks = jnp.asarray([
+            (r.prompt + [0] * self.prompt_len)[: self.prompt_len]
+            for r in batch], jnp.int32)
+        max_new = max(r.max_new for r in batch)
+        gen = self.engine.generate(self.params, toks, max_new)
+        gen = jax.device_get(gen)
+        out = []
+        for i, r in enumerate(batch):
+            if r.uid >= 0:
+                r.result = list(map(int, gen[i, : r.max_new]))
+                out.append(r)
+        return out

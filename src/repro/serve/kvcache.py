@@ -1,0 +1,62 @@
+"""KV/SSM cache utilities: pad prefill caches to the serving cache length."""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+PyTree = Any
+
+
+def _to_ring(k: jax.Array, window: int) -> jax.Array:
+    """(R,B,H,S0,dh) prefill keys → (R,B,H,window,dh) ring buffer.
+
+    Slot assignment: position p lives at slot p % window (matches the decode
+    writer in models.attention)."""
+    s0 = k.shape[3]
+    if s0 <= window:
+        return jnp.pad(k, ((0, 0),) * 3 + ((0, window - s0), (0, 0)))
+    last = k[:, :, :, s0 - window:]
+    return jnp.roll(last, s0 % window, axis=3)
+
+
+def pad_caches(cfg: ArchConfig, caches: PyTree, target_len: int) -> PyTree:
+    """Grow every attention cache's sequence axis to its serving length.
+
+    Cache layouts (leading R = stacked scan dim):
+      GQA:   (R,B,Hkv,S,dh) ×2  → pad axis 3 (ring-rolled for SWA layers)
+      MLA:   (R,B,S,lat), (R,B,S,rdh) → pad axis 2
+      Mamba: conv/ssm states → unchanged (O(1) state)
+    """
+    from ..models.transformer import ring_len
+
+    out = []
+    for i, st in enumerate(cfg.stages):
+        blocks = []
+        for j, spec in enumerate(st.pattern):
+            c = caches[i][j]
+            kind = spec.kind
+            a = cfg.shared_attn if kind == "shared_attn" else spec.attn
+            if kind == "mamba":
+                blocks.append(c)
+            elif a.kv_lora:
+                cl, cr = c
+                pad = target_len - cl.shape[2]
+                blocks.append((
+                    jnp.pad(cl, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                    jnp.pad(cr, ((0, 0), (0, 0), (0, pad), (0, 0)))))
+            else:
+                tgt = ring_len(cfg, a, target_len)
+                ck, cv = c
+                if tgt < target_len:               # SWA ring layer
+                    blocks.append((_to_ring(ck, tgt), _to_ring(cv, tgt)))
+                else:
+                    pad = tgt - ck.shape[3]
+                    blocks.append((
+                        jnp.pad(ck, ((0, 0),) * 3 + ((0, pad), (0, 0))),
+                        jnp.pad(cv, ((0, 0),) * 3 + ((0, pad), (0, 0)))))
+        out.append(tuple(blocks))
+    return out

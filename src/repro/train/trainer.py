@@ -1,0 +1,150 @@
+"""Training loop: jitted step with donation, grad accumulation, remat,
+optional int8 gradient compression, checkpoint/restart, heartbeat.
+
+The train step is a single pjit program: loss (scanned stages with per-layer
+remat) → grads → (optional quantize/dequant with error feedback) → AdamW.
+Under a mesh, in/out shardings come from the model's ParamSpec planning; on a
+single device everything degrades gracefully.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import Model
+from ..optim.adamw import AdamWState, adamw_init, adamw_update
+from ..optim.compression import compress_gradients
+from ..optim.schedule import linear_warmup_cosine
+from .checkpoint import CheckpointManager
+from .fault_tolerance import HeartbeatJournal
+
+log = logging.getLogger("repro.train")
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: AdamWState
+    err_fb: Optional[PyTree] = None      # gradient-compression error feedback
+
+
+@dataclasses.dataclass
+class TrainHyper:
+    base_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatches: int = 1
+    compress_grads: bool = False
+
+
+def make_train_step(model: Model, hp: TrainHyper) -> Callable:
+    """Returns train_step(state, batch) → (state, metrics)."""
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            return model.loss_fn(p, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        m = hp.microbatches
+        if m <= 1:
+            return grads_of(params, batch)
+        # split the global batch into m microbatches and scan-accumulate
+        def slice_mb(i):
+            return jax.tree.map(
+                lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:])[i],
+                batch)
+
+        def body(carry, i):
+            loss_a, grads_a = carry
+            loss, metrics, grads = grads_of(params, slice_mb(i))
+            grads_a = jax.tree.map(jnp.add, grads_a, grads)
+            return (loss_a + loss, grads_a), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads_sum), metrics = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), jnp.arange(m))
+        metrics = jax.tree.map(lambda x: x[-1], metrics)
+        return loss_sum / m, metrics, jax.tree.map(lambda g: g / m, grads_sum)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        loss, metrics, grads = accumulate(state.params, batch)
+        err_fb = state.err_fb
+        if hp.compress_grads:
+            q, scales, err_fb = compress_gradients(grads, err_fb)
+            from ..optim.compression import decompress_gradients
+            grads = decompress_gradients(q, scales, grads)
+        lr = linear_warmup_cosine(state.opt.step, base_lr=hp.base_lr,
+                                  warmup_steps=hp.warmup_steps,
+                                  total_steps=hp.total_steps)
+        params, opt, om = adamw_update(
+            state.params, grads, state.opt, lr=lr,
+            weight_decay=hp.weight_decay, clip_norm=hp.clip_norm)
+        new_state = TrainState(params=params, opt=opt, err_fb=err_fb)
+        return new_state, {"loss": loss, "lr": lr, **metrics, **om}
+
+    return train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Host-side loop: data, jitted step, checkpoints, heartbeat, resume."""
+    model: Model
+    hp: TrainHyper
+    ckpt: Optional[CheckpointManager] = None
+    heartbeat: Optional[HeartbeatJournal] = None
+    log_every: int = 10
+    ckpt_every: int = 50
+
+    def init_state(self, key) -> TrainState:
+        params = self.model.init(key)
+        state = TrainState(params=params, opt=adamw_init(params))
+        if self.hp.compress_grads:
+            state.err_fb = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return state
+
+    def restore_or_init(self, key) -> Tuple[TrainState, int]:
+        state = self.init_state(key)
+        if self.ckpt is not None:
+            restored, step = self.ckpt.restore_latest(like=state)
+            if restored is not None:
+                log.info("resumed from checkpoint at step %d", step)
+                return restored, step
+        return state, 0
+
+    def run(self, state: TrainState, data_fn: Callable[[int], Any],
+            steps: int, start_step: int = 0):
+        step_fn = jax.jit(make_train_step(self.model, self.hp),
+                          donate_argnums=(0,))
+        history = []
+        t_last = time.perf_counter()
+        for step in range(start_step, start_step + steps):
+            batch = data_fn(step)
+            state, metrics = step_fn(state, batch)
+            if self.heartbeat is not None:
+                self.heartbeat.beat(step)
+            if step % self.log_every == 0 or step == start_step + steps - 1:
+                metrics = jax.device_get(metrics)
+                dt = time.perf_counter() - t_last
+                t_last = time.perf_counter()
+                history.append((step, float(metrics["loss"])))
+                log.info("step %5d loss %.4f lr %.2e gnorm %.3f (%.2fs)",
+                         step, metrics["loss"], metrics["lr"],
+                         metrics["grad_norm"], dt)
+            if self.ckpt is not None and step and step % self.ckpt_every == 0:
+                self.ckpt.save(step, state)
+        if self.ckpt is not None:
+            self.ckpt.save(start_step + steps - 1, state, wait=True)
+        return state, history

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device.  Mesh tests spawn subprocesses that set it.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

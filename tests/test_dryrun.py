@@ -1,0 +1,83 @@
+"""Dry-run machinery: one real (cheap) cell in a subprocess + unit tests of
+the collective parser and cost correction."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch.dryrun import (_tensor_bytes, collective_link_bytes,
+                                 parse_collectives)
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+
+
+def test_tensor_bytes():
+    assert _tensor_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _tensor_bytes("(bf16[8,8], f32[4])") == 8 * 8 * 2 + 16
+    assert _tensor_bytes("pred[10]") == 10
+
+
+def test_parse_collectives_counts_and_normalizes():
+    hlo = """
+  %p0 = bf16[64,64]{1,0} parameter(0)
+  %dot.1 = f32[64,64]{1,0} dot(%p0, %p0)
+  %all-reduce.1 = f32[64,64]{1,0} all-reduce(%dot.1), to_apply=%add_promoted
+  %ag.2 = bf16[64,64]{1,0} all-gather(%p0), dimensions={0}
+"""
+    colls = parse_collectives(hlo)
+    assert colls["all-reduce"]["count"] == 1
+    # promoted f32 all-reduce counted at bf16 width
+    assert colls["all-reduce"]["bytes"] == 64 * 64 * 2
+    assert colls["all-reduce"]["bytes_raw"] == 64 * 64 * 4
+    assert colls["all-gather"]["bytes"] == 64 * 64 * 2
+    total = collective_link_bytes(colls)
+    assert total == 2 * 64 * 64 * 2 + 64 * 64 * 2   # AR×2 + AG×1
+
+
+@pytest.mark.slow
+def test_one_cell_end_to_end(tmp_path):
+    """Compile mamba2 decode on the 256-chip mesh inside a subprocess; checks
+    the full lower→compile→analyze→record pipeline."""
+    code = textwrap.dedent(f"""
+        from repro.launch.dryrun import run_cell
+        from pathlib import Path
+        rec = run_cell("mamba2-370m", "decode_32k", "single",
+                       Path({str(tmp_path)!r}))
+        assert rec["status"] == "ok", rec.get("error")
+        assert rec["chips"] == 256
+        assert rec["cost"]["flops"] > 0
+        assert "cost_corrected" in rec
+        print("CELL_OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=ENV, cwd="/root/repo", timeout=580)
+    assert "CELL_OK" in out.stdout, out.stderr[-3000:]
+    rec = json.loads(next(tmp_path.glob("*.json")).read_text())
+    assert rec["arch"] == "mamba2-370m"
+    assert rec["memory"]["temp_bytes"] > 0
+
+
+def test_long_500k_skip_is_recorded(tmp_path):
+    from pathlib import Path
+    from repro.launch.dryrun import run_cell
+    rec = run_cell("gemma-7b", "long_500k", "single", Path(str(tmp_path)),
+                   verbose=False)
+    assert rec["status"] == "skipped"
+    assert "sub-quadratic" in rec["reason"]
+
+
+def test_roofline_math():
+    from benchmarks.roofline import roofline_row
+    rec = {"status": "ok", "chips": 256,
+           "cost": {"flops": 197e12, "bytes_accessed": 819e9},
+           "collective_link_bytes": 50e9,
+           "model_flops": 197e12 * 256,
+           "memory": {"argument_bytes": 0, "temp_bytes": 0},
+           "arch": "x", "shape": "y", "mesh": "single"}
+    row = roofline_row(rec)
+    assert row["compute_s"] == pytest.approx(1.0)
+    assert row["memory_s"] == pytest.approx(1.0)
+    assert row["collective_s"] == pytest.approx(1.0)
+    assert row["useful_flops_frac"] == pytest.approx(1.0)

@@ -1,0 +1,194 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs the pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.conv1d import conv1d, conv1d_ref
+from repro.kernels.ewise import ewmd, ewmd_ref, ewmm, ewmm_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.flash_attention.xla import mea_attention
+from repro.kernels.jacobi import (jacobi_solve, jacobi_solve_ref, jacobi_step,
+                                  jacobi_step_ref)
+from repro.kernels.matmul import mmm, mmm_ref
+from repro.kernels.matmul.ref import mmm_xla
+from repro.kernels.moe_ffn import grouped_ffn, grouped_ffn_ref
+from repro.kernels.mvm import mvm, mvm_ref
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_xla
+from repro.kernels.spmm import (bell_to_dense, dense_to_bell,
+                                random_block_sparse, smmm, smmm_ref)
+from repro.kernels.ssd import ssd_chunked, ssd_decode_step, ssd_ref
+from repro.kernels.vdp import vdp, vdp_ref
+
+F32, BF16 = jnp.float32, jnp.bfloat16
+
+
+def tol(dt):
+    return dict(rtol=3e-2, atol=3e-2) if dt == BF16 else dict(rtol=2e-4,
+                                                              atol=2e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (128, 256, 128), (100, 300, 50),
+                                   (7, 13, 9), (512, 129, 257)])
+@pytest.mark.parametrize("dt", [F32, BF16])
+def test_mmm_sweep(rng, m, k, n, dt):
+    a = jax.random.normal(rng, (m, k), dt)
+    b = jax.random.normal(rng, (k, n), dt)
+    np.testing.assert_allclose(np.asarray(mmm(a, b), np.float32),
+                               np.asarray(mmm_ref(a, b), np.float32),
+                               **tol(dt))
+
+
+def test_mmm_xla_matches_ref(rng):
+    a = jax.random.normal(rng, (64, 96), F32)
+    b = jax.random.normal(rng, (96, 32), F32)
+    np.testing.assert_allclose(mmm_xla(a, b), mmm_ref(a, b), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(16, 16), (100, 257), (8, 1024)])
+def test_ewise_sweep(rng, shape):
+    a = jax.random.normal(rng, shape)
+    b = jax.random.normal(rng, shape) + 3.0
+    np.testing.assert_allclose(ewmm(a, b), ewmm_ref(a, b), rtol=1e-6)
+    np.testing.assert_allclose(ewmd(a, b), ewmd_ref(a, b), rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,k", [(64, 64), (200, 333), (1000, 100)])
+def test_mvm_sweep(rng, m, k):
+    a = jax.random.normal(rng, (m, k))
+    x = jax.random.normal(rng, (k,))
+    np.testing.assert_allclose(mvm(a, x), mvm_ref(a, x), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [64, 1000, 100_000])
+def test_vdp_sweep(rng, n):
+    x = jax.random.normal(rng, (n,))
+    y = jax.random.normal(rng, (n,))
+    np.testing.assert_allclose(vdp(x, y), vdp_ref(x, y), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [50, 150, 384])
+def test_jacobi_step_and_solve(rng, n):
+    a = jax.random.normal(rng, (n, n)) + n * jnp.eye(n)
+    b = jax.random.normal(rng, (n,))
+    x0 = jnp.zeros(n)
+    np.testing.assert_allclose(jacobi_step(a, x0, b),
+                               jacobi_step_ref(a, x0, b), rtol=1e-4, atol=1e-5)
+    xs = jacobi_solve(a, b, iters=30)
+    np.testing.assert_allclose(a @ xs, b, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,k", [(256, 5), (5000, 17), (1024, 64)])
+def test_conv1d_sweep(rng, n, k):
+    x = jax.random.normal(rng, (n,))
+    w = jax.random.normal(rng, (k,))
+    np.testing.assert_allclose(conv1d(x, w), conv1d_ref(x, w), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,bm,bk,density", [
+    (256, 384, 64, 128, 0.3), (128, 128, 32, 128, 0.5), (512, 256, 128, 128, 0.1)])
+def test_smmm_sweep(rng, m, k, bm, bk, density):
+    a = random_block_sparse(rng, m, k, bm, bk, density)
+    vals, idx = dense_to_bell(a, bm, bk)
+    np.testing.assert_allclose(bell_to_dense(vals, idx, k), a)
+    b = jax.random.normal(rng, (k, 200))
+    np.testing.assert_allclose(smmm(vals, idx, b), smmm_ref(a, b), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("shape,d", [((4, 64), 64), ((2, 3, 300), 300),
+                                     ((1, 12288), 12288)])
+def test_rmsnorm_sweep(rng, shape, d):
+    x = jax.random.normal(rng, shape)
+    g = jax.random.normal(rng, (d,))
+    np.testing.assert_allclose(rmsnorm(x, g), rmsnorm_ref(x, g), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(rmsnorm_xla(x, g), rmsnorm_ref(x, g),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,hkv,sq,skv,d,causal,win,pfx", [
+    (2, 4, 2, 128, 128, 64, True, None, 0),
+    (1, 8, 1, 100, 100, 80, True, None, 0),
+    (2, 4, 4, 64, 256, 32, True, None, 0),
+    (1, 4, 2, 128, 128, 64, True, 48, 0),
+    (1, 4, 2, 96, 96, 64, True, None, 32),
+    (1, 2, 2, 128, 128, 128, False, None, 0),
+    (1, 4, 1, 1, 512, 128, True, None, 0),
+])
+def test_flash_attention_sweep(rng, b, h, hkv, sq, skv, d, causal, win, pfx):
+    q = jax.random.normal(rng, (b, h, sq, d))
+    k = jax.random.normal(rng, (b, hkv, skv, d))
+    v = jax.random.normal(rng, (b, hkv, skv, d))
+    ref = attention_ref(q, k, v, causal=causal, window=win, prefix_len=pfx)
+    out = flash_attention(q, k, v, causal=causal, window=win, prefix_len=pfx)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+    out2 = mea_attention(q, k, v, causal=causal, window=win, prefix_len=pfx,
+                         bk=64)
+    np.testing.assert_allclose(out2, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_vs_ref(rng):
+    B, S, H, P, G, N = 2, 256, 4, 16, 2, 32
+    ks = jax.random.split(rng, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    d = jax.random.normal(ks[5], (H,)) * 0.1
+    for chunk in (32, 64, 256):
+        out = ssd_chunked(x, dt, a, bm, cm, d, chunk=chunk)
+        np.testing.assert_allclose(out, ssd_ref(x, dt, a, bm, cm, d),
+                                   rtol=2e-4, atol=2e-4)
+    # final state consistency: chunked == step-by-step
+    y, hfin = ssd_chunked(x, dt, a, bm, cm, d, chunk=64, return_state=True)
+    h = jnp.zeros((B, H, P, N), jnp.float32)
+    for t in range(S):
+        h, _ = ssd_decode_step(h, x[:, t], dt[:, t], a, bm[:, t], cm[:, t], d)
+    np.testing.assert_allclose(hfin, h, rtol=1e-3, atol=1e-3)
+
+
+def test_grouped_ffn(rng):
+    ks = jax.random.split(rng, 4)
+    xe = jax.random.normal(ks[0], (4, 8, 32))
+    wg = jax.random.normal(ks[1], (4, 32, 64)) * 0.1
+    wu = jax.random.normal(ks[2], (4, 32, 64)) * 0.1
+    wd = jax.random.normal(ks[3], (4, 64, 32)) * 0.1
+    np.testing.assert_allclose(grouped_ffn(xe, wg, wu, wd),
+                               grouped_ffn_ref(xe, wg, wu, wd),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---- gradients through the pallas custom-vjp wrappers ------------------------
+def test_mmm_grad(rng):
+    a = jax.random.normal(rng, (64, 96))
+    b = jax.random.normal(rng, (96, 32))
+    g1 = jax.grad(lambda a, b: mmm(a, b).sum(), argnums=(0, 1))(a, b)
+    g2 = jax.grad(lambda a, b: mmm_ref(a, b).sum(), argnums=(0, 1))(a, b)
+    for u, v in zip(g1, g2):
+        np.testing.assert_allclose(u, v, rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_grad(rng):
+    x = jax.random.normal(rng, (4, 64))
+    g = jax.random.normal(rng, (64,))
+    g1 = jax.grad(lambda x, g: rmsnorm(x, g).sum(), argnums=(0, 1))(x, g)
+    g2 = jax.grad(lambda x, g: rmsnorm_ref(x, g).sum(), argnums=(0, 1))(x, g)
+    for u, v in zip(g1, g2):
+        np.testing.assert_allclose(u, v, rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_grad(rng):
+    q = jax.random.normal(rng, (1, 4, 64, 32))
+    k = jax.random.normal(rng, (1, 2, 64, 32))
+    v = jax.random.normal(rng, (1, 2, 64, 32))
+    g1 = jax.grad(lambda q, k, v: flash_attention(q, k, v).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda q, k, v: attention_ref(q, k, v).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for u, v_ in zip(g1, g2):
+        np.testing.assert_allclose(u, v_, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,94 @@
+"""Property-based tests (hypothesis) on kernel and system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ewise import ewmd, ewmm
+from repro.kernels.matmul import mmm, mmm_ref
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.vdp import vdp
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+def arr(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              minval=lo, maxval=hi)
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_mmm_matches_oracle_any_shape(m, k, n, seed):
+    a = arr(seed, (m, k))
+    b = arr(seed + 1, (k, n))
+    np.testing.assert_allclose(mmm(a, b), mmm_ref(a, b), rtol=2e-4, atol=2e-4)
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**30),
+       s=st.floats(-3, 3, allow_nan=False))
+@settings(**SETTINGS)
+def test_mmm_linearity(m, k, n, seed, s):
+    """MMM(s·A, B) == s·MMM(A, B) — linearity survives tiling/padding."""
+    a = arr(seed, (m, k))
+    b = arr(seed + 1, (k, n))
+    np.testing.assert_allclose(mmm(a * s, b), s * np.asarray(mmm(a, b)),
+                               rtol=5e-4, atol=5e-4)
+
+
+@given(m=dims, n=dims, seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_ewise_inverse_roundtrip(m, n, seed):
+    """EWMD(EWMM(a,b), b) == a wherever b is bounded away from 0."""
+    a = arr(seed, (m, n))
+    b = arr(seed + 1, (m, n), lo=0.5, hi=3.0)
+    np.testing.assert_allclose(ewmd(ewmm(a, b), b), a, rtol=1e-5, atol=1e-5)
+
+
+@given(n=st.integers(1, 4096), seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_vdp_symmetry_and_self_positive(n, seed):
+    x = arr(seed, (n,))
+    y = arr(seed + 1, (n,))
+    np.testing.assert_allclose(vdp(x, y), vdp(y, x), rtol=1e-5, atol=1e-5)
+    assert float(vdp(x, x)) >= 0.0
+
+
+@given(rows=st.integers(1, 32), d=st.integers(2, 256),
+       seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_rmsnorm_unit_rms(rows, d, seed):
+    """With gamma=1, the output has RMS ≈ 1 per row (defining invariant)."""
+    x = arr(seed, (rows, d), lo=0.1, hi=3.0)
+    out = np.asarray(rmsnorm(x, jnp.ones(d)))
+    rms = np.sqrt((out ** 2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+@given(rows=st.integers(1, 16), d=st.integers(2, 128),
+       s=st.floats(0.1, 10.0), seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_rmsnorm_scale_invariance(rows, d, s, seed):
+    """rmsnorm(s·x) == rmsnorm(x) for s > 0 (up to eps)."""
+    x = arr(seed, (rows, d), lo=0.5, hi=2.0)
+    g = jnp.ones(d)
+    np.testing.assert_allclose(rmsnorm(x * s, g), rmsnorm(x, g),
+                               rtol=1e-3, atol=1e-3)
+
+
+# -- system invariant: registry selection is deterministic given signature ----
+@given(m=dims, k=dims, seed=st.integers(0, 2**30))
+@settings(max_examples=10, deadline=None)
+def test_selection_deterministic_per_signature(m, k, seed):
+    from repro.core import KernelRegistry
+    from repro.kernels import register_all
+    reg = KernelRegistry()
+    register_all(reg)
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, m), jnp.float32)
+    r1 = reg.select("MMM", a, b, platform_preference=["xla", "jnp"])
+    r2 = reg.select("MMM", a, b, platform_preference=["xla", "jnp"])
+    assert r1 is r2
