@@ -61,6 +61,10 @@ def main() -> None:
         _section("roofline: no dry-run artifacts found (run "
                  "`python -m repro.launch.dryrun` first)")
 
+    # Sync vs async C2MPI dispatch overhead + substrate overlap
+    from .async_dispatch import main as async_main
+    async_main()
+
     # Model-step microbench (reduced configs, CPU)
     _section("model step microbench (reduced configs, CPU)")
     print("name,us_per_call,derived")

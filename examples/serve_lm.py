@@ -26,22 +26,24 @@ def main():
     engine = ServeEngine(model, max_len=prompt_len + max_new + 4)
     queue = RequestQueue(engine, params, batch, prompt_len)
 
+    # submissions return futures; the background drain loop batches them
+    # (full batch -> immediate flush, partial batch -> flush on max_delay)
     rngs = jax.random.split(key, 8)
-    for i in range(8):
-        prompt = list(map(int, jax.random.randint(
-            rngs[i], (prompt_len,), 0, cfg.vocab_size)))
-        queue.submit(prompt, max_new=max_new)
-
     t0 = time.perf_counter()
-    done = []
-    while queue._queue:
-        done.extend(queue.flush())
+    with queue:
+        prompts, futs = [], []
+        for i in range(8):
+            prompt = list(map(int, jax.random.randint(
+                rngs[i], (prompt_len,), 0, cfg.vocab_size)))
+            prompts.append(prompt)
+            futs.append(queue.submit(prompt, max_new=max_new))
+        results = [f.result() for f in futs]
     dt = time.perf_counter() - t0
-    total = sum(len(r.result) for r in done)
-    print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
+    total = sum(len(r) for r in results)
+    print(f"served {len(results)} requests / {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s incl. compile)")
-    for r in done:
-        print(f"  req {r.uid}: prompt[:4]={r.prompt[:4]} -> {r.result[:6]}…")
+    for f, p, r in zip(futs, prompts, results):
+        print(f"  req {f.uid}: prompt[:4]={p[:4]} -> {r[:6]}…")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ The paper's contribution, as a composable library:
 * :mod:`repro.core.registry`       — kernel attributes + selection (§IV-C)
 * :mod:`repro.core.manifest`       — unified configuration file (Table I)
 * :mod:`repro.core.agents`         — runtime + virtualization agents (§V)
+* :mod:`repro.core.scheduler`      — cost-model scheduler + autotune cache
 * :mod:`repro.core.c2mpi`          — MPIX_* application interface (§IV)
 * :mod:`repro.core.portability`    — performance-portability metrics (§VI)
 """
@@ -13,11 +14,14 @@ from .compute_object import BufferHandle, ComputeObject, as_compute_object
 from .registry import (GLOBAL_REGISTRY, KernelAttributes, KernelRecord,
                        KernelRegistry, SelectionError, PLATFORM_PREFERENCE)
 from .manifest import FuncEntry, HostEntry, Manifest, default_manifest
-from .agents import (ChildRank, JnpAgent, PallasAgent, RuntimeAgent,
-                     ShardedAgent, VirtualizationAgent, XlaAgent)
+from .scheduler import CostModelScheduler, abstract_signature
+from .agents import (ChildRank, HaloCancelledError, HaloFuture, JnpAgent,
+                     PallasAgent, RuntimeAgent, ShardedAgent,
+                     VirtualizationAgent, XlaAgent)
 from .c2mpi import (MPIX_Claim, MPIX_CreateBuffer, MPIX_Finalize, MPIX_Free,
-                    MPIX_Initialize, MPIX_Recv, MPIX_Send, MPIX_SendFwd,
-                    halo_dispatch, halo_session)
+                    MPIX_Initialize, MPIX_IRecv, MPIX_ISend, MPIX_Recv,
+                    MPIX_Send, MPIX_SendFwd, MPIX_Test, MPIX_Wait,
+                    MPIX_Waitall, halo_dispatch, halo_session)
 from .portability import (KernelReport, Timing, overhead_ratio,
                           performance_penalty, portability_score, time_fn)
 
@@ -26,10 +30,13 @@ __all__ = [
     "GLOBAL_REGISTRY", "KernelAttributes", "KernelRecord", "KernelRegistry",
     "SelectionError", "PLATFORM_PREFERENCE",
     "FuncEntry", "HostEntry", "Manifest", "default_manifest",
-    "ChildRank", "JnpAgent", "PallasAgent", "RuntimeAgent", "ShardedAgent",
+    "CostModelScheduler", "abstract_signature",
+    "ChildRank", "HaloCancelledError", "HaloFuture", "JnpAgent",
+    "PallasAgent", "RuntimeAgent", "ShardedAgent",
     "VirtualizationAgent", "XlaAgent",
     "MPIX_Claim", "MPIX_CreateBuffer", "MPIX_Finalize", "MPIX_Free",
-    "MPIX_Initialize", "MPIX_Recv", "MPIX_Send", "MPIX_SendFwd",
+    "MPIX_Initialize", "MPIX_IRecv", "MPIX_ISend", "MPIX_Recv",
+    "MPIX_Send", "MPIX_SendFwd", "MPIX_Test", "MPIX_Wait", "MPIX_Waitall",
     "halo_dispatch", "halo_session",
     "KernelReport", "Timing", "overhead_ratio", "performance_penalty",
     "portability_score", "time_fn",

@@ -17,7 +17,7 @@ registration) is preserved.  Buffers stay device-resident between invocations
 (JAX async dispatch), which is what makes the runtime-agent overhead invariant
 to working-set size, the paper's key overhead property.
 
-Two dispatch paths exist:
+Two dispatch paths exist (DESIGN.md §3):
 
 * :meth:`RuntimeAgent.dispatch` — **pure, trace-safe**.  Used *inside* jitted
   model code; selection happens at trace time so the chosen kernel is fused
@@ -25,12 +25,18 @@ Two dispatch paths exist:
 * ``claim/send/recv/send_fwd`` — the full C2MPI DRPC surface with child ranks,
   tagged FIFO mailboxes, stateful internal buffers, and fail-safe fallback.
   Used by host-level orchestration (examples, serving loops, benchmarks).
+
+The DRPC surface is asynchronous end to end (DESIGN.md §4): every submission
+flows through a per-virtualization-agent worker queue and yields a
+:class:`HaloFuture`; the blocking ``send``/``recv`` calls are thin
+wait-on-future wrappers over ``isend``/``irecv``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import logging
+import queue
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -42,8 +48,152 @@ from .compute_object import BufferHandle, ComputeObject, as_compute_object
 from .manifest import Manifest, default_manifest
 from .registry import (GLOBAL_REGISTRY, KernelRecord, KernelRegistry,
                        SelectionError)
+from .scheduler import CostModelScheduler, abstract_signature
 
 log = logging.getLogger("repro.halo.agents")
+
+
+# ---------------------------------------------------------------------------
+# Futures
+# ---------------------------------------------------------------------------
+class HaloCancelledError(RuntimeError):
+    """Raised when waiting on a request that was cancelled."""
+
+
+class HaloFuture:
+    """Completion handle for an asynchronous C2MPI request (MPIX_I*).
+
+    Semantics follow ``concurrent.futures.Future`` but stay self-contained so
+    the C2MPI surface owns its own request type (the paper's request handle):
+    ``result``/``exception`` may be called repeatedly — a future popped from a
+    mailbox keeps its value, which is what lets the blocking path be a thin
+    wait-on-future wrapper without consuming the payload twice.
+    """
+
+    _PENDING, _RUNNING, _DONE, _CANCELLED = range(4)
+
+    def __init__(self, uid: int = 0, alias: str = "", tag: int = 0):
+        self.uid = uid
+        self.alias = alias
+        self.tag = tag
+        self._cond = threading.Condition()
+        self._state = HaloFuture._PENDING
+        self._result: Any = None
+        self._exception: Optional[BaseException] = None
+        self._callbacks: List[Callable[["HaloFuture"], None]] = []
+
+    # -- introspection -------------------------------------------------------
+    def done(self) -> bool:
+        with self._cond:
+            return self._state in (HaloFuture._DONE, HaloFuture._CANCELLED)
+
+    def running(self) -> bool:
+        with self._cond:
+            return self._state == HaloFuture._RUNNING
+
+    def cancelled(self) -> bool:
+        with self._cond:
+            return self._state == HaloFuture._CANCELLED
+
+    # -- completion (worker side) -------------------------------------------
+    def _try_start(self) -> bool:
+        """Worker claims the request; False if it was cancelled first."""
+        with self._cond:
+            if self._state != HaloFuture._PENDING:
+                return False
+            self._state = HaloFuture._RUNNING
+            return True
+
+    def _finish(self, state: int) -> List[Callable]:
+        self._state = state
+        self._cond.notify_all()
+        cbs, self._callbacks = self._callbacks, []
+        return cbs
+
+    def _run_callbacks(self, cbs) -> None:
+        for cb in cbs:
+            try:
+                cb(self)
+            except Exception:
+                log.exception("HaloFuture done-callback raised")
+
+    def set_result(self, value: Any) -> None:
+        with self._cond:
+            if self._state == HaloFuture._CANCELLED:
+                return
+            self._result = value
+            cbs = self._finish(HaloFuture._DONE)
+        self._run_callbacks(cbs)
+
+    def set_exception(self, exc: BaseException) -> None:
+        with self._cond:
+            if self._state == HaloFuture._CANCELLED:
+                return
+            self._exception = exc
+            cbs = self._finish(HaloFuture._DONE)
+        self._run_callbacks(cbs)
+
+    def cancel(self) -> bool:
+        """Cancel if still pending (queued, not yet claimed by a worker)."""
+        with self._cond:
+            if self._state != HaloFuture._PENDING:
+                return self._state == HaloFuture._CANCELLED
+            cbs = self._finish(HaloFuture._CANCELLED)
+        self._run_callbacks(cbs)
+        return True
+
+    def _complete_from(self, other: "HaloFuture") -> None:
+        """Mirror another future's outcome into this one (irecv chaining).
+        A cancelled source surfaces as an error, not a cancel — this future
+        may already be claimed (matched receive) and uncancellable."""
+        if other.cancelled():
+            self.set_exception(HaloCancelledError(
+                f"matched send (uid={other.uid}, alias={other.alias!r}) "
+                f"was cancelled"))
+        elif other._exception is not None:
+            self.set_exception(other._exception)
+        else:
+            self.set_result(other._result)
+
+    # -- waiting (host side) -------------------------------------------------
+    def _wait(self, timeout: Optional[float]) -> None:
+        with self._cond:
+            if not self._cond.wait_for(
+                    lambda: self._state in (HaloFuture._DONE,
+                                            HaloFuture._CANCELLED),
+                    timeout=timeout):
+                raise TimeoutError(
+                    f"request (uid={self.uid}, alias={self.alias!r}) "
+                    f"not complete within {timeout}s")
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        self._wait(timeout)
+        if self._state == HaloFuture._CANCELLED:
+            raise HaloCancelledError(
+                f"request (uid={self.uid}, alias={self.alias!r}) was cancelled")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        self._wait(timeout)
+        if self._state == HaloFuture._CANCELLED:
+            raise HaloCancelledError(
+                f"request (uid={self.uid}, alias={self.alias!r}) was cancelled")
+        return self._exception
+
+    def add_done_callback(self, fn: Callable[["HaloFuture"], None]) -> None:
+        with self._cond:
+            if self._state not in (HaloFuture._DONE, HaloFuture._CANCELLED):
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    @classmethod
+    def completed(cls, value: Any, **kw) -> "HaloFuture":
+        fut = cls(**kw)
+        fut.set_result(value)
+        return fut
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +211,76 @@ class VirtualizationAgent:
         self.name = name or f"{self.platform}-agent"
         self.metrics = collections.Counter()
         self._lock = threading.Lock()
+        # asynchronous execute (§V-A): one FIFO worker per agent, lazily
+        # started — requests to the same substrate serialize, requests to
+        # different substrates overlap.
+        self._queue: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._shutdown = False
+
+    # -- asynchronous execution (worker queue) -------------------------------
+    def _ensure_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._shutdown = False
+            self._worker = threading.Thread(
+                target=self._worker_loop, name=f"{self.name}-worker",
+                daemon=True)
+            self._worker.start()
+
+    def _worker_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:
+                return
+            fut, fn, after = item
+            if not fut._try_start():      # cancelled while queued
+                continue
+            t0 = time.perf_counter()
+            try:
+                result = fn()
+            except BaseException as exc:  # noqa: BLE001 — propagate via future
+                fut.set_exception(exc)
+                continue
+            fut.set_result(result)        # waiters proceed before bookkeeping
+            if after is not None:
+                try:
+                    after(result, t0)
+                except Exception:
+                    log.exception("post-execution hook raised")
+
+    def submit(self, fn: Callable[[], Any], future: Optional[HaloFuture] = None,
+               after: Optional[Callable[[Any, float], None]] = None
+               ) -> HaloFuture:
+        """Enqueue a thunk on this agent's worker; returns its future.
+
+        ``after(result, start_time)`` runs on the worker after the future is
+        completed — used for latency feedback without delaying waiters."""
+        fut = future or HaloFuture()
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError(f"agent {self.name} is shut down")
+            self._ensure_worker()
+            self._queue.put((fut, fn, after))
+        return fut
+
+    def shutdown(self, cancel_pending: bool = True, wait: bool = True) -> None:
+        """Stop the worker; optionally cancel still-queued requests."""
+        with self._lock:
+            self._shutdown = True
+            worker = self._worker
+        if cancel_pending:
+            while True:
+                try:
+                    item = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not None:
+                    item[0].cancel()
+        if worker is not None and worker.is_alive():
+            self._queue.put(None)
+            if wait:
+                worker.join(timeout=5.0)
+        self._worker = None
 
     # stage 1: network manager — validate & normalize the request
     def _ingest(self, record: KernelRecord, args: Tuple, kwargs: Dict):
@@ -158,8 +378,12 @@ class ChildRank:
     pipeline: Tuple[str, ...] = ()
     overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
     failsafe: Optional[Callable] = None
-    # tag -> FIFO of pending results (paper: repeated recv w/ same tag = FIFO)
+    # tag -> FIFO of pending result futures (paper: repeated recv w/ same
+    # tag = FIFO; the mailbox orders by submission, not completion)
     mailboxes: Dict[int, collections.deque] = dataclasses.field(
+        default_factory=lambda: collections.defaultdict(collections.deque))
+    # tag -> FIFO of receive futures posted before any matching send (irecv)
+    recv_waiters: Dict[int, collections.deque] = dataclasses.field(
         default_factory=lambda: collections.defaultdict(collections.deque))
     buffers: Dict[str, BufferHandle] = dataclasses.field(default_factory=dict)
     freed: bool = False
@@ -184,12 +408,18 @@ class RuntimeAgent:
                  registry: Optional[KernelRegistry] = None,
                  manifest: Optional[Manifest] = None,
                  agents: Optional[Sequence[VirtualizationAgent]] = None,
-                 mesh=None):
+                 mesh=None,
+                 scheduler: Optional[CostModelScheduler] = None):
         self.registry = registry or GLOBAL_REGISTRY
         self.manifest = manifest or default_manifest()
         if agents is None:
             agents = [JnpAgent(), XlaAgent(), PallasAgent(), ShardedAgent(mesh)]
         self.agents: Dict[str, VirtualizationAgent] = {a.platform: a for a in agents}
+        # cost-model + measured-latency request scheduler (DESIGN.md §4);
+        # scheduler=False disables it (pure static platform-preference order)
+        if scheduler is None:
+            scheduler = CostModelScheduler.default()
+        self.scheduler = scheduler or None
         self._cr_counter = 0
         self._crs: Dict[int, ChildRank] = {}
         self._buffer_table: Dict[int, Any] = {}      # BufferHandle.uid -> array
@@ -281,22 +511,33 @@ class RuntimeAgent:
         return self._buffer_table[handle.uid]
 
     def free(self, cr: ChildRank) -> None:
-        """MPIX_Free: deallocate the CR and its internal buffers."""
+        """MPIX_Free: deallocate the CR and its internal buffers.  Posted
+        receives are cancelled; undelivered results are dropped."""
         with self._lock:
             for h in cr.buffers.values():
                 self._buffer_table.pop(h.uid, None)
             cr.buffers.clear()
+            waiters = [w for box in cr.recv_waiters.values() for w in box]
+            cr.recv_waiters.clear()
             cr.mailboxes.clear()
             cr.freed = True
             self._crs.pop(cr.uid, None)
+        for w in waiters:
+            w.cancel()
 
     def finalize(self) -> None:
-        """MPIX_Finalize: free all outstanding resources."""
+        """MPIX_Finalize: free all outstanding resources and stop workers."""
         with self._lock:
-            for cr in list(self._crs.values()):
-                self.free(cr)
+            crs = list(self._crs.values())
+        for cr in crs:
+            self.free(cr)
+        for agent in list(self.agents.values()):
+            agent.shutdown(cancel_pending=True, wait=True)
+        with self._lock:
             self._buffer_table.clear()
             self.finalized = True
+        if self.scheduler is not None:
+            self.scheduler.save()
 
     def _check_live(self):
         if self.finalized:
@@ -304,12 +545,31 @@ class RuntimeAgent:
 
     # -- selection + execution --------------------------------------------------
     def _select(self, alias: str, args: Tuple,
-                overrides: Optional[Dict[str, Any]] = None) -> KernelRecord:
+                overrides: Optional[Dict[str, Any]] = None,
+                explore: bool = False) -> KernelRecord:
         overrides = overrides or {}
         allowed = overrides.get("allowed_platforms", self._allowed_platforms())
         pref = overrides.get("platform_preference", self._platform_preference())
+        candidates = None
+        if self.scheduler is not None:
+            try:
+                candidates = self.registry.candidates(
+                    alias, *args, allowed_platforms=allowed,
+                    platform_preference=pref)
+            except SelectionError:
+                candidates = None
+            # exploration only on the DRPC path: a jit trace must never
+            # inline a deliberately-suboptimal record into a step program
+            choice = self.scheduler.choose(alias, candidates, args,
+                                           explore=explore) \
+                if candidates else None
+            if choice is not None:
+                return choice
+        # no cost estimate available for any candidate (or scheduler off):
+        # static preference order + priority + version + round-robin ties
         return self.registry.select(alias, *args, allowed_platforms=allowed,
-                                    platform_preference=pref)
+                                    platform_preference=pref,
+                                    _candidates=candidates)
 
     def dispatch(self, alias: str, *args, overrides: Optional[Dict] = None,
                  **kwargs):
@@ -326,8 +586,7 @@ class RuntimeAgent:
                 return overrides["failsafe"](*args, **kwargs)
             raise
         finally:
-            self._t1_seconds += time.perf_counter() - t0
-            self._t1_calls += 1
+            self._account_t1(time.perf_counter() - t0)
         return record.fn(*args, **kwargs)
 
     def _execute_record(self, record: KernelRecord, cr: ChildRank,
@@ -340,43 +599,43 @@ class RuntimeAgent:
                     f"no agent for platform {record.platform!r} and no fail-safe")
             record, agent = fs, self.agents["jnp"]
         if cr.stateful:
-            state = {n: self._buffer_table[h.uid] for n, h in cr.buffers.items()}
+            # snapshot under the lock: a concurrent free() may be clearing
+            # the CR's buffers while this request is in flight on a worker
+            with self._lock:
+                state = {n: self._buffer_table[h.uid]
+                         for n, h in cr.buffers.items()
+                         if h.uid in self._buffer_table}
             out, new_state = agent.execute(record, *args, state=state, **kwargs)
             with self._lock:
                 for n, h in cr.buffers.items():
-                    if n in new_state:
+                    if n in new_state and h.uid in self._buffer_table:
                         self._buffer_table[h.uid] = new_state[n]
             return out
         return agent.execute(record, *args, **kwargs)
 
-    def _run_cr(self, cr: ChildRank, payload, kwargs: Optional[Dict] = None):
-        co = as_compute_object(payload)
-        args = tuple(co.inputs[k] for k in sorted(co.inputs))
-        kwargs = dict(kwargs or {})
-        kwargs.update(co.meta)
-        t0 = time.perf_counter()
-        aliases = cr.pipeline or (cr.alias,)
-        # claim-style resolution caching: a CR re-resolves only when the
-        # abstract argument signature changes (paper: selection happens at
-        # claim time from the config; runtime overrides may re-resolve)
-        sig = tuple((getattr(a, "shape", None), str(getattr(a, "dtype", "")))
-                    for a in args)
-        records = cr.resolution_cache.get(sig)
-        if records is None:
-            try:
-                records = [self._select(a, args, cr.overrides)
-                           for a in aliases]
-            except SelectionError:
-                self._t1_seconds += time.perf_counter() - t0
-                self._t1_calls += 1
-                if cr.failsafe is not None:
-                    log.warning("CR %d (%s): fail-safe callback engaged",
-                                cr.uid, cr.alias)
-                    return cr.failsafe(*args, **kwargs)
-                raise
-            cr.resolution_cache[sig] = records
-        self._t1_seconds += time.perf_counter() - t0
-        self._t1_calls += 1
+    #: sends per (CR, signature) before re-consulting the scheduler — lets
+    #: measured-latency feedback re-rank records for long-lived CRs without
+    #: paying selection on every request
+    RESOLUTION_TTL = 32
+
+    def _resolve(self, cr: ChildRank, args: Tuple) -> Tuple[List[KernelRecord], Any]:
+        """Claim-style resolution caching: a CR re-resolves when the abstract
+        argument signature changes (paper: selection happens at claim time
+        from the config; runtime overrides may re-resolve) — and, with the
+        scheduler on, every RESOLUTION_TTL sends so feedback can re-rank."""
+        sig = abstract_signature(args)
+        entry = cr.resolution_cache.get(sig)
+        if entry is not None and (self.scheduler is None or entry[1] > 0):
+            entry[1] -= 1
+            return entry[0], sig
+        records = [self._select(a, args, cr.overrides, explore=True)
+                   for a in (cr.pipeline or (cr.alias,))]
+        cr.resolution_cache[sig] = [records, self.RESOLUTION_TTL]
+        return records, sig
+
+    def _execute_chain(self, cr: ChildRank, records: Sequence[KernelRecord],
+                       args: Tuple, kwargs: Dict):
+        """Worker-side body of one request: the CR's record (or pipeline)."""
         out = self._execute_record(records[0], cr, args, kwargs)
         # Pipeline CRs: series of dependent kernel invocations (§IV-C).  The
         # intermediate never returns to the host — the C2MPI SendFwd semantics.
@@ -385,20 +644,128 @@ class RuntimeAgent:
             out = self._execute_record(rec, cr, nxt, {})
         return out
 
-    # -- data-movement interface (§IV-E) ----------------------------------------
-    def send(self, payload, cr: ChildRank, tag: int = 0, **kwargs) -> None:
-        """MPIX_Send: marshal a compute-object to a CR.  Asynchronous: JAX
-        dispatch returns immediately; the (future) result is queued on the
-        CR's mailbox for this tag, to be fetched by ``recv``."""
+    def _deliver(self, target: ChildRank, tag: int, fut: HaloFuture) -> bool:
+        """Under self._lock: hand ``fut`` to the oldest posted irecv waiter
+        for (target, tag), or queue it on the mailbox.  True if mailboxed."""
+        waiters = target.recv_waiters[tag]
+        while waiters:
+            waiter = waiters.popleft()
+            # claiming the waiter (PENDING -> RUNNING) makes a later
+            # cancel() refuse, so a matched receive cannot drop the result
+            # (MPI refuses to cancel a matched receive for the same reason)
+            if waiter._try_start():
+                fut.add_done_callback(waiter._complete_from)
+                return False
+        target.mailboxes[tag].append(fut)
+        return True
+
+    # -- data-movement interface (§IV-E; async surface DESIGN.md §4) -----------
+    def isend(self, payload, cr: ChildRank, tag: int = 0,
+              dest: Optional[ChildRank] = None, mailbox: bool = True,
+              **kwargs) -> HaloFuture:
+        """MPIX_ISend: non-blocking submit.  Selection + routing happen here
+        (caller thread, cheap — T1); execution happens on the selected
+        virtualization agent's worker.  The returned future completes when
+        the worker has dispatched the kernel (results may still be in flight
+        on device — ``MPIX_Wait``/``recv`` add the device sync); the same
+        future is queued FIFO on the (dest or cr) mailbox for this tag, so
+        isend/recv pairs compose.  Pass ``mailbox=False`` when the result
+        will only ever be consumed through the returned handle (Wait/Test):
+        otherwise each un-recv'd future stays queued — and keeps its result
+        array alive — until the CR is freed."""
         self._check_live()
         if cr.freed:
             raise RuntimeError(f"CR {cr.uid} was freed")
-        out = self._run_cr(cr, payload, kwargs)
+        co = as_compute_object(payload)
+        args = tuple(co.inputs[k] for k in sorted(co.inputs))
+        kwargs = dict(kwargs)
+        kwargs.update(co.meta)
+        t0 = time.perf_counter()
+        try:
+            records, sig = self._resolve(cr, args)
+        except SelectionError:
+            self._account_t1(time.perf_counter() - t0)
+            if cr.failsafe is None:
+                raise
+            log.warning("CR %d (%s): fail-safe callback engaged",
+                        cr.uid, cr.alias)
+            records, sig = None, None
+        else:
+            self._account_t1(time.perf_counter() - t0)
+        after = None
+        if records is None:
+            agent = self.agents["jnp"]
+            failsafe = cr.failsafe
+            task = lambda: failsafe(*args, **kwargs)
+        else:
+            agent = self.agents.get(records[0].platform) or self.agents["jnp"]
+            task = lambda: self._execute_chain(cr, records, args, kwargs)
+            if self.scheduler is not None and not cr.pipeline:
+                rec0, sched = records[0], self.scheduler
+
+                def after(out, t0):
+                    # worker-side latency feedback, after waiters were
+                    # released; sampling keeps the device sync off hot keys
+                    if not sched.wants_sample(rec0, sig):
+                        return
+                    try:
+                        jax.block_until_ready(out)
+                    except Exception:   # non-array outputs: dispatch time
+                        pass
+                    sched.observe(rec0, sig, time.perf_counter() - t0)
+        fut = HaloFuture(uid=cr.uid, alias=cr.alias, tag=tag)
+        # mailbox append and worker enqueue are atomic together: per-tag FIFO
+        # order (what recv sees) always equals per-agent execution order
         with self._lock:
-            cr.mailboxes[tag].append(out)
+            # re-check under the lock: a concurrent free() must not let a
+            # request execute against cleared buffers / a drained mailbox
+            if cr.freed or (dest is not None and dest.freed):
+                raise RuntimeError(f"CR {cr.uid} was freed")
+            target = dest or cr
+            mailboxed = self._deliver(target, tag, fut) if mailbox else False
+            try:
+                agent.submit(task, future=fut, after=after)
+            except Exception:
+                # undo the delivery: a future no worker will ever complete
+                # must not strand a later recv/Wait
+                if mailboxed:
+                    try:
+                        target.mailboxes[tag].remove(fut)
+                    except ValueError:
+                        pass
+                fut.cancel()
+                raise
+        return fut
+
+    def irecv(self, cr: ChildRank, tag: int = 0) -> HaloFuture:
+        """MPIX_IRecv: future for the oldest pending result for (cr, tag).
+
+        Unlike the blocking ``recv``, an empty mailbox is not an error: the
+        returned future is *posted* and completes when a matching isend's
+        result lands (MPI's posted-receive semantics)."""
+        self._check_live()
+        with self._lock:
+            if cr.freed:
+                raise RuntimeError(f"CR {cr.uid} was freed")
+            box = cr.mailboxes[tag]
+            if box:
+                return box.popleft()
+            waiter = HaloFuture(uid=cr.uid, alias=cr.alias, tag=tag)
+            cr.recv_waiters[tag].append(waiter)
+            return waiter
+
+    def send(self, payload, cr: ChildRank, tag: int = 0, **kwargs) -> None:
+        """MPIX_Send: blocking path — a thin wait-on-future wrapper over
+        :meth:`isend`.  Waits for completion so errors surface here (the
+        pre-async contract); the result stays queued for ``recv``."""
+        self.isend(payload, cr, tag=tag, **kwargs).result()
 
     def recv(self, cr: ChildRank, tag: int = 0, block: bool = True):
-        """MPIX_Recv: retrieve the oldest pending result for (cr, tag)."""
+        """MPIX_Recv: retrieve the oldest pending result for (cr, tag).
+
+        Always waits for the request's worker execution (MPI_Recv is a
+        blocking receive); ``block=False`` only skips the final device sync.
+        For a true non-blocking fetch use ``irecv`` + ``MPIX_Test``."""
         self._check_live()
         with self._lock:
             box = cr.mailboxes[tag]
@@ -406,6 +773,8 @@ class RuntimeAgent:
                 raise RuntimeError(
                     f"MPIX_Recv on empty mailbox (cr={cr.uid}, tag={tag})")
             out = box.popleft()
+        if isinstance(out, HaloFuture):
+            out = out.result()
         if block:
             out = jax.block_until_ready(out)
         return out
@@ -415,10 +784,7 @@ class RuntimeAgent:
         """MPIX_SendFwd: like send, but the result is forwarded to ``dest``'s
         mailbox instead of returning to the source PR.  Device-resident end to
         end (the unified-memory adaptation — only references move)."""
-        self._check_live()
-        out = self._run_cr(cr, payload, kwargs)
-        with self._lock:
-            dest.mailboxes[tag].append(out)
+        self.isend(payload, cr, tag=tag, dest=dest, **kwargs).result()
 
     def invoke(self, cr: ChildRank, *args, tag: int = 0, **kwargs):
         """Synchronous convenience: send + recv in one call."""
@@ -426,6 +792,12 @@ class RuntimeAgent:
         return self.recv(cr, tag=tag)
 
     # -- overhead instrumentation (paper T1) -------------------------------------
+    def _account_t1(self, dt: float) -> None:
+        # isend is a supported-concurrent path; unlocked += would drop counts
+        with self._lock:
+            self._t1_seconds += dt
+            self._t1_calls += 1
+
     @property
     def t1_seconds_per_call(self) -> float:
         return self._t1_seconds / max(1, self._t1_calls)

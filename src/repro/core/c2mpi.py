@@ -9,15 +9,25 @@ session, so host applications read exactly like the paper's template:
     out = MPIX_Recv(cr)
     MPIX_Finalize()
 
+Non-blocking variants return :class:`HaloFuture` request handles
+(DESIGN.md §4), mirroring MPI's ``MPI_Isend``/``MPI_Irecv``/``MPI_Wait``:
+
+    req = MPIX_ISend((a, b), cr)      # returns immediately
+    ...                               # overlap host work here
+    out = MPIX_Wait(MPIX_IRecv(cr))   # or MPIX_Test(req) to poll
+
 The pythonic object API (``halo_session().invoke(...)``) and the trace-safe
 ``halo_dispatch`` used inside jitted model code sit on the same runtime agent.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Dict, Optional
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from .agents import ChildRank, RuntimeAgent
+import jax
+
+from .agents import ChildRank, HaloFuture, RuntimeAgent
 from .compute_object import BufferHandle, ComputeObject, as_compute_object
 from .manifest import Manifest, default_manifest
 from .registry import GLOBAL_REGISTRY, KernelRegistry
@@ -93,6 +103,57 @@ def MPIX_Recv(child_rank: ChildRank, tag: int = 0, block: bool = True):
 def MPIX_SendFwd(payload, child_rank: ChildRank, dest: ChildRank,
                  tag: int = 0, **kwargs) -> None:
     halo_session().send_fwd(payload, child_rank, dest, tag=tag, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Non-blocking data movement (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+def MPIX_ISend(payload, child_rank: ChildRank, tag: int = 0,
+               mailbox: bool = True, **kwargs) -> HaloFuture:
+    """Non-blocking send: submit and return the request handle immediately.
+
+    The result is also queued FIFO on the CR's mailbox for ``tag``, so it can
+    be fetched by ``MPIX_Recv``/``MPIX_IRecv`` as with the blocking path.
+    Pass ``mailbox=False`` when only the handle will be waited on — un-recv'd
+    mailbox entries live (with their result arrays) until MPIX_Free."""
+    return halo_session().isend(payload, child_rank, tag=tag,
+                                mailbox=mailbox, **kwargs)
+
+
+def MPIX_IRecv(child_rank: ChildRank, tag: int = 0) -> HaloFuture:
+    """Non-blocking receive: request handle for the oldest pending result.
+
+    May be posted *before* the matching send; the handle completes when a
+    result for (cr, tag) lands."""
+    return halo_session().irecv(child_rank, tag=tag)
+
+
+def MPIX_Wait(request: HaloFuture, timeout: Optional[float] = None):
+    """Block until the request completes; return its device-ready result.
+
+    Re-raises the execution error if the request failed, and
+    :class:`repro.core.agents.HaloCancelledError` if it was cancelled."""
+    return jax.block_until_ready(request.result(timeout))
+
+
+def MPIX_Waitall(requests: Sequence[HaloFuture],
+                 timeout: Optional[float] = None) -> List[Any]:
+    """Wait for every request; ``timeout`` is one shared deadline, not
+    per-request."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    out = []
+    for r in requests:
+        left = None if deadline is None else max(0.0, deadline - time.monotonic())
+        out.append(MPIX_Wait(r, left))
+    return out
+
+
+def MPIX_Test(request: HaloFuture) -> Tuple[bool, Optional[Any]]:
+    """Non-blocking completion poll: ``(True, result)`` once complete,
+    ``(False, None)`` while in flight.  Errors surface on completion."""
+    if not request.done():
+        return False, None
+    return True, MPIX_Wait(request)
 
 
 # ---------------------------------------------------------------------------

@@ -152,32 +152,16 @@ class KernelRegistry:
         return None
 
     # -- the selection process (§IV-C) ----------------------------------------
-    def select(self, alias: str, *args,
-               allowed_platforms: Sequence[str] = PLATFORM_PREFERENCE,
-               platform_preference: Optional[Sequence[str]] = None,
-               required_attrs: Optional[KernelAttributes] = None,
-               **kwargs) -> KernelRecord:
-        if alias not in self._records:
-            mapped = self.resolve_fid(alias)
-            if mapped is None:
-                raise SelectionError(f"unknown kernel alias/sw_fid: {alias!r}")
-            alias = mapped
-        pref = tuple(platform_preference or PLATFORM_PREFERENCE)
-        allowed = set(allowed_platforms)
-        candidates = [
-            r for r in self._records[alias]
-            if r.platform in allowed
-            and (required_attrs is None or r.attrs.matches(required_attrs))
-            and r.feasible(*args, **kwargs)
-        ]
-        if not candidates:
-            fs = self.failsafe(alias)
-            if fs is not None:
-                log.warning("alias %r: no feasible candidate; fail-safe mode", alias)
-                return fs
-            raise SelectionError(
-                f"alias {alias!r}: no feasible candidate and no fail-safe registered")
+    def _canonical(self, alias: str) -> str:
+        if alias in self._records:
+            return alias
+        mapped = self.resolve_fid(alias)
+        if mapped is None:
+            raise SelectionError(f"unknown kernel alias/sw_fid: {alias!r}")
+        return mapped
 
+    @staticmethod
+    def _rank(pref: Tuple[str, ...]):
         def rank(r: KernelRecord):
             try:
                 p = pref.index(r.platform)
@@ -185,9 +169,54 @@ class KernelRegistry:
                 p = len(pref)
             # lower tuple = better
             return (p, -r.priority, tuple(-v for v in r.attrs.version_tuple()))
+        return rank
 
-        best = min(rank(r) for r in candidates)
-        ties = [r for r in candidates if rank(r) == best]
+    def candidates(self, alias: str, *args,
+                   allowed_platforms: Sequence[str] = PLATFORM_PREFERENCE,
+                   platform_preference: Optional[Sequence[str]] = None,
+                   required_attrs: Optional[KernelAttributes] = None,
+                   **kwargs) -> List[KernelRecord]:
+        """All feasible records for an alias, best-static-rank first.
+
+        Shared by :meth:`select` (static order) and the cost-model scheduler
+        (which re-ranks by estimated latency).  Raises for unknown aliases;
+        returns ``[]`` when nothing feasible survives the filters."""
+        alias = self._canonical(alias)
+        pref = tuple(platform_preference or PLATFORM_PREFERENCE)
+        allowed = set(allowed_platforms)
+        out = [
+            r for r in self._records[alias]
+            if r.platform in allowed
+            and (required_attrs is None or r.attrs.matches(required_attrs))
+            and r.feasible(*args, **kwargs)
+        ]
+        out.sort(key=self._rank(pref))
+        return out
+
+    def select(self, alias: str, *args,
+               allowed_platforms: Sequence[str] = PLATFORM_PREFERENCE,
+               platform_preference: Optional[Sequence[str]] = None,
+               required_attrs: Optional[KernelAttributes] = None,
+               _candidates: Optional[List[KernelRecord]] = None,
+               **kwargs) -> KernelRecord:
+        """Pick one record.  ``_candidates`` short-circuits the filter/sort
+        when the caller already holds this call's candidates() result."""
+        alias = self._canonical(alias)
+        cands = _candidates if _candidates is not None else self.candidates(
+            alias, *args, allowed_platforms=allowed_platforms,
+            platform_preference=platform_preference,
+            required_attrs=required_attrs, **kwargs)
+        if not cands:
+            fs = self.failsafe(alias)
+            if fs is not None:
+                log.warning("alias %r: no feasible candidate; fail-safe mode", alias)
+                return fs
+            raise SelectionError(
+                f"alias {alias!r}: no feasible candidate and no fail-safe registered")
+        # cands is sorted by rank, so the exact ties are its leading run
+        rank = self._rank(tuple(platform_preference or PLATFORM_PREFERENCE))
+        best = rank(cands[0])
+        ties = list(itertools.takewhile(lambda r: rank(r) == best, cands))
         if len(ties) == 1:
             return ties[0]
         # round-robin recommendation strategy among exact ties (§V-C)

@@ -1,0 +1,229 @@
+"""Cost-model request scheduler + persistent autotune cache (DESIGN.md §4).
+
+The registry's static selection (platform preference → priority → version →
+round-robin) answers "which record *should* be fastest on this target"; the
+scheduler answers "which record *is* fastest for these argument shapes",
+using two information sources, best first:
+
+1. **Measured latency** — an EMA of wall-clock seconds per
+   ``(alias, platform, abstract-arg-signature)`` key, fed back by the runtime
+   agent's worker after each DRPC execution.  The first observation per key
+   is discarded as warmup (it includes jit compilation), so estimates track
+   steady-state latency.  The table persists as a small JSON autotune cache
+   (``HALO_AUTOTUNE_CACHE`` env var or an explicit path) so a second process
+   starts warm.
+2. **Analytic cost model** — ``KernelRecord.cost_model(*args) -> seconds``,
+   the Table-II attribute that was previously registered but unused at
+   dispatch.
+
+Records with neither source are left to the static selection order, so a
+registry without cost models behaves exactly as before this subsystem
+existed.  This is the task-queue + cost-model scheduling structure that
+runtime-support frameworks (Thomadakis & Chrisochoides, arXiv:2303.02543;
+ORCHA, arXiv:2507.09337) use to turn a portability layer into a
+performance-portability layer.
+"""
+from __future__ import annotations
+
+import json
+import logging
+import os
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .registry import KernelRecord
+
+log = logging.getLogger("repro.halo.scheduler")
+
+SigType = Tuple[Tuple[Any, str], ...]
+
+
+def abstract_signature(args: Sequence[Any]) -> SigType:
+    """Shape/dtype signature of positional args — the resolution-cache and
+    autotune key.  Works on concrete arrays, tracers, and ShapeDtypeStructs."""
+    return tuple((tuple(getattr(a, "shape", ()) or ()),
+                  str(getattr(a, "dtype", type(a).__name__)))
+                 for a in args)
+
+
+def _sig_str(sig: SigType) -> str:
+    return ",".join(f"{dt}[{'x'.join(map(str, shape))}]" for shape, dt in sig)
+
+
+def _key(record: KernelRecord, sig: SigType) -> str:
+    """Measurement key.  Includes priority + version so two records on the
+    same alias+platform (registry supports replicas, §V-C) keep separate
+    latency tables."""
+    return (f"{record.alias}|{record.platform}|"
+            f"{record.priority}:{record.attrs.sw_verid}|{_sig_str(sig)}")
+
+
+class CostModelScheduler:
+    """Latency-aware record selection with a persistent measurement table."""
+
+    #: EMA smoothing factor for steady-state latency updates.
+    alpha: float = 0.25
+    #: autosave the cache every N observations (when a path is configured).
+    save_every: int = 64
+    #: keep timing every request until a key has this many kept samples ...
+    min_samples: int = 8
+    #: ... then only time every Nth request (bounds instrumentation cost).
+    sample_every: int = 8
+    #: route every Nth DRPC selection to the best-ranked *unmeasured*
+    #: candidate so greedy choice cannot lock out an untried record.
+    explore_every: int = 16
+
+    def __init__(self, cache_path: Optional[os.PathLike] = None):
+        self._lock = threading.Lock()
+        # key -> [n_observations, ema_seconds]; n counts *kept* samples
+        # (the warmup/compile sample per key is discarded, see observe()).
+        self._measured: Dict[str, List[float]] = {}
+        self._warmed: Dict[str, bool] = {}
+        self._attempts: Dict[str, int] = {}    # wants_sample() call counts
+        self._chooses: Dict[str, int] = {}     # choose() call counts per key
+        self._since_save = 0
+        self.cache_path = Path(cache_path) if cache_path else None
+        if self.cache_path is not None and self.cache_path.exists():
+            self.load(self.cache_path)
+
+    @classmethod
+    def default(cls) -> "CostModelScheduler":
+        """Process-default scheduler: persistent iff HALO_AUTOTUNE_CACHE set."""
+        return cls(cache_path=os.environ.get("HALO_AUTOTUNE_CACHE") or None)
+
+    # -- measurement feedback ------------------------------------------------
+    def observe(self, record: KernelRecord, sig: SigType,
+                seconds: float) -> None:
+        """Record one executed-request latency for (record, sig).
+
+        The first sample per key *in this process* is discarded as warmup
+        (it includes jit compilation) — including for keys loaded from a
+        persisted cache, whose EMA must not be poisoned by a fresh process's
+        compile time."""
+        key = _key(record, sig)
+        with self._lock:
+            if not self._warmed.get(key):
+                self._warmed[key] = True
+                return
+            ent = self._measured.get(key)
+            if ent is None:
+                self._measured[key] = [1, seconds]
+            else:
+                ent[0] += 1
+                ent[1] += self.alpha * (seconds - ent[1])
+            self._since_save += 1
+            due = (self.cache_path is not None
+                   and self._since_save >= self.save_every)
+            if due:
+                self._since_save = 0
+        if due:
+            self.save()
+
+    def measured(self, record: KernelRecord, sig: SigType) -> Optional[float]:
+        with self._lock:
+            ent = self._measured.get(_key(record, sig))
+            return ent[1] if ent else None
+
+    def wants_sample(self, record: KernelRecord, sig: SigType) -> bool:
+        """Should the executor pay for timing this request?  Every request
+        until ``min_samples`` are kept, then one in ``sample_every`` — keeps
+        the EMA live without a device sync on every call."""
+        key = _key(record, sig)
+        with self._lock:
+            n = self._attempts.get(key, 0)
+            self._attempts[key] = n + 1
+            ent = self._measured.get(key)
+            if ent is None or ent[0] < self.min_samples:
+                return True
+            return n % self.sample_every == 0
+
+    # -- selection -----------------------------------------------------------
+    def estimate(self, record: KernelRecord, sig: SigType, args: Sequence[Any]
+                 ) -> Optional[float]:
+        """Best available latency estimate for one record, or None."""
+        est = self.measured(record, sig)
+        if est is not None:
+            return est
+        if record.cost_model is not None:
+            try:
+                return float(record.cost_model(*args))
+            except Exception:
+                log.debug("cost_model raised for %s/%s", record.alias,
+                          record.platform, exc_info=True)
+        return None
+
+    def choose(self, alias: str, candidates: Sequence[KernelRecord],
+               args: Sequence[Any], explore: bool = False
+               ) -> Optional[KernelRecord]:
+        """Pick the cheapest estimated candidate; None defers to the static
+        selection order (no candidate has any estimate).  Ties between equal
+        estimates keep the candidates' given (preference) order stable.
+
+        With ``explore=True`` (DRPC path only — never inside a jit trace),
+        every ``explore_every``-th call instead returns the best-ranked
+        candidate that has no estimate yet, so it can acquire measurements
+        instead of being greedily locked out forever."""
+        if not candidates:
+            return None
+        sig = abstract_signature(args)
+        estimates = [self.estimate(rec, sig, args) for rec in candidates]
+        if explore and any(e is None for e in estimates) \
+                and any(e is not None for e in estimates):
+            key = f"{alias}|{_sig_str(sig)}"
+            with self._lock:
+                n = self._chooses.get(key, 0)
+                self._chooses[key] = n + 1
+            if n % self.explore_every == self.explore_every - 1:
+                return next(rec for rec, e in zip(candidates, estimates)
+                            if e is None)
+        best: Optional[Tuple[float, int]] = None
+        for i, est in enumerate(estimates):
+            if est is not None and (best is None or est < best[0]):
+                best = (est, i)
+        return candidates[best[1]] if best is not None else None
+
+    # -- persistence ---------------------------------------------------------
+    def load(self, path: os.PathLike) -> None:
+        """Ingest a persisted table.  Loaded keys are *not* marked warmed:
+        the next process's first sample still includes jit compile and must
+        be discarded, not folded into the persisted EMA."""
+        try:
+            table = json.loads(Path(path).read_text())
+            entries = [(str(k), int(n), float(ema))
+                       for k, (n, ema) in table.items()]
+        except (OSError, ValueError, TypeError):
+            log.warning("autotune cache %s unreadable; starting cold", path)
+            return
+        with self._lock:
+            for key, n, ema in entries:
+                self._measured[key] = [n, ema]
+
+    def save(self, path: Optional[os.PathLike] = None) -> None:
+        """Atomically persist the measurement table (no-op when memory-only).
+
+        Merges with whatever is on disk — the cache is shared across
+        sessions/processes, and a plain overwrite would clobber keys another
+        writer learned since our load.  On key conflict the entry with more
+        kept samples wins."""
+        path = Path(path) if path else self.cache_path
+        if path is None:
+            return
+        with self._lock:
+            table = {k: list(v) for k, v in self._measured.items()}
+        try:
+            disk = json.loads(path.read_text())
+            for key, ent in disk.items():
+                n, ema = int(ent[0]), float(ent[1])
+                if key not in table or table[key][0] < n:
+                    table[key] = [n, ema]
+        except (OSError, ValueError, TypeError, IndexError):
+            pass                               # absent/corrupt: ours wins
+        tmp = path.with_suffix(path.suffix + ".tmp")
+        try:
+            tmp.parent.mkdir(parents=True, exist_ok=True)
+            tmp.write_text(json.dumps(table, indent=1, sort_keys=True))
+            tmp.replace(path)
+        except OSError:
+            log.warning("could not persist autotune cache to %s", path,
+                        exc_info=True)

@@ -1,6 +1,9 @@
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                            " --xla_force_host_platform_device_count=512").strip()
+# the dry run lowers against the forced host platform; never let a locally
+# attached accelerator (libtpu) claim the backend instead
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
@@ -248,11 +251,20 @@ def _with_repeats(cfg: ArchConfig, reps: Dict[int, int]) -> ArchConfig:
     return dataclasses.replace(cfg, stages=stages)
 
 
+def _cost_analysis(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() as a flat dict (older JAX returns a
+    one-element list of per-computation dicts)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _cost_of(cfg: ArchConfig, shape: InputShape, mesh, ctx,
              microbatches: int) -> Dict[str, float]:
     lowered = lower_cell(cfg, shape, mesh, ctx, microbatches=microbatches)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     colls = parse_collectives(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),
@@ -331,7 +343,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 "alias_bytes": int(mem.alias_size_in_bytes),
                 "code_bytes": int(mem.generated_code_size_in_bytes),
             }
-            ca = compiled.cost_analysis() or {}
+            ca = _cost_analysis(compiled)
             rec["cost"] = {
                 "flops": float(ca.get("flops", 0.0)),
                 "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -40,22 +40,21 @@ def main(argv=None):
     queue = RequestQueue(engine, params, args.batch, args.prompt_len)
 
     rng = jax.random.split(key, args.requests)
-    for i in range(args.requests):
-        prompt = list(map(int, jax.random.randint(
-            rng[i], (args.prompt_len,), 0, cfg.vocab_size)))
-        queue.submit(prompt, max_new=args.max_new)
-
     t0 = time.perf_counter()
-    done = []
-    while queue._queue:
-        done.extend(queue.flush())
+    with queue:                      # background drain loop (DESIGN.md §6)
+        futs = []
+        for i in range(args.requests):
+            prompt = list(map(int, jax.random.randint(
+                rng[i], (args.prompt_len,), 0, cfg.vocab_size)))
+            futs.append(queue.submit(prompt, max_new=args.max_new))
+        results = [f.result() for f in futs]
     dt = time.perf_counter() - t0
-    toks = sum(len(r.result) for r in done)
-    print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
+    toks = sum(len(r) for r in results)
+    print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s)")
-    for r in done[:3]:
-        print(f"  req {r.uid}: {r.result[:8]}…")
-    return done
+    for f, r in list(zip(futs, results))[:3]:
+        print(f"  req {f.uid}: {r[:8]}…")
+    return results
 
 
 if __name__ == "__main__":

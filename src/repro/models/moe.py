@@ -38,6 +38,17 @@ from .layers import act_fn, dense
 Params = Dict[str, jax.Array]
 
 
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """jax.shard_map with replication checking off, on any supported JAX
+    (older releases ship it as jax.experimental.shard_map with check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def moe_param_specs(d_model: int, m: MoEConfig, dtype) -> Dict[str, ParamSpec]:
     e, f = m.n_experts, m.d_ff_expert
     specs = {
@@ -247,14 +258,13 @@ def moe_layer(p: Params, x: jax.Array, m: MoEConfig, act: str
         tok_spec = P((*dp_axes, ep_axis), None) if a2a_ok else P(dp_axes, None)
         fn = functools.partial(body, m=m, act=act, ep_axis=ep_axis,
                                n_ep=n_ep, dp_axes=dp_axes)
-        y, aux = jax.shard_map(
+        y, aux = _shard_map(
             fn, mesh=ctx.mesh,
             in_specs=(tok_spec, P(None, None),
                       P(ep_axis, dp_axes or None, None),
                       P(ep_axis, dp_axes or None, None),
                       P(ep_axis, None, dp_axes or None)),
             out_specs=(tok_spec, P()),
-            check_vma=False,
         )(x2, p["router"], p["we_g"], p["we_u"], p["we_d"])
 
     if y_sh is not None:

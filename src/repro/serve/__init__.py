@@ -1,2 +1,2 @@
-from .engine import ServeEngine
+from .engine import Request, RequestQueue, ServeEngine
 from .kvcache import pad_caches

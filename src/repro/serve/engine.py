@@ -3,21 +3,30 @@ cache (one compiled prefill program, one compiled decode program).
 
 Request flow: ``generate`` takes a batch of equal-padded prompts, prefills
 once, then runs jitted single-token decode steps, sampling greedy or with
-temperature.  ``RequestQueue`` provides a minimal continuous-batching front:
-requests accumulate until the batch is full (or ``flush``), then run as one
-``generate`` — the production pattern for a fixed-shape step function.
+temperature.  ``RequestQueue`` is the continuous-batching front on the async
+C2MPI surface (DESIGN.md §4/§6): ``submit`` returns a
+:class:`~repro.core.agents.HaloFuture` immediately, and a background drain
+loop runs one batched ``generate`` whenever the batch fills *or* the oldest
+request has waited ``max_delay`` seconds — partial batches are padded, so
+latency is bounded without giving up the fixed-shape step function.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
+import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..core.agents import HaloFuture
 from ..models.transformer import Model
 from .kvcache import pad_caches
+
+log = logging.getLogger("repro.serve.engine")
 
 PyTree = Any
 
@@ -72,45 +81,136 @@ class Request:
     prompt: List[int]
     max_new: int
     result: Optional[List[int]] = None
+    future: Optional[HaloFuture] = None
+    submitted_at: float = 0.0
 
 
 class RequestQueue:
-    """Minimal batched-request front for the fixed-shape engine."""
+    """Continuous-batching front for the fixed-shape engine.
+
+    ``submit`` enqueues and returns a future for the request's generated
+    tokens.  Batches run either synchronously via ``flush`` or from the
+    background drain loop (``start``/``stop``, or ``with queue:``), which
+    flushes as soon as the batch is full or the oldest submission is
+    ``max_delay`` seconds old — a partial batch is padded rather than held
+    hostage to the fill rate."""
 
     def __init__(self, engine: ServeEngine, params, batch_size: int,
-                 prompt_len: int):
+                 prompt_len: int, max_delay: float = 0.05):
         self.engine = engine
         self.params = params
         self.batch_size = batch_size
         self.prompt_len = prompt_len
+        self.max_delay = max_delay
         self._queue: List[Request] = []
+        self._cond = threading.Condition()
+        self._drain: Optional[threading.Thread] = None
+        self._stop = False
         self._uid = 0
 
-    def submit(self, prompt: List[int], max_new: int = 16) -> int:
-        self._uid += 1
-        self._queue.append(Request(self._uid, prompt, max_new))
-        return self._uid
+    def submit(self, prompt: List[int], max_new: int = 16) -> HaloFuture:
+        with self._cond:
+            if self._stop:
+                raise RuntimeError(
+                    "RequestQueue is stopped; start() it again to submit")
+            self._uid += 1
+            fut = HaloFuture(uid=self._uid, alias="generate")
+            self._queue.append(Request(self._uid, prompt, max_new, future=fut,
+                                       submitted_at=time.monotonic()))
+            self._cond.notify_all()
+        return fut
 
     def ready(self) -> bool:
         return len(self._queue) >= self.batch_size
 
+    def pending(self) -> int:
+        return len(self._queue)
+
     def flush(self) -> List[Request]:
-        """Run one batched generate over the queued (padded) requests."""
-        batch = self._queue[: self.batch_size]
-        self._queue = self._queue[self.batch_size:]
+        """Run one batched generate over the oldest queued (padded) requests,
+        completing their futures."""
+        with self._cond:
+            batch = self._queue[: self.batch_size]
+            self._queue = self._queue[self.batch_size:]
         if not batch:
             return []
+        live = list(batch)
         while len(batch) < self.batch_size:       # pad with echo of first
             batch.append(Request(-1, batch[0].prompt, batch[0].max_new))
         toks = jnp.asarray([
             (r.prompt + [0] * self.prompt_len)[: self.prompt_len]
             for r in batch], jnp.int32)
         max_new = max(r.max_new for r in batch)
-        gen = self.engine.generate(self.params, toks, max_new)
-        gen = jax.device_get(gen)
-        out = []
+        try:
+            gen = jax.device_get(
+                self.engine.generate(self.params, toks, max_new))
+        except Exception as exc:
+            for r in live:
+                if r.future is not None:
+                    r.future.set_exception(exc)
+            raise
         for i, r in enumerate(batch):
             if r.uid >= 0:
                 r.result = list(map(int, gen[i, : r.max_new]))
-                out.append(r)
-        return out
+                if r.future is not None:
+                    r.future.set_result(r.result)
+        return live
+
+    # -- background drain loop (continuous batching) -------------------------
+    def start(self) -> "RequestQueue":
+        if self._drain is None or not self._drain.is_alive():
+            self._stop = False
+            self._drain = threading.Thread(target=self._drain_loop,
+                                           name="serve-drain", daemon=True)
+            self._drain.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the loop; by default serve whatever is still queued first."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        if self._drain is not None:
+            self._drain.join()
+            self._drain = None
+        if drain:
+            while self._queue:
+                try:
+                    self.flush()
+                except Exception:   # that batch's futures carry the error
+                    log.exception("flush failed during drain")
+        else:
+            with self._cond:
+                dropped, self._queue = self._queue, []
+            for r in dropped:
+                if r.future is not None:
+                    r.future.cancel()
+
+    __enter__ = start
+
+    def __exit__(self, *exc_info) -> None:
+        self.stop(drain=exc_info[0] is None)
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._stop and not self._queue:
+                    self._cond.wait()
+                if self._stop:
+                    return
+                # deadline batching: run as soon as the batch is full or the
+                # oldest request has waited long enough
+                while not self._stop and len(self._queue) < self.batch_size:
+                    left = (self._queue[0].submitted_at + self.max_delay
+                            - time.monotonic()) if self._queue else None
+                    if left is None or left <= 0:
+                        break
+                    self._cond.wait(timeout=left)
+                if self._stop or not self._queue:
+                    continue
+            try:
+                self.flush()
+            except Exception:
+                # the failed batch's futures already carry the exception; the
+                # loop must survive to serve later submissions
+                log.exception("flush failed; drain loop continues")

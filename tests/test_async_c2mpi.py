@@ -1,0 +1,256 @@
+"""Async C2MPI surface: MPIX_ISend/IRecv/Wait/Test futures, per-tag FIFO
+ordering under concurrency, cancellation, and error propagation (DESIGN.md §4).
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HaloCancelledError, HaloFuture, KernelRecord,
+                        KernelRegistry, RuntimeAgent, default_manifest)
+from repro.kernels import register_all
+from repro.kernels.spmm import dense_to_bell, random_block_sparse
+
+
+@pytest.fixture()
+def agent():
+    registry = KernelRegistry()
+    register_all(registry)
+    a = RuntimeAgent(registry=registry, manifest=default_manifest())
+    yield a
+    a.finalize()
+
+
+def _alias_args(rng):
+    """Valid positional args for every registered kernel alias."""
+    k = jax.random.split(rng, 8)
+    n = 64
+    a = jax.random.normal(k[0], (n, n))
+    b = jax.random.normal(k[1], (n, n)) + 3.0
+    x = jax.random.normal(k[2], (n,))
+    sp = random_block_sparse(k[3], n, n, 32, 64, 0.5)
+    vals, idx = dense_to_bell(sp, 32, 64)
+    q = jax.random.normal(k[4], (1, 4, 32, 32))
+    kv = jax.random.normal(k[5], (1, 2, 32, 32))
+    B, S, H, P, G, N = 1, 32, 2, 8, 1, 16
+    ks = jax.random.split(k[6], 6)
+    ssd_x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    ssd_dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    ssd_a = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    ssd_b = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    ssd_c = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    ssd_d = jax.random.normal(ks[5], (H,)) * 0.1
+    km = jax.random.split(k[7], 4)
+    return {
+        "MMM": (a, b),
+        "EWMM": (a, b),
+        "EWMD": (a, b),
+        "MVM": (a, x),
+        "VDP": (x, x),
+        "JS": (a + n * jnp.eye(n), jnp.zeros(n), x),
+        "1DCONV": (jax.random.normal(k[0], (2048,)),
+                   jax.random.normal(k[1], (9,))),
+        "SMMM": (vals, idx, b),
+        "RMSNORM": (a, x),
+        "FLASH_ATTN": (q, kv, kv),
+        "GQA_DECODE": (q, kv, kv),
+        "SSD": (ssd_x, ssd_dt, ssd_a, ssd_b, ssd_c, ssd_d),
+        "SSD_DECODE": (jnp.zeros((B, H, P, N)), ssd_x[:, 0], ssd_dt[:, 0],
+                       ssd_a, ssd_b[:, 0], ssd_c[:, 0], ssd_d),
+        "MOE_FFN": (jax.random.normal(km[0], (2, 4, 16)),
+                    jax.random.normal(km[1], (2, 16, 32)) * 0.1,
+                    jax.random.normal(km[2], (2, 16, 32)) * 0.1,
+                    jax.random.normal(km[3], (2, 32, 16)) * 0.1),
+    }
+
+
+def test_isend_wait_matches_blocking_for_all_registered_aliases(agent, rng):
+    """Acceptance: async round trips are bit-for-bit comparable with the
+    blocking path for every alias in the registry."""
+    jobs = _alias_args(rng)
+    assert sorted(jobs) == agent.registry.aliases()   # full coverage
+    for alias, args in jobs.items():
+        cr_sync = agent.claim(alias)
+        agent.send(args, cr_sync)
+        ref = agent.recv(cr_sync)
+        cr_async = agent.claim(alias)
+        fut = agent.isend(args, cr_async)
+        out = jax.block_until_ready(fut.result(timeout=60))
+        for l_ref, l_out in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+            np.testing.assert_allclose(np.asarray(l_out), np.asarray(l_ref),
+                                       rtol=2e-4, atol=2e-4, err_msg=alias)
+        # the mailbox still serves the same result to a blocking recv
+        out2 = agent.recv(cr_async)
+        for l_out, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(out2)):
+            np.testing.assert_array_equal(np.asarray(l_out), np.asarray(l2))
+
+
+def test_fifo_per_tag_under_concurrent_isend(agent):
+    """Many threads isend-ing interleaved tags on one CR: per-tag recv order
+    must equal per-tag submission order (the paper's FIFO mailbox rule)."""
+    eye = jnp.eye(4)
+    cr = agent.claim("MMM")
+    n_threads, n_each = 4, 16
+    barrier = threading.Barrier(n_threads)
+
+    # each thread owns one tag, so per-tag submission order is the thread's
+    # own program order even though threads interleave globally
+    def worker(tag):
+        barrier.wait()
+        for i in range(n_each):
+            agent.isend((eye * (i + 1), eye), cr, tag=tag)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for tag in range(n_threads):
+        got = [int(np.asarray(agent.recv(cr, tag=tag))[0, 0]) - 1
+               for _ in range(n_each)]
+        assert got == list(range(n_each)), tag
+
+
+def test_irecv_posted_before_send_completes(agent):
+    cr = agent.claim("MMM")
+    waiter = agent.irecv(cr, tag=3)
+    assert not waiter.done()
+    agent.isend((2.0 * jnp.eye(4), jnp.eye(4)), cr, tag=3)
+    np.testing.assert_allclose(np.asarray(waiter.result(timeout=30)),
+                               2.0 * np.eye(4))
+    # a second send on the tag goes to the mailbox, not the used-up waiter
+    agent.send((3.0 * jnp.eye(4), jnp.eye(4)), cr, tag=3)
+    np.testing.assert_allclose(np.asarray(agent.recv(cr, tag=3)),
+                               3.0 * np.eye(4))
+
+
+def test_mpix_test_polls_to_completion(agent):
+    from repro.core import MPIX_Test
+    cr = agent.claim("VDP")
+    x = jnp.ones(128)
+    fut = agent.isend((x, x), cr)
+    deadline = time.monotonic() + 30
+    done, result = MPIX_Test(fut)
+    while not done and time.monotonic() < deadline:
+        time.sleep(0.001)
+        done, result = MPIX_Test(fut)
+    assert done
+    np.testing.assert_allclose(np.asarray(result), 128.0, rtol=1e-6)
+
+
+def test_cancellation_propagates_to_wait(agent):
+    """A request cancelled while queued never runs; waiting on it raises."""
+    gate = threading.Event()
+
+    def slow(x):
+        gate.wait(10)
+        return x
+
+    agent.registry.register(KernelRecord(alias="SLOW", fn=slow,
+                                         platform="jnp", is_failsafe=True))
+    cr = agent.claim("SLOW")
+    blocker = agent.isend((jnp.ones(2),), cr)      # occupies the jnp worker
+    queued = agent.isend((jnp.ones(2),), cr)
+    assert queued.cancel()
+    assert queued.cancelled()
+    gate.set()
+    blocker.result(timeout=30)
+    with pytest.raises(HaloCancelledError):
+        queued.result(timeout=5)
+    # the cancelled future still sits in the mailbox in FIFO position 2
+    agent.recv(cr)                                  # blocker's result
+    with pytest.raises(HaloCancelledError):
+        agent.recv(cr)
+
+
+def test_execution_error_propagates_to_wait_and_blocking_send(agent):
+    def boom(x):
+        raise ValueError("kernel exploded")
+
+    agent.registry.register(KernelRecord(alias="BOOM", fn=boom,
+                                         platform="jnp", is_failsafe=True))
+    cr = agent.claim("BOOM")
+    fut = agent.isend((jnp.ones(2),), cr)
+    with pytest.raises(ValueError, match="kernel exploded"):
+        fut.result(timeout=30)
+    assert isinstance(fut.exception(), ValueError)
+    # the blocking wrapper surfaces the same error at send time
+    cr2 = agent.claim("BOOM")
+    with pytest.raises(ValueError, match="kernel exploded"):
+        agent.send((jnp.ones(2),), cr2)
+
+
+def test_async_failsafe_callback(agent):
+    """Claim-level fail-safe engages on the async path too."""
+    cr = agent.claim("NO_SUCH_KERNEL", failsafe=lambda *a: jnp.zeros((2, 2)))
+    fut = agent.isend((jnp.ones((2, 2)),), cr)
+    np.testing.assert_allclose(np.asarray(fut.result(timeout=30)), 0.0)
+
+
+def test_async_overlap_across_substrates(agent):
+    """Requests routed to different agents make progress independently: a
+    stalled jnp worker must not block an xla-routed request."""
+    gate = threading.Event()
+
+    def stall(x):
+        gate.wait(10)
+        return x
+
+    agent.registry.register(KernelRecord(alias="STALL", fn=stall,
+                                         platform="jnp", is_failsafe=True))
+    stalled = agent.isend((jnp.ones(2),), agent.claim("STALL"))
+    cr = agent.claim("MMM", overrides={"allowed_platforms": ["xla"],
+                                       "platform_preference": ["xla"]})
+    fast = agent.isend((jnp.eye(8), jnp.eye(8)), cr)
+    np.testing.assert_allclose(np.asarray(fast.result(timeout=30)), np.eye(8))
+    assert not stalled.done()
+    gate.set()
+    stalled.result(timeout=30)
+
+
+def test_isend_mailbox_false_leaves_no_residue(agent):
+    """Wait-only consumers opt out of the mailbox so results don't pile up."""
+    cr = agent.claim("MMM")
+    fut = agent.isend((jnp.eye(4), jnp.eye(4)), cr, mailbox=False)
+    np.testing.assert_allclose(np.asarray(fut.result(timeout=30)), np.eye(4))
+    with pytest.raises(RuntimeError, match="empty mailbox"):
+        agent.recv(cr)
+
+
+def test_cancel_refused_on_matched_irecv(agent):
+    """Once an isend has matched a posted receive, cancelling the receive
+    must not drop the result (MPI: no cancel of a matched receive)."""
+    gate = threading.Event()
+
+    def slow(x):
+        gate.wait(10)
+        return x
+
+    agent.registry.register(KernelRecord(alias="SLOW2", fn=slow,
+                                         platform="jnp", is_failsafe=True))
+    cr = agent.claim("SLOW2")
+    waiter = agent.irecv(cr, tag=1)
+    agent.isend((jnp.ones(3),), cr, tag=1)      # matches the posted receive
+    assert waiter.cancel() is False              # matched -> uncancellable
+    gate.set()
+    np.testing.assert_allclose(np.asarray(waiter.result(timeout=30)), 1.0)
+
+
+def test_future_add_done_callback_and_completed(agent):
+    seen = []
+    fut = HaloFuture.completed(42)
+    fut.add_done_callback(lambda f: seen.append(f.result()))
+    assert seen == [42]
+    cr = agent.claim("VDP")
+    x = jnp.ones(8)
+    fut2 = agent.isend((x, x), cr)
+    fut2.add_done_callback(lambda f: seen.append("done"))
+    fut2.result(timeout=30)
+    deadline = time.monotonic() + 5
+    while len(seen) < 2 and time.monotonic() < deadline:
+        time.sleep(0.001)
+    assert seen == [42, "done"]

@@ -74,8 +74,8 @@ def test_elastic_reshard_subprocess(tmp_path, rng):
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.train.checkpoint import CheckpointManager
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         like = {{"w": jax.ShapeDtypeStruct((16, 8), jnp.float32,
                     sharding=NamedSharding(mesh, P("data", "model"))),
                 "opt": {{"mu": jax.ShapeDtypeStruct((16, 8), jnp.float32,
@@ -90,7 +90,7 @@ def test_elastic_reshard_subprocess(tmp_path, rng):
     """)
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                                          "HOME": "/root"},
+                                          "HOME": "/root", "JAX_PLATFORMS": "cpu"},
                          cwd="/root/repo", timeout=300)
     assert "RESHARD_OK" in out.stdout, out.stderr[-2000:]
 

@@ -1,0 +1,141 @@
+"""Cost-model scheduler: analytic estimates override static platform
+preference, measured latencies override analytic estimates, and the autotune
+cache persists across scheduler instances (DESIGN.md §4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CostModelScheduler, KernelRecord, KernelRegistry,
+                        RuntimeAgent, abstract_signature, default_manifest)
+
+
+def _registry(cost_fast=None, cost_slow=None):
+    """Two MMM-style records: 'fast' on the statically *dispreferred* jnp
+    platform, 'slow' on the statically preferred xla platform."""
+    reg = KernelRegistry()
+    reg.register(KernelRecord(alias="K", fn=lambda a: a + 1.0, platform="xla",
+                              priority=10, cost_model=cost_slow))
+    reg.register(KernelRecord(alias="K", fn=lambda a: a + 2.0, platform="jnp",
+                              priority=0, cost_model=cost_fast,
+                              is_failsafe=True))
+    return reg
+
+
+def test_cost_model_overrides_static_platform_preference():
+    reg = _registry(cost_fast=lambda a: 1e-6, cost_slow=lambda a: 1e-3)
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                         scheduler=CostModelScheduler())
+    cr = agent.claim("K")
+    agent.send((jnp.zeros(4),), cr)
+    out = agent.recv(cr)
+    np.testing.assert_allclose(np.asarray(out), 2.0)   # jnp record won
+    # without the scheduler, static preference picks the xla record
+    agent_static = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                                scheduler=False)
+    cr2 = agent_static.claim("K")
+    agent_static.send((jnp.zeros(4),), cr2)
+    np.testing.assert_allclose(np.asarray(agent_static.recv(cr2)), 1.0)
+
+
+def test_records_without_estimates_fall_back_to_static_order():
+    reg = _registry()                                   # no cost models
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest())
+    cr = agent.claim("K")
+    agent.send((jnp.zeros(4),), cr)
+    np.testing.assert_allclose(np.asarray(agent.recv(cr)), 1.0)  # xla record
+
+
+def test_measured_latency_overrides_cost_model():
+    """A wrong analytic model is corrected by observed latencies."""
+    # the model claims xla is faster ...
+    reg = _registry(cost_fast=lambda a: 1e-3, cost_slow=lambda a: 1e-6)
+    xla_rec, jnp_rec = reg.records("K")
+    sched = CostModelScheduler()
+    args = (jnp.zeros(4),)
+    sig = abstract_signature(args)
+    # ... but measurements say otherwise (first sample per key is warmup)
+    for _ in range(3):
+        sched.observe(xla_rec, sig, 5e-3)
+        sched.observe(jnp_rec, sig, 1e-5)
+    assert sched.measured(xla_rec, sig) == pytest.approx(5e-3)
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                         scheduler=sched)
+    cr = agent.claim("K")
+    agent.send(args, cr)
+    np.testing.assert_allclose(np.asarray(agent.recv(cr)), 2.0)  # jnp record
+
+
+def test_warmup_sample_is_discarded():
+    rec = KernelRecord(alias="K", fn=lambda a: a, platform="xla")
+    sched = CostModelScheduler()
+    sig = abstract_signature((jnp.zeros(4),))
+    sched.observe(rec, sig, 123.0)               # compile-tainted
+    assert sched.measured(rec, sig) is None
+    sched.observe(rec, sig, 1.0)
+    assert sched.measured(rec, sig) == pytest.approx(1.0)
+    sched.observe(rec, sig, 2.0)                 # EMA moves toward 2
+    assert 1.0 < sched.measured(rec, sig) < 2.0
+
+
+def test_same_platform_replicas_have_separate_measurements():
+    """Two records on one alias+platform (registry replicas) must not share
+    a latency table entry."""
+    v1 = KernelRecord(alias="K", fn=lambda a: a, platform="pallas", priority=1)
+    v2 = KernelRecord(alias="K", fn=lambda a: a, platform="pallas", priority=2)
+    sched = CostModelScheduler()
+    sig = abstract_signature((jnp.zeros(4),))
+    for _ in range(2):
+        sched.observe(v1, sig, 1e-3)
+    assert sched.measured(v1, sig) == pytest.approx(1e-3)
+    assert sched.measured(v2, sig) is None
+
+
+def test_autotune_cache_persists_across_instances(tmp_path):
+    rec = KernelRecord(alias="K", fn=lambda a: a, platform="pallas")
+    path = tmp_path / "autotune.json"
+    sched = CostModelScheduler(cache_path=path)
+    sig = abstract_signature((jnp.zeros((8, 8)),))
+    sched.observe(rec, sig, 1.0)                 # warmup
+    sched.observe(rec, sig, 2e-4)
+    sched.save()
+    assert path.exists()
+    warm = CostModelScheduler(cache_path=path)
+    assert warm.measured(rec, sig) == pytest.approx(2e-4)
+    # the next process's first sample is compile-tainted: still discarded,
+    # so a warm-loaded EMA is never poisoned by jit time
+    warm.observe(rec, sig, 50.0)
+    assert warm.measured(rec, sig) == pytest.approx(2e-4)
+    warm.observe(rec, sig, 2e-4)
+    assert warm.measured(rec, sig) == pytest.approx(2e-4)
+
+
+def test_corrupt_autotune_cache_starts_cold(tmp_path):
+    path = tmp_path / "autotune.json"
+    path.write_text('{"some|key": 0.5}')         # valid JSON, wrong shape
+    sched = CostModelScheduler(cache_path=path)  # must not raise
+    rec = KernelRecord(alias="K", fn=lambda a: a, platform="xla")
+    assert sched.measured(rec, abstract_signature((jnp.zeros(2),))) is None
+
+
+def test_runtime_feedback_populates_measurements():
+    """End-to-end: repeated DRPC sends feed the scheduler's table."""
+    reg = KernelRegistry()
+    rec = reg.register(KernelRecord(alias="ADD", fn=lambda a: a + 1.0,
+                                    platform="jnp", is_failsafe=True))
+    sched = CostModelScheduler()
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                         scheduler=sched)
+    cr = agent.claim("ADD")
+    args = (jnp.zeros(16),)
+    for _ in range(3):
+        agent.send(args, cr)
+        agent.recv(cr)
+    est = sched.measured(rec, abstract_signature(args))
+    assert est is not None and est > 0.0
+
+
+def test_abstract_signature_shapes_and_dtypes():
+    import jax
+    sig = abstract_signature((jnp.zeros((2, 3), jnp.float32),
+                              jax.ShapeDtypeStruct((4,), jnp.int32), 7))
+    assert sig == (((2, 3), "float32"), ((4,), "int32"), ((), "int"))

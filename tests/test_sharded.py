@@ -25,11 +25,11 @@ HEADER = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs import get_config
 from repro.distributed.sharding import mesh_context
+from repro.launch.mesh import make_mesh
 from repro.models import build_model
-mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ("data", "model"))
 """
 
 

@@ -70,12 +70,32 @@ def test_request_queue_batched_serving(rng):
     params = model.init(rng)
     engine = ServeEngine(model, max_len=32)
     q = RequestQueue(engine, params, batch_size=2, prompt_len=8)
-    ids = [q.submit([1, 2, 3, 4, 5, 6, 7, 8], max_new=3) for _ in range(3)]
+    futs = [q.submit([1, 2, 3, 4, 5, 6, 7, 8], max_new=3) for _ in range(3)]
     done = []
-    while q._queue:
+    while q.pending():
         done.extend(q.flush())
-    assert sorted(r.uid for r in done) == sorted(ids)
+    assert sorted(r.uid for r in done) == sorted(f.uid for f in futs)
     assert all(len(r.result) == 3 for r in done)
+    # the futures observe the same results the flush reported
+    assert [f.result(timeout=5) for f in futs] == \
+        [r.result for r in sorted(done, key=lambda r: r.uid)]
+
+
+def test_request_queue_background_drain_partial_batch(rng):
+    """Continuous batching: the drain loop flushes a partial batch once the
+    oldest submission exceeds max_delay — no flush() calls from the client."""
+    cfg = get_config("mamba2-370m").reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    engine = ServeEngine(model, max_len=32)
+    q = RequestQueue(engine, params, batch_size=4, prompt_len=8,
+                     max_delay=0.02)
+    with q:
+        futs = [q.submit([1, 2, 3, 4, 5, 6, 7, 8], max_new=2)
+                for _ in range(3)]                     # never fills the batch
+        results = [f.result(timeout=120) for f in futs]
+    assert all(len(r) == 2 for r in results)
+    assert q.pending() == 0
 
 
 def test_halo_dispatch_inside_jit_zero_step_overhead(rng):
