@@ -65,6 +65,10 @@ def main() -> None:
     from .async_dispatch import main as async_main
     async_main()
 
+    # Serving: legacy whole-batch queue vs slot continuous batching
+    from .serve_throughput import main as serve_main
+    serve_main()
+
     # Model-step microbench (reduced configs, CPU)
     _section("model step microbench (reduced configs, CPU)")
     print("name,us_per_call,derived")

@@ -1,19 +1,21 @@
-"""Batched serving example: prefill + incremental decode over the engine.
+"""Slot-based continuous-batching example (DESIGN.md §6).
 
 Serves a reduced gemma3-family model (5:1 local:global attention) with a
-batched request queue — one compiled prefill program + one compiled decode
-program, greedy or temperature sampling.
+fixed pool of decode slots: requests with different prompt lengths and
+``max_new`` join and leave mid-flight — no batch boundary, no pad lanes —
+tokens stream through per-request hooks, and the run ends with the serving
+T1/T3 scorecard.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.portability import ServeReport
 from repro.models import build_model
-from repro.serve.engine import RequestQueue, ServeEngine
+from repro.serve.engine import SlotEngine, StepScheduler
 
 
 def main():
@@ -22,28 +24,36 @@ def main():
     key = jax.random.PRNGKey(0)
     params = model.init(key)
 
-    batch, prompt_len, max_new = 4, 12, 16
-    engine = ServeEngine(model, max_len=prompt_len + max_new + 4)
-    queue = RequestQueue(engine, params, batch, prompt_len)
+    slots, max_len = 4, 40
+    sched = StepScheduler(SlotEngine(model, params, slots, max_len))
 
-    # submissions return futures; the background drain loop batches them
-    # (full batch -> immediate flush, partial batch -> flush on max_delay)
+    streamed = {}
+
+    def hook(uid):
+        def on_token(tok, idx):
+            streamed.setdefault(uid, []).append(tok)
+        return on_token
+
     rngs = jax.random.split(key, 8)
     t0 = time.perf_counter()
-    with queue:
-        prompts, futs = [], []
+    with sched:                               # background engine loop
+        futs = []
         for i in range(8):
+            plen = 6 + (i % 3) * 3            # mixed prompt lengths
             prompt = list(map(int, jax.random.randint(
-                rngs[i], (prompt_len,), 0, cfg.vocab_size)))
-            prompts.append(prompt)
-            futs.append(queue.submit(prompt, max_new=max_new))
+                rngs[i], (plen,), 0, cfg.vocab_size)))
+            futs.append(sched.submit(prompt, max_new=4 + 3 * (i % 4),
+                                     on_token=hook(i)))
         results = [f.result() for f in futs]
     dt = time.perf_counter() - t0
     total = sum(len(r) for r in results)
     print(f"served {len(results)} requests / {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s incl. compile)")
-    for f, p, r in zip(futs, prompts, results):
-        print(f"  req {f.uid}: prompt[:4]={p[:4]} -> {r[:6]}…")
+    for i, (f, r) in enumerate(zip(futs, results)):
+        assert streamed[i] == r               # hooks saw every token, in order
+        print(f"  req {f.uid}: {len(r)} tokens -> {r[:6]}…")
+    print(ServeReport.csv_header())
+    print(sched.report().csv())
 
 
 if __name__ == "__main__":

@@ -65,6 +65,15 @@ def overhead_ratio(t1: float, t4: float) -> float:
     return t1 / t4 if t4 > 0 else 0.0
 
 
+def percentile_nearest(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of an ascending-sorted sequence (request
+    latency reporting: serving launcher + throughput benchmark)."""
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[i]
+
+
 @dataclasses.dataclass
 class KernelReport:
     """One row of the paper's evaluation: a kernel on one device class."""
@@ -107,3 +116,41 @@ class KernelReport:
     def csv_header() -> str:
         return ("kernel,device,T1_us,T3_base_us,T3_halo_us,T3_agnostic_us,"
                 "halo_score,agnostic_score,halo_gain_x,overhead_ratio")
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Serving-path scorecard: the paper's T-term decomposition applied to
+    the slot engine's iteration loop (DESIGN.md §6).
+
+    T1 = host orchestration (admission bookkeeping, slot retirement, RNG and
+    mask assembly), T3 = blocked device time (prefill-into-slot + batched
+    decode step execution), T2 ≈ 0 (the slot cache is device-resident
+    between iterations).  ``overhead`` is the paper's T1/T4 — the serving
+    path reports the same scorecard as the kernel path (Table VIII)."""
+
+    t1_s: float
+    t3_s: float
+    steps: int
+    tokens: int
+
+    @property
+    def t4_s(self) -> float:
+        return self.t1_s + self.t3_s           # T2≈0 under unified memory
+
+    @property
+    def overhead(self) -> float:
+        return overhead_ratio(self.t1_s, self.t4_s)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.t4_s if self.t4_s > 0 else 0.0
+
+    def csv(self) -> str:
+        return (f"serve,{self.steps},{self.tokens},{self.t1_s * 1e6:.1f},"
+                f"{self.t3_s * 1e6:.1f},{self.tokens_per_s:.1f},"
+                f"{self.overhead * 100:.4f}%")
+
+    @staticmethod
+    def csv_header() -> str:
+        return "path,steps,tokens,T1_us,T3_us,tok_per_s,overhead_ratio"

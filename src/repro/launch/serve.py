@@ -1,6 +1,11 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Batched generation over the ServeEngine (prefill + incremental decode).
+Slot-based continuous batching (DESIGN.md §6): a StepScheduler admits
+requests into a fixed pool of decode slots, each request retires
+independently on its own EOS / ``max_new``, and the run reports throughput,
+per-request latency percentiles, and the serving T1/T3 scorecard.
+``--legacy`` routes the same workload through the whole-batch RequestQueue
+compat path instead.
 """
 from __future__ import annotations
 
@@ -8,25 +13,29 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import get_config
-from ..distributed.sharding import mesh_context
+from ..core.portability import ServeReport, percentile_nearest
 from ..models import build_model
-from ..serve.engine import RequestQueue, ServeEngine
-from .mesh import make_debug_mesh
+from ..serve.engine import (RequestQueue, ServeEngine, SlotEngine,
+                            StepScheduler)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode-slot pool size (legacy: batch size)")
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="largest per-request decode budget (the workload "
+                         "mixes shorter ones in)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--legacy", action="store_true",
+                    help="whole-batch RequestQueue compat path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -35,23 +44,52 @@ def main(argv=None):
     model = build_model(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
-    engine = ServeEngine(model, max_len=args.prompt_len + args.max_new
-                         + cfg.prefix_len + 8)
-    queue = RequestQueue(engine, params, args.batch, args.prompt_len)
+    max_len = args.prompt_len + args.max_new + cfg.prefix_len + 8
 
     rng = jax.random.split(key, args.requests)
+    prompts = [list(map(int, jax.random.randint(
+        rng[i], (args.prompt_len,), 0, cfg.vocab_size)))
+        for i in range(args.requests)]
+    # mixed decode budgets: slot lanes retire independently, the legacy
+    # path runs every request to the live batch max
+    max_news = [max(1, args.max_new - (i % 4) * (args.max_new // 4))
+                for i in range(args.requests)]
+
+    sched = None
+    if args.legacy:
+        engine = ServeEngine(model, max_len=max_len)
+        front = RequestQueue(engine, params, args.slots, args.prompt_len,
+                             temperature=args.temperature)
+    else:
+        sched = StepScheduler(SlotEngine(model, params, args.slots, max_len),
+                              temperature=args.temperature, seed=args.seed)
+        front = sched
+
+    lat = []
     t0 = time.perf_counter()
-    with queue:                      # background drain loop (DESIGN.md §6)
+    with front:
         futs = []
-        for i in range(args.requests):
-            prompt = list(map(int, jax.random.randint(
-                rng[i], (args.prompt_len,), 0, cfg.vocab_size)))
-            futs.append(queue.submit(prompt, max_new=args.max_new))
+        for p, n in zip(prompts, max_news):
+            ts = time.perf_counter()
+            fut = front.submit(p, max_new=n)
+            fut.add_done_callback(
+                lambda f, ts=ts: lat.append(time.perf_counter() - ts))
+            futs.append(fut)
         results = [f.result() for f in futs]
     dt = time.perf_counter() - t0
     toks = sum(len(r) for r in results)
+    # done-callbacks may trail the last result(); wait before aggregating
+    deadline = time.perf_counter() + 5.0
+    while len(lat) < len(futs) and time.perf_counter() < deadline:
+        time.sleep(0.001)
+    lat.sort()
     print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s)")
+    print(f"request latency p50={percentile_nearest(lat, .5) * 1e3:.0f}ms "
+          f"p95={percentile_nearest(lat, .95) * 1e3:.0f}ms")
+    if sched is not None:
+        print(ServeReport.csv_header())
+        print(sched.report().csv())
     for f, r in list(zip(futs, results))[:3]:
         print(f"  req {f.uid}: {r[:8]}…")
     return results

@@ -59,6 +59,17 @@ def _split_heads(x, n, dh):
     return x.reshape(b, s, n, dh)
 
 
+def _lane_positions(pos, b: int) -> jax.Array:
+    """Normalize a decode cache position to a per-lane (B,) vector.
+
+    Serving passes one position per slot (continuous batching, DESIGN.md §6);
+    lockstep callers still pass a scalar, broadcast to every lane here."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.full((b,), pos, jnp.int32)
+    return pos
+
+
 def gqa_forward(p: Params, x: jax.Array, a: AttnConfig, *,
                 positions: jax.Array, causal: bool = True,
                 prefix_len: int = 0,
@@ -68,8 +79,9 @@ def gqa_forward(p: Params, x: jax.Array, a: AttnConfig, *,
 
     Without cache: self-attention over x (train/prefill); returns (out, (k,v))
     so prefill can seed a cache.  With cache (k,v of shape (B,Hkv,S,dh)) and
-    ``cache_pos``: single-step decode — x is (B,1,D), the new k/v are written
-    at cache_pos and attention runs over the full (masked) cache."""
+    ``cache_pos`` (scalar, or a (B,) per-slot position vector): single-step
+    decode — x is (B,1,D), each lane's new k/v is written at its own
+    cache_pos and attention runs over the full (per-lane-masked) cache."""
     b, s, _ = x.shape
     h, kv, dh = a.n_heads, a.n_kv_heads, a.head_dim
     q = _split_heads(dense(x, p["wq"]), h, dh)
@@ -92,12 +104,12 @@ def gqa_forward(p: Params, x: jax.Array, a: AttnConfig, *,
         lc = ck.shape[2]
         # ring buffer when the cache is window-sized (see transformer.ring_len)
         ring = a.window is not None and lc <= a.window and not prefix_len
-        slot = jnp.mod(cache_pos, lc) if ring else cache_pos
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, 0, slot, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, 0, slot, 0))
-        out = decode_attention(q, ck, cv, cache_pos, a,
+        pos = _lane_positions(cache_pos, b)
+        slot = jnp.mod(pos, lc) if ring else pos
+        lane = jnp.arange(b)
+        ck = ck.at[lane, :, slot].set(k[:, :, 0].astype(ck.dtype))
+        cv = cv.at[lane, :, slot].set(v[:, :, 0].astype(cv.dtype))
+        out = decode_attention(q, ck, cv, pos, a,
                                prefix_len=prefix_len, ring=ring)
         new_kv = (ck, cv)
 
@@ -111,26 +123,30 @@ def gqa_forward(p: Params, x: jax.Array, a: AttnConfig, *,
 
 def decode_attention(q, ck, cv, pos, a: AttnConfig, *, prefix_len: int = 0,
                      ring: bool = False):
-    """Single-query attention over a (B,Hkv,S,dh) cache, masked at pos.
+    """Single-query attention over a (B,Hkv,S,dh) cache, masked per lane.
 
-    GEMV-bound; partitioner-friendly einsum with partial-softmax reductions
-    when the cache's S dim is sharded (sequence-parallel long-context).
-    With ``ring=True`` the cache is a window-sized ring buffer: every
-    occupied slot is in-window by construction, so masking reduces to slot
-    occupancy (slot index ≤ pos, trivially all-true once the ring wraps)."""
+    ``pos`` is scalar or a (B,) vector — each lane masks against its own
+    position, which is what lets decode slots at different depths share one
+    step program (DESIGN.md §6).  GEMV-bound; partitioner-friendly einsum
+    with partial-softmax reductions when the cache's S dim is sharded
+    (sequence-parallel long-context).  With ``ring=True`` the cache is a
+    window-sized ring buffer: every occupied slot is in-window by
+    construction, so masking reduces to slot occupancy (slot index ≤ pos,
+    trivially all-true once the ring wraps)."""
     bq, h, sq, dh = q.shape
     kvh = ck.shape[1]
     rep = h // kvh
+    pos = _lane_positions(pos, bq)
     qf = q.astype(jnp.float32).reshape(bq, kvh, rep * sq, dh) * (dh ** -0.5)
     s = jnp.einsum("bgqd,bgkd->bgqk", qf, ck.astype(jnp.float32))
     kpos = jnp.arange(ck.shape[2])
-    mask = kpos[None, :] <= pos                     # causal up to current pos
+    mask = kpos[None, :] <= pos[:, None]        # per-lane causal mask (B,S)
     if a.window is not None and not ring:
-        wm = kpos[None, :] > pos - a.window
+        wm = kpos[None, :] > pos[:, None] - a.window
         if prefix_len:
             wm = wm | (kpos[None, :] < prefix_len)
         mask = mask & wm
-    s = jnp.where(mask[None, None], s, -1e30)
+    s = jnp.where(mask[:, None, None], s, -1e30)
     p_att = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgqk,bgkd->bgqd", p_att, cv.astype(jnp.float32))
     return out.reshape(bq, h, sq, dh).astype(q.dtype)
@@ -187,10 +203,10 @@ def mla_forward(p: Params, x: jax.Array, a: AttnConfig, *,
     else:
         # absorbed decode: q_nope' = q_nope @ W_uk per head → latent space
         cl, cr = cache                               # (B,S,lat), (B,S,rdh)
-        cl = jax.lax.dynamic_update_slice(cl, ckv.astype(cl.dtype),
-                                          (0, cache_pos, 0))
-        cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype),
-                                          (0, cache_pos, 0))
+        pos = _lane_positions(cache_pos, b)          # per-slot write position
+        lane = jnp.arange(b)
+        cl = cl.at[lane, pos].set(ckv[:, 0].astype(cl.dtype))
+        cr = cr.at[lane, pos].set(k_rope[:, 0].astype(cr.dtype))
         wuk = p["wuk"].reshape(lat, h, dh)
         q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32),
                            wuk.astype(jnp.float32))  # (B,1,H,lat)
@@ -201,7 +217,8 @@ def mla_forward(p: Params, x: jax.Array, a: AttnConfig, *,
                             cr.astype(jnp.float32))
         scores = (s_lat + s_rope) * scale
         kpos = jnp.arange(cl.shape[1])
-        scores = jnp.where((kpos <= cache_pos)[None, None, None], scores, -1e30)
+        scores = jnp.where((kpos[None, :] <= pos[:, None])[:, None, None],
+                           scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
         ctx_lat = jnp.einsum("bhst,btl->bshl", probs,
                              cl.astype(jnp.float32))  # (B,1,H,lat)

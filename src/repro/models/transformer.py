@@ -7,7 +7,9 @@ unrolled inside the scan body).  Three entry points per model:
 * ``loss_fn(params, batch)``            — training loss (+ MoE aux, metrics)
 * ``prefill(params, batch)``            — full-sequence forward → (last-token
                                           logits, decode cache)
-* ``decode_step(params, cache, token, pos)`` — one-token serve step
+* ``decode_step(params, cache, token, pos[, active])`` — one-token serve
+  step; ``pos`` may be a per-slot (B,) position vector and ``active`` a
+  (B,) slot mask (slot-based continuous batching, DESIGN.md §6)
 
 All hot-spot compute routes through HALO aliases; sharding is logical-axis
 based and degrades gracefully to single-device.
@@ -346,10 +348,15 @@ class Model:
         logits = _masked_logits(params, x[:, -1:], cfg)
         return logits[:, 0], caches
 
-    def decode_step(self, params, caches, token, pos
+    def decode_step(self, params, caches, token, pos, active=None
                     ) -> Tuple[jax.Array, PyTree]:
-        """token (B,1) int32 (or (B,1,D) embeddings for stub frontends);
-        pos: scalar int32 — the cache slot being written."""
+        """token (B,1) int32 (or (B,1,D) embeddings for stub frontends).
+
+        ``pos``: scalar int32 (lockstep batch — every lane writes the same
+        cache slot) or a (B,) int32 vector of per-slot write positions
+        (continuous batching, DESIGN.md §6).  ``active``: optional (B,) bool
+        slot mask — cache updates from inactive lanes are dropped, so free /
+        retiring slots never corrupt the persistent slot-indexed cache."""
         cfg = self.cfg
         if cfg.frontend == "frame_embed":
             x = token.astype(cfg.activation_dtype())
@@ -359,10 +366,21 @@ class Model:
         x = shard(x, "batch", None, None)
         b = x.shape[0]
         pos = jnp.asarray(pos, jnp.int32)
-        positions = jnp.full((b, 1), pos, jnp.int32)
+        if pos.ndim == 0:
+            pos = jnp.full((b,), pos, jnp.int32)
+        positions = pos[:, None]
         x, _, new_caches = _forward(params, x, positions, cfg,
                                     caches=caches, cache_pos=pos,
                                     mode="decode")
+        if active is not None:
+            act = jnp.asarray(active, bool)
+
+            def keep(new, old):
+                # every cache leaf is (R, B, ...): lanes live on axis 1
+                m = act.reshape((1, b) + (1,) * (new.ndim - 2))
+                return jnp.where(m, new, old.astype(new.dtype))
+
+            new_caches = jax.tree.map(keep, new_caches, caches)
         logits = _masked_logits(params, x, cfg)
         return logits[:, 0], new_caches
 

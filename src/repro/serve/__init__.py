@@ -1,2 +1,3 @@
-from .engine import Request, RequestQueue, ServeEngine
-from .kvcache import pad_caches
+from .engine import (Request, RequestQueue, ServeEngine, SlotEngine,
+                     StepScheduler, sample_tokens)
+from .kvcache import evict_slot, insert_slot, pad_caches

@@ -1,57 +1,522 @@
-"""Batched serving engine: prefill + incremental decode with a fixed-shape
-cache (one compiled prefill program, one compiled decode program).
+"""Slot-based continuous-batching serving stack (DESIGN.md §6).
 
-Request flow: ``generate`` takes a batch of equal-padded prompts, prefills
-once, then runs jitted single-token decode steps, sampling greedy or with
-temperature.  ``RequestQueue`` is the continuous-batching front on the async
-C2MPI surface (DESIGN.md §4/§6): ``submit`` returns a
-:class:`~repro.core.agents.HaloFuture` immediately, and a background drain
-loop runs one batched ``generate`` whenever the batch fills *or* the oldest
-request has waited ``max_delay`` seconds — partial batches are padded, so
-latency is bounded without giving up the fixed-shape step function.
+Three layers:
+
+* :class:`SlotEngine` — device-facing core: a fixed pool of ``slots`` decode
+  lanes backed by one persistent slot-indexed cache.  Exactly one compiled
+  decode program (fixed ``(B, 1)`` shapes with per-slot positions and an
+  active-slot mask) plus one compiled prefill-insert-sample program per
+  distinct prompt length (length-bucketed admission, slot index traced).
+* :class:`StepScheduler` — the host loop.  Each engine iteration (a) admits
+  queued requests into free slots via prefill-into-slot, (b) runs one jitted
+  batched decode step across all occupied slots, and (c) retires slots
+  independently on per-request EOS or ``max_new`` — requests join and leave
+  mid-flight with no echo padding and no batch-max coupling.  ``submit``
+  returns a :class:`~repro.core.agents.HaloFuture` immediately, with
+  per-token streaming hooks; per-iteration host time (T1) and blocked device
+  time (T3) accumulate into the same scorecard the kernel path reports
+  (:class:`~repro.core.portability.ServeReport`).
+* :class:`ServeEngine` / :class:`RequestQueue` — the legacy whole-batch
+  front, kept as a thin compat wrapper over the slot engine: batch
+  ``generate`` submits one request per prompt row and drains synchronously;
+  ``RequestQueue.flush`` still joins requests at batch boundaries but no
+  longer echoes pad lanes.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import logging
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..configs.base import ArchConfig
 from ..core.agents import HaloFuture
+from ..core.portability import ServeReport
 from ..models.transformer import Model
-from .kvcache import pad_caches
+from .kvcache import evict_slot, insert_slot, pad_caches
 
 log = logging.getLogger("repro.serve.engine")
 
 PyTree = Any
 
 
+def sample_tokens(logits: jax.Array, key: jax.Array, temperature) -> jax.Array:
+    """(B, V) logits → (B,) int32 next tokens.
+
+    ``temperature`` is traced, so one compiled program serves both greedy
+    (``<= 0``) and stochastic sampling — the slot engine never retraces when
+    a caller switches sampling modes."""
+    temperature = jnp.asarray(temperature, jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    drawn = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, drawn, greedy)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new: int
+    eos_id: Optional[int] = None
+    result: Optional[List[int]] = None
+    future: Optional[HaloFuture] = None
+    submitted_at: float = 0.0
+    started_at: Optional[float] = None      # admission (prefill-into-slot)
+    finished_at: Optional[float] = None
+    # streaming hook: called as on_token(token, index) from the step thread
+    on_token: Optional[Callable[[int, int], None]] = None
+
+    def stream(self, tok: int, index: int) -> None:
+        if self.on_token is not None:
+            try:
+                self.on_token(tok, index)
+            except Exception:
+                log.exception("on_token hook raised (request %d)", self.uid)
+
+
+# ---------------------------------------------------------------------------
+# Slot engine: fixed decode-lane pool over a slot-indexed cache
+# ---------------------------------------------------------------------------
+class SlotEngine:
+    """Fixed pool of ``slots`` decode lanes over one persistent cache.
+
+    Device-facing only — no queueing policy lives here.  The decode step
+    compiles once (fixed ``(slots, 1)`` token shape, ``(slots,)`` position
+    vector and active mask); admission compiles once per distinct prompt
+    length, with the target slot index traced so all slots share each
+    bucket's program."""
+
+    def __init__(self, model: Model, params: PyTree, slots: int,
+                 max_len: int):
+        if model.cfg.frontend != "none":   # token-embedding frontend only
+            raise ValueError(
+                "SlotEngine serves token frontends; patch/frame stub "
+                "frontends go through ServeEngine's lockstep fallback")
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.caches = model.init_cache(slots, max_len)
+        self._admit = jax.jit(self._admit_fn, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        self._evict = jax.jit(evict_slot, donate_argnums=(0,))
+
+    # -- compiled bodies -----------------------------------------------------
+    def _admit_fn(self, params, caches, toks, slot, key, temperature):
+        """Prefill one request, insert its padded cache into ``slot``, and
+        sample the request's first token — one program per prompt length."""
+        logits, one = self.model.prefill(params, {"tokens": toks})
+        one = pad_caches(self.model.cfg, one, self.max_len)
+        caches = insert_slot(caches, one, slot)
+        return caches, sample_tokens(logits, key, temperature)
+
+    def _decode_fn(self, params, caches, tok, pos, active, key, temperature):
+        logits, caches = self.model.decode_step(params, caches, tok, pos,
+                                                active)
+        return caches, sample_tokens(logits, key, temperature)
+
+    # -- host surface --------------------------------------------------------
+    def prefill_into_slot(self, slot: int, prompt: List[int], key,
+                          temperature=0.0) -> int:
+        """Admit ``prompt`` into lane ``slot``; returns its first token."""
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        self.caches, tok = self._admit(self.params, self.caches, toks,
+                                       jnp.asarray(slot, jnp.int32), key,
+                                       float(temperature))
+        return int(jax.device_get(tok)[0])
+
+    def decode_step(self, tok, pos, active, key, temperature=0.0):
+        """One batched decode step across all lanes.
+
+        ``tok``/``pos``/``active`` are host (B,) arrays; returns the host
+        (B,) next-token array (entries for inactive lanes are garbage —
+        their cache writes were masked out by ``active``)."""
+        self.caches, nxt = self._decode(
+            self.params, self.caches, jnp.asarray(tok, jnp.int32)[:, None],
+            jnp.asarray(pos, jnp.int32), jnp.asarray(active, bool), key,
+            float(temperature))
+        return jax.device_get(nxt)
+
+    def release_slot(self, slot: int) -> None:
+        """Zero a retired lane (see kvcache.evict_slot)."""
+        self.caches = self._evict(self.caches, jnp.asarray(slot, jnp.int32))
+
+    def ensure_caches(self) -> bool:
+        """Check the pool after a failed jitted call; True if intact.
+
+        ``_admit``/``_decode`` donate the cache buffers, so a *runtime*
+        failure inside either (e.g. transient OOM) consumes them even though
+        ``self.caches`` still holds the references — every later call would
+        die on deleted buffers.  Rebuilding loses all in-flight lane state
+        (the caller must fail its active lanes when this returns False);
+        trace-time errors never consume the donation, so the common
+        bad-request case keeps the pool — and its occupants — intact."""
+        if not any(leaf.is_deleted() for leaf in jax.tree.leaves(self.caches)):
+            return True
+        self.caches = self.model.init_cache(self.slots, self.max_len)
+        return False
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One occupied slot: its request plus the decode cursor."""
+    req: Request
+    pos: int                 # next cache position this lane writes
+    last_tok: int
+    tokens: List[int]
+
+
+# ---------------------------------------------------------------------------
+# Step scheduler: admission / step / retirement loop
+# ---------------------------------------------------------------------------
+class StepScheduler:
+    """Continuous-batching loop over a :class:`SlotEngine` (DESIGN.md §6).
+
+    ``submit`` returns a future immediately; requests are admitted into free
+    slots mid-flight and retire independently on their own EOS or
+    ``max_new``.  Drive the loop synchronously (``step``/``drain``) or in
+    the background (``start``/``stop``, or ``with sched:``)."""
+
+    def __init__(self, engine: SlotEngine, temperature: float = 0.0,
+                 seed: int = 0):
+        self.engine = engine
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+        self._queue: "collections.deque[Request]" = collections.deque()
+        self._lanes: List[Optional[_Lane]] = [None] * engine.slots
+        self._cond = threading.Condition()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        self._uid = 0
+        # held by callers that synchronously drive this scheduler end to end
+        # (submit + drain) — enforces the single-stepper invariant when one
+        # scheduler instance is shared (see ServeEngine.generate)
+        self.drive_lock = threading.Lock()
+        self.completed = 0
+        # T1/T3 scorecard accumulators (core.portability.ServeReport)
+        self._t1 = 0.0
+        self._t3 = 0.0
+        self._steps = 0
+        self._tokens = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int = 16, *,
+               eos_id: Optional[int] = None,
+               on_token: Optional[Callable[[int, int], None]] = None
+               ) -> HaloFuture:
+        """Enqueue a request; returns a future for its generated tokens.
+
+        ``on_token(token, index)`` streams every token (including the one
+        sampled from the prefill) from the stepping thread as it lands."""
+        prompt = list(map(int, prompt))
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if len(prompt) + max_new > self.engine.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds the "
+                f"engine max_len ({self.engine.max_len})")
+        with self._cond:
+            if self._stop:
+                raise RuntimeError(
+                    "StepScheduler is stopped; start() it again to submit")
+            self._uid += 1
+            fut = HaloFuture(uid=self._uid, alias="generate")
+            self._queue.append(Request(self._uid, prompt, max_new,
+                                       eos_id=eos_id, future=fut,
+                                       submitted_at=time.monotonic(),
+                                       on_token=on_token))
+            self._cond.notify_all()
+        return fut
+
+    # -- introspection -------------------------------------------------------
+    def pending(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    def active(self) -> int:
+        with self._cond:
+            return sum(l is not None for l in self._lanes)
+
+    def busy(self) -> bool:
+        with self._cond:
+            return bool(self._queue) or any(l is not None
+                                            for l in self._lanes)
+
+    def report(self) -> ServeReport:
+        return ServeReport(t1_s=self._t1, t3_s=self._t3, steps=self._steps,
+                           tokens=self._tokens)
+
+    def reset_stats(self) -> None:
+        self._t1 = self._t3 = 0.0
+        self._steps = self._tokens = 0
+
+    # -- engine iteration ----------------------------------------------------
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _fail_active(self, exc: BaseException) -> None:
+        """Fail every occupied lane (their cache state is unrecoverable)."""
+        with self._cond:
+            lanes = [l for l in self._lanes if l is not None]
+            self._lanes = [None] * self.engine.slots
+        for lane in lanes:
+            if lane.req.future is not None:
+                lane.req.future.set_exception(exc)
+
+    def _finish(self, req: Request, tokens: List[int]) -> None:
+        req.result = tokens
+        req.finished_at = time.monotonic()
+        self.completed += 1
+        if req.future is not None:
+            req.future.set_result(list(tokens))
+
+    def step(self) -> bool:
+        """One engine iteration: admit → decode → retire.
+
+        Returns True if any work was done.  Call from a single thread at a
+        time (the background loop, or the caller when not started)."""
+        t0 = time.perf_counter()
+        dev = 0.0
+        worked = False
+
+        # (a) admission: prefill queued requests into free slots
+        while True:
+            with self._cond:
+                free = [i for i, l in enumerate(self._lanes) if l is None]
+                req = self._queue.popleft() if free and self._queue else None
+            if req is None:
+                break
+            slot = free[0]
+            worked = True
+            req.started_at = time.monotonic()
+            d0 = time.perf_counter()
+            try:
+                tok = self.engine.prefill_into_slot(
+                    slot, req.prompt, self._next_key(), self.temperature)
+            except Exception as exc:
+                dev += time.perf_counter() - d0
+                if req.future is not None:
+                    req.future.set_exception(exc)
+                if not self.engine.ensure_caches():
+                    # donated buffers died with the failed prefill: every
+                    # in-flight lane lost its cache state
+                    self._fail_active(exc)
+                continue
+            dev += time.perf_counter() - d0
+            self._tokens += 1
+            req.stream(tok, 0)
+            if (req.eos_id is not None and tok == req.eos_id) \
+                    or req.max_new == 1:
+                self._finish(req, [tok])      # never occupied the slot
+                continue
+            with self._cond:
+                self._lanes[slot] = _Lane(req, pos=len(req.prompt),
+                                          last_tok=tok, tokens=[tok])
+
+        # (b) one batched decode step across all occupied slots
+        with self._cond:
+            occupied = [(i, l) for i, l in enumerate(self._lanes)
+                        if l is not None]
+        if occupied:
+            worked = True
+            b = self.engine.slots
+            tok = np.zeros((b,), np.int32)
+            pos = np.zeros((b,), np.int32)
+            act = np.zeros((b,), bool)
+            for i, lane in occupied:
+                tok[i], pos[i], act[i] = lane.last_tok, lane.pos, True
+            d0 = time.perf_counter()
+            try:
+                nxt = self.engine.decode_step(tok, pos, act, self._next_key(),
+                                              self.temperature)
+            except Exception as exc:
+                dev += time.perf_counter() - d0
+                self._fail_active(exc)
+                self.engine.ensure_caches()   # rebuild if donation consumed
+                self._t3 += dev
+                self._t1 += (time.perf_counter() - t0) - dev
+                raise
+            dev += time.perf_counter() - d0
+
+            # (c) retirement: each slot checks its own EOS / max_new
+            for i, lane in occupied:
+                t = int(nxt[i])
+                lane.tokens.append(t)
+                lane.last_tok = t
+                lane.pos += 1
+                self._tokens += 1
+                lane.req.stream(t, len(lane.tokens) - 1)
+                if (lane.req.eos_id is not None and t == lane.req.eos_id) \
+                        or len(lane.tokens) >= lane.req.max_new:
+                    with self._cond:
+                        self._lanes[i] = None
+                    self.engine.release_slot(i)
+                    self._finish(lane.req, lane.tokens)
+
+        if worked:
+            self._steps += 1
+        self._t3 += dev
+        self._t1 += (time.perf_counter() - t0) - dev
+        return worked
+
+    def drain(self) -> None:
+        """Synchronously step until no queued or in-flight work remains."""
+        while self.busy():
+            self.step()
+
+    def cancel_pending(self) -> None:
+        """Cancel queued (not yet admitted) requests — synchronous drivers
+        use it to recover cleanly from a failed drain, so leftovers never
+        leak into their next batch."""
+        with self._cond:
+            dropped = list(self._queue)
+            self._queue.clear()
+        for r in dropped:
+            if r.future is not None:
+                r.future.cancel()
+
+    # -- background loop -----------------------------------------------------
+    def start(self) -> "StepScheduler":
+        if self._thread is None or not self._thread.is_alive():
+            self._stop = False
+            self._thread = threading.Thread(target=self._loop,
+                                            name="slot-engine", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the loop; by default serve queued + in-flight work first."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if drain:
+            self.drain()       # step() ignores _stop; only submit is gated
+        else:
+            with self._cond:
+                dropped = list(self._queue)
+                self._queue.clear()
+                lanes = [l for l in self._lanes if l is not None]
+                self._lanes = [None] * self.engine.slots
+            for r in dropped:
+                if r.future is not None:
+                    r.future.cancel()
+            for lane in lanes:
+                if lane.req.future is not None:
+                    lane.req.future.cancel()
+
+    __enter__ = start
+
+    def __exit__(self, *exc_info) -> None:
+        self.stop(drain=exc_info[0] is None)
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._stop and not self._queue and \
+                        not any(l is not None for l in self._lanes):
+                    self._cond.wait()
+                if self._stop:
+                    return
+            try:
+                self.step()
+            except Exception:
+                # the failed iteration's futures already carry the error;
+                # the loop must survive to serve later submissions
+                log.exception("slot engine step failed; loop continues")
+
+
+# ---------------------------------------------------------------------------
+# Legacy whole-batch front (compat wrappers over the slot engine)
+# ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class ServeEngine:
+    """Legacy batch front: ``generate`` is a thin wrapper over the slot
+    engine — one request per prompt row, drained synchronously — kept so the
+    pre-slot API, tests and examples continue to work.  Non-token frontends
+    (patch/frame stubs) and ``batch_extra`` callers fall back to the
+    original lockstep loop (`_generate_lockstep`)."""
+
     model: Model
     max_len: int = 256
+
+    #: distinct batch widths kept warm by ``generate`` — each holds its own
+    #: slot pool + compiled programs, so the compat path stays bounded even
+    #: when a RequestQueue produces every live-batch width in 1..batch_size
+    MAX_CACHED_WIDTHS = 4
 
     def __post_init__(self):
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._scheds: "collections.OrderedDict[int, StepScheduler]" = \
+            collections.OrderedDict()
+        self._scheds_lock = threading.Lock()      # guards the width cache
 
-    def _sample(self, logits, key, temperature: float):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits.astype(jnp.float32) / temperature, axis=-1
-        ).astype(jnp.int32)
+    def _sched_for(self, b: int, params) -> StepScheduler:
+        """Width-``b`` scheduler from the LRU cache (dict access only — the
+        caller takes the scheduler's own ``drive_lock`` before mutating or
+        driving it, so different widths run concurrently)."""
+        with self._scheds_lock:
+            sched = self._scheds.get(b)
+            if sched is None:
+                sched = StepScheduler(SlotEngine(self.model, params, b,
+                                                 self.max_len))
+                self._scheds[b] = sched
+                while len(self._scheds) > self.MAX_CACHED_WIDTHS:  # LRU evict
+                    self._scheds.popitem(last=False)
+            else:
+                self._scheds.move_to_end(b)
+        return sched
 
     def generate(self, params, prompts: jax.Array, max_new: int, *,
                  temperature: float = 0.0, key: Optional[jax.Array] = None,
                  batch_extra: Optional[Dict[str, jax.Array]] = None
                  ) -> jax.Array:
-        """prompts (B, S0) int32 → (B, max_new) int32 generated tokens."""
+        """prompts (B, S0) int32 → (B, max_new) int32 generated tokens.
+
+        Compat path: rows are submitted to a width-``B`` slot pool and
+        drained synchronously, so admission prefills row by row (B small
+        host-synced prefills instead of one batched one) — fine for tests
+        and examples; latency-sensitive traffic should drive a long-lived
+        :class:`StepScheduler` instead."""
+        b, s0 = prompts.shape
+        assert s0 + max_new <= self.max_len, "grow max_len"
+        key = key if key is not None else jax.random.PRNGKey(0)
+        if batch_extra or self.model.cfg.frontend != "none":
+            return self._generate_lockstep(params, prompts, max_new,
+                                           temperature=temperature, key=key,
+                                           batch_extra=batch_extra)
+        rows = np.asarray(jax.device_get(prompts))
+        sched = self._sched_for(b, params)
+        with sched.drive_lock:       # same-width calls serialize; different
+            sched.engine.params = params       # widths proceed concurrently
+            sched.temperature = temperature
+            sched._key = key
+            futs = [sched.submit(list(map(int, rows[i])), max_new=max_new)
+                    for i in range(b)]
+            sched.drain()
+        return jnp.asarray([f.result() for f in futs], jnp.int32)
+
+    def _generate_lockstep(self, params, prompts: jax.Array, max_new: int, *,
+                           temperature: float = 0.0,
+                           key: Optional[jax.Array] = None,
+                           batch_extra: Optional[Dict[str, jax.Array]] = None
+                           ) -> jax.Array:
+        """The pre-slot whole-batch path: one batched prefill, then lockstep
+        scalar-position decode.  Retained for stub frontends (patch/frame
+        inputs via ``batch_extra``) and as the parity reference for the slot
+        engine's tests."""
         b, s0 = prompts.shape
         assert s0 + max_new <= self.max_len, "grow max_len"
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -64,58 +529,76 @@ class ServeEngine:
             self.model.cfg.frontend == "patch_embed" else 0
         pos = s0 + prefix                      # next cache slot to write
         out = []
-        tok = self._sample(logits, key, temperature)[:, None]
+        tok = sample_tokens(logits, key, temperature)[:, None]
         out.append(tok)
         for i in range(max_new - 1):
             key, sub = jax.random.split(key)
             logits, caches = self._decode(params, caches, tok,
                                           jnp.asarray(pos + i, jnp.int32))
-            tok = self._sample(logits, sub, temperature)[:, None]
+            tok = sample_tokens(logits, sub, temperature)[:, None]
             out.append(tok)
         return jnp.concatenate(out, axis=1)
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: List[int]
-    max_new: int
-    result: Optional[List[int]] = None
-    future: Optional[HaloFuture] = None
-    submitted_at: float = 0.0
-
-
 class RequestQueue:
-    """Continuous-batching front for the fixed-shape engine.
+    """Whole-batch compat front for the serving engine.
 
     ``submit`` enqueues and returns a future for the request's generated
     tokens.  Batches run either synchronously via ``flush`` or from the
     background drain loop (``start``/``stop``, or ``with queue:``), which
     flushes as soon as the batch is full or the oldest submission is
-    ``max_delay`` seconds old — a partial batch is padded rather than held
-    hostage to the fill rate."""
+    ``max_delay`` seconds old.  Interim/compat semantics: requests still
+    *join* only at batch boundaries, but each flush drives one dedicated
+    ``batch_size``-wide slot pool (a single compiled decode program — no
+    per-width retracing), so there are no pad lanes (the old path echoed
+    ``batch[0]`` into every empty lane) and every request retires at its own
+    ``max_new`` / ``eos_id`` instead of the batch max.  For mid-flight
+    join/leave use :class:`StepScheduler` directly."""
 
     def __init__(self, engine: ServeEngine, params, batch_size: int,
-                 prompt_len: int, max_delay: float = 0.05):
+                 prompt_len: int, max_delay: float = 0.05,
+                 temperature: float = 0.0):
         self.engine = engine
         self.params = params
         self.batch_size = batch_size
         self.prompt_len = prompt_len
         self.max_delay = max_delay
+        self.temperature = temperature
         self._queue: List[Request] = []
         self._cond = threading.Condition()
         self._drain: Optional[threading.Thread] = None
         self._stop = False
         self._uid = 0
+        self._sched: Optional[StepScheduler] = None
 
-    def submit(self, prompt: List[int], max_new: int = 16) -> HaloFuture:
+    def _flush_sched(self) -> StepScheduler:
+        """The queue's fixed-width slot pool, built once (one compile).
+        Lazy-init under the queue lock; the caller mutates/drives the
+        scheduler under its ``drive_lock``."""
+        with self._cond:
+            if self._sched is None:
+                self._sched = StepScheduler(
+                    SlotEngine(self.engine.model, self.params,
+                               self.batch_size, self.engine.max_len))
+            return self._sched
+
+    def submit(self, prompt: List[int], max_new: int = 16,
+               eos_id: Optional[int] = None) -> HaloFuture:
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        # flush frames every prompt to prompt_len, so that is the bound
+        if self.prompt_len + max_new > self.engine.max_len:
+            raise ValueError(
+                f"prompt_len ({self.prompt_len}) + max_new ({max_new}) "
+                f"exceeds the engine max_len ({self.engine.max_len})")
         with self._cond:
             if self._stop:
                 raise RuntimeError(
                     "RequestQueue is stopped; start() it again to submit")
             self._uid += 1
             fut = HaloFuture(uid=self._uid, alias="generate")
-            self._queue.append(Request(self._uid, prompt, max_new, future=fut,
+            self._queue.append(Request(self._uid, prompt, max_new,
+                                       eos_id=eos_id, future=fut,
                                        submitted_at=time.monotonic()))
             self._cond.notify_all()
         return fut
@@ -127,33 +610,39 @@ class RequestQueue:
         return len(self._queue)
 
     def flush(self) -> List[Request]:
-        """Run one batched generate over the oldest queued (padded) requests,
-        completing their futures."""
+        """Serve the oldest queued requests through the flush pool,
+        completing their futures.  Only live rows are submitted — no pad
+        lanes — and each row retires at its own ``max_new`` / ``eos_id``
+        (prompts keep the legacy fixed ``prompt_len`` framing)."""
         with self._cond:
-            batch = self._queue[: self.batch_size]
+            live = self._queue[: self.batch_size]
             self._queue = self._queue[self.batch_size:]
-        if not batch:
+        if not live:
             return []
-        live = list(batch)
-        while len(batch) < self.batch_size:       # pad with echo of first
-            batch.append(Request(-1, batch[0].prompt, batch[0].max_new))
-        toks = jnp.asarray([
-            (r.prompt + [0] * self.prompt_len)[: self.prompt_len]
-            for r in batch], jnp.int32)
-        max_new = max(r.max_new for r in batch)
+        sched = self._flush_sched()
         try:
-            gen = jax.device_get(
-                self.engine.generate(self.params, toks, max_new))
+            with sched.drive_lock:   # client flush() vs background drain loop
+                sched.engine.params = self.params
+                sched.temperature = self.temperature
+                futs = [sched.submit(
+                    (r.prompt + [0] * self.prompt_len)[: self.prompt_len],
+                    max_new=r.max_new, eos_id=r.eos_id) for r in live]
+                sched.drain()
+            outs = [f.result(timeout=1.0) for f in futs]
         except Exception as exc:
+            # whole-batch failure semantics (as before the slot engine); the
+            # pool self-heals — leftovers are cancelled and the caches only
+            # rebuild if the failed call actually consumed the donation
+            sched.cancel_pending()
+            sched.engine.ensure_caches()
             for r in live:
-                if r.future is not None:
+                if r.future is not None and not r.future.done():
                     r.future.set_exception(exc)
             raise
-        for i, r in enumerate(batch):
-            if r.uid >= 0:
-                r.result = list(map(int, gen[i, : r.max_new]))
-                if r.future is not None:
-                    r.future.set_result(r.result)
+        for r, out in zip(live, outs):
+            r.result = out
+            if r.future is not None:
+                r.future.set_result(out)
         return live
 
     # -- background drain loop (continuous batching) -------------------------

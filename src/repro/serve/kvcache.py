@@ -1,4 +1,11 @@
-"""KV/SSM cache utilities: pad prefill caches to the serving cache length."""
+"""KV/SSM cache utilities: pad prefill caches to the serving cache length,
+and slot-indexed lane insert/evict for the continuous-batching pool
+(DESIGN.md §6).
+
+Every cache leaf produced by the model is stacked ``(R, B, ...)`` (leading
+R = scan dim over stacked layers), so a *slot* is a batch lane on axis 1 —
+uniform across GQA/SWA-ring, MLA-latent and Mamba conv/SSM state leaves.
+"""
 from __future__ import annotations
 
 from typing import Any, List
@@ -9,6 +16,33 @@ import jax.numpy as jnp
 from ..configs.base import ArchConfig
 
 PyTree = Any
+
+
+def insert_slot(full: PyTree, one: PyTree, slot) -> PyTree:
+    """Write a padded single-request cache (batch=1 lanes) into lane ``slot``
+    of the pooled slot-indexed cache.
+
+    The whole lane is replaced, so whatever a retired occupant left behind
+    (including masked decode garbage) never leaks into the new request.
+    ``slot`` may be a traced scalar: one compiled insert program serves every
+    slot of a given prompt-length bucket."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree.map(
+        lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+            f, o.astype(f.dtype), slot, axis=1),
+        full, one)
+
+
+def evict_slot(full: PyTree, slot) -> PyTree:
+    """Zero lane ``slot`` — retirement hygiene.  Correctness never depends on
+    it (``insert_slot`` fully overwrites the lane and decode masks inactive
+    lanes), but a freed slot holding no stale KV keeps cache dumps honest."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree.map(
+        lambda f: jax.lax.dynamic_update_slice_in_dim(
+            f, jnp.zeros((f.shape[0], 1) + f.shape[2:], f.dtype),
+            slot, axis=1),
+        full)
 
 
 def _to_ring(k: jax.Array, window: int) -> jax.Array:

@@ -10,6 +10,8 @@ import pytest
 from repro.launch.dryrun import (_tensor_bytes, collective_link_bytes,
                                  parse_collectives)
 
+pytestmark = pytest.mark.slow          # subprocess lowering suite (~8 min)
+
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
 
 

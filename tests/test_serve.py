@@ -8,7 +8,7 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.models.transformer import ring_len
 from repro.serve.engine import ServeEngine
-from repro.serve.kvcache import _to_ring, pad_caches
+from repro.serve.kvcache import _to_ring, evict_slot, insert_slot, pad_caches
 
 
 def test_ring_len_rules():
@@ -38,6 +38,26 @@ def test_to_ring_short_prefill_pads(rng):
     ring = _to_ring(k, w)
     assert ring.shape[3] == w
     np.testing.assert_array_equal(np.asarray(ring[0, 0, 0, s0:, :]), 0.0)
+
+
+def test_insert_evict_slot_roundtrip(rng):
+    """insert_slot writes a whole lane at the slot index; evict_slot zeroes
+    it; untouched lanes stay untouched (DESIGN.md §6)."""
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    full = model.init_cache(3, 16)
+    _, one = model.prefill(
+        params, {"tokens": jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)})
+    one = pad_caches(cfg, one, 16)
+    filled = insert_slot(full, one, 1)
+    for f, o in zip(jax.tree.leaves(filled), jax.tree.leaves(one)):
+        np.testing.assert_array_equal(np.asarray(f[:, 1:2]),
+                                      np.asarray(o.astype(f.dtype)))
+        assert not np.asarray(f[:, 0]).any()      # neighbours untouched
+        assert not np.asarray(f[:, 2]).any()
+    cleared = evict_slot(filled, 1)
+    assert all(not np.asarray(l).any() for l in jax.tree.leaves(cleared))
 
 
 def test_engine_greedy_deterministic(rng):

@@ -1,0 +1,212 @@
+"""Slot-based continuous batching (DESIGN.md §6): mid-flight admission,
+independent retirement, slot reuse, EOS stop, legacy parity, no-echo flush."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import (RequestQueue, ServeEngine, SlotEngine,
+                                StepScheduler)
+
+
+@pytest.fixture(scope="module")
+def danube(rng):
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    model = build_model(cfg)
+    return cfg, model, model.init(rng)
+
+
+@pytest.fixture(scope="module")
+def mamba(rng):
+    cfg = get_config("mamba2-370m").reduced()
+    model = build_model(cfg)
+    return cfg, model, model.init(rng)
+
+
+def test_mixed_prompts_and_max_new_match_legacy(danube):
+    """Concurrent submitters with mixed prompt lengths and max_new: greedy
+    slot-engine outputs equal the legacy lockstep generate, per request."""
+    cfg, model, params = danube
+    engine = ServeEngine(model, max_len=48)
+    sched = StepScheduler(SlotEngine(model, params, slots=2, max_len=48))
+    cases = [([3, 1, 4, 1, 5], 3), ([2, 7, 1, 8, 2, 8, 1, 8], 6),
+             ([9, 9, 8, 7, 6], 1), ([11, 12, 13], 4)]
+    futs = [sched.submit(p, max_new=n) for p, n in cases]
+    sched.drain()
+    for (p, n), f in zip(cases, futs):
+        ref = engine._generate_lockstep(params, jnp.asarray([p], jnp.int32), n)
+        assert f.result(timeout=60) == list(map(int, np.asarray(ref)[0]))
+    assert sched.completed == len(cases) and sched.active() == 0
+
+
+def test_mid_flight_admission_before_any_retirement(danube):
+    """Acceptance: a request submitted to a busy engine with one free slot
+    begins decoding (streams its first token) before any in-flight request
+    finishes — no batch-boundary wait."""
+    cfg, model, params = danube
+    sched = StepScheduler(SlotEngine(model, params, slots=2, max_len=48))
+    events, lock = [], threading.Lock()
+    a_mid_decode = threading.Event()
+
+    def hook(name, notify_at=None):
+        def on_token(tok, idx):
+            with lock:
+                events.append((name, idx))
+            if notify_at is not None and idx >= notify_at:
+                a_mid_decode.set()
+        return on_token
+
+    with sched:
+        fa = sched.submit([1, 2, 3, 4], max_new=24,
+                          on_token=hook("a", notify_at=2))
+        fa.add_done_callback(lambda f: events.append(("a_done", -1)))
+        assert a_mid_decode.wait(timeout=120)      # a is decoding, 1 slot free
+        fb = sched.submit([4, 3, 2, 1, 5, 6], max_new=2,
+                          on_token=hook("b"))
+        ra = fa.result(timeout=120)
+        rb = fb.result(timeout=120)
+    assert len(ra) == 24 and len(rb) == 2
+    with lock:
+        b_first = events.index(("b", 0))
+        a_done = events.index(("a_done", -1))
+    assert b_first < a_done, events                # b decoded while a ran
+
+
+def test_slot_reuse_after_retirement(mamba):
+    """A single-slot engine serves a stream of requests sequentially —
+    retirement frees the slot for the next admission — and each output
+    equals the one-at-a-time legacy reference."""
+    cfg, model, params = mamba
+    engine = ServeEngine(model, max_len=24)
+    sched = StepScheduler(SlotEngine(model, params, slots=1, max_len=24))
+    futs = [sched.submit([1 + i, 2, 3], max_new=2 + i) for i in range(3)]
+    sched.drain()
+    outs = [f.result(timeout=60) for f in futs]
+    assert [len(o) for o in outs] == [2, 3, 4]
+    assert sched.completed == 3 and sched.active() == 0
+    for i, o in enumerate(outs):
+        ref = engine._generate_lockstep(
+            params, jnp.asarray([[1 + i, 2, 3]], jnp.int32), 2 + i)
+        assert o == list(map(int, np.asarray(ref)[0]))
+
+
+def test_eos_stops_slot_and_queue_paths(danube):
+    """Per-request EOS: no tokens after the sampled EOS appear in
+    ``future.result()``, on both the slot engine and the compat queue."""
+    cfg, model, params = danube
+    engine = ServeEngine(model, max_len=48)
+    prompt = [5, 6, 7, 8]
+    ref = list(map(int, np.asarray(engine.generate(
+        params, jnp.asarray([prompt], jnp.int32), 8))[0]))
+    eos = ref[3]                                   # greedy will sample it
+    cut = ref[: ref.index(eos) + 1]
+
+    sched = StepScheduler(SlotEngine(model, params, slots=1, max_len=48))
+    fut = sched.submit(prompt, max_new=8, eos_id=eos)
+    sched.drain()
+    out = fut.result(timeout=60)
+    assert out == cut
+    assert eos not in out[:-1]
+
+    q = RequestQueue(engine, params, batch_size=2, prompt_len=len(prompt))
+    f2 = q.submit(prompt, max_new=8, eos_id=eos)
+    q.flush()
+    assert f2.result(timeout=60) == cut
+
+
+def test_request_queue_flush_has_no_echo_lanes(mamba):
+    """Compat-path fix: a partial flush serves only live rows through one
+    fixed-width slot pool (the old path echoed batch[0] into every empty
+    lane and ran everyone to the batch max); each request retires at its own
+    max_new, and the outputs match the lockstep reference."""
+    cfg, model, params = mamba
+    engine = ServeEngine(model, max_len=32)
+    seen = []
+    engine.generate = lambda *a, **kw: seen.append(a)   # must never be hit
+    q = RequestQueue(engine, params, batch_size=8, prompt_len=8)
+    f1 = q.submit([1, 2, 3], max_new=2)
+    f2 = q.submit([4, 5, 6, 7], max_new=5)
+    q.flush()
+    assert seen == []                       # no whole-batch echo generate
+    assert q._sched.engine.slots == 8       # one pool, one compiled width
+    assert q._sched.completed == 2          # only the 2 live rows decoded
+    out1, out2 = f1.result(timeout=60), f2.result(timeout=60)
+    assert len(out1) == 2 and len(out2) == 5
+    for prompt, out in ([1, 2, 3], out1), ([4, 5, 6, 7], out2):
+        padded = (prompt + [0] * 8)[:8]
+        ref = engine._generate_lockstep(
+            params, jnp.asarray([padded], jnp.int32), len(out))
+        assert out == list(map(int, np.asarray(ref)[0]))
+
+
+def test_streaming_hooks_see_every_token_in_order(mamba):
+    cfg, model, params = mamba
+    sched = StepScheduler(SlotEngine(model, params, slots=2, max_len=24))
+    got = {}
+    futs = [sched.submit([1 + i, 2, 3], max_new=4,
+                         on_token=lambda t, j, i=i:
+                         got.setdefault(i, []).append((j, t)))
+            for i in range(2)]
+    sched.drain()
+    for i, f in enumerate(futs):
+        toks = f.result(timeout=60)
+        assert got[i] == list(enumerate(toks))
+
+
+def test_scorecard_accumulates(mamba):
+    """The serving path emits the kernel path's T1/T3 scorecard."""
+    cfg, model, params = mamba
+    sched = StepScheduler(SlotEngine(model, params, slots=2, max_len=24))
+    futs = [sched.submit([1, 2, 3, 4], max_new=3) for _ in range(2)]
+    sched.drain()
+    [f.result(timeout=60) for f in futs]
+    rep = sched.report()
+    # 2 iterations: admit (token 1) + decode (2), then decode (3) + retire
+    assert rep.tokens == 6 and rep.steps >= 2
+    assert rep.t3_s > 0 and rep.t1_s >= 0
+    assert 0.0 <= rep.overhead < 1.0
+    assert rep.t4_s == pytest.approx(rep.t1_s + rep.t3_s)
+
+
+def test_engine_survives_failed_step(mamba):
+    """A runtime failure inside a jitted call consumes the donated cache
+    buffers; the scheduler fails the affected futures, the engine rebuilds
+    the pool (ensure_caches), and later submissions are served normally."""
+    cfg, model, params = mamba
+    sched = StepScheduler(SlotEngine(model, params, slots=2, max_len=24))
+    real_decode = sched.engine.decode_step
+
+    def exploding_decode(*args, **kwargs):
+        # simulate a post-dispatch device failure: donation consumed
+        for leaf in jax.tree.leaves(sched.engine.caches):
+            leaf.delete()
+        raise RuntimeError("injected device failure")
+
+    sched.engine.decode_step = exploding_decode
+    fut = sched.submit([1, 2, 3], max_new=4)
+    with pytest.raises(RuntimeError, match="injected"):
+        sched.step()                               # admit + exploding decode
+    with pytest.raises(RuntimeError, match="injected"):
+        fut.result(timeout=60)
+
+    sched.engine.decode_step = real_decode         # "device" recovers
+    ok = sched.submit([1, 2, 3], max_new=4)
+    sched.drain()
+    ref = ServeEngine(model, max_len=24)._generate_lockstep(
+        params, jnp.asarray([[1, 2, 3]], jnp.int32), 4)
+    assert ok.result(timeout=60) == list(map(int, np.asarray(ref)[0]))
+
+
+def test_submit_validation(mamba):
+    cfg, model, params = mamba
+    sched = StepScheduler(SlotEngine(model, params, slots=1, max_len=16))
+    with pytest.raises(ValueError):
+        sched.submit([], max_new=2)
+    with pytest.raises(ValueError):
+        sched.submit([1, 2], max_new=0)
+    with pytest.raises(ValueError):
+        sched.submit([1] * 12, max_new=8)          # 12 + 8 > 16
