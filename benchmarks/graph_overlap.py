@@ -1,0 +1,201 @@
+"""Serial dispatch vs execution-graph overlap (DESIGN.md §8).
+
+The same multi-branch workload — a dependent EWMM → MMM → RMSNORM chain
+plus two independent deep Jacobi-sweep branches — is driven two ways:
+
+* **serial** — the pre-graph HALO host program: blocking send/recv, one
+  kernel at a time, a host round trip (selection + device sync) per node;
+* **graph**  — one ``halo_graph()`` capture of the identical calls; the
+  executor schedules ready nodes concurrently across virtualization-agent
+  queues (cost-model placement with transfer penalty + backlog spreading),
+  and dependent chains run back-to-back on their placed agent with no host
+  round trips.
+
+An autotune sweep first times every feasible record per signature so the
+placement scores measured-vs-measured (no cold jit/interpret compiles mid
+measurement).  Wall times (best of ``REPEATS``) and the overlap speedup are
+written to ``BENCH_graph.json`` and printed per the harness CSV contract
+(``name,us_per_call,derived``).
+
+Run:  PYTHONPATH=src python -m benchmarks.graph_overlap
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N = 256                 # chain operand size
+NS = 64                 # jacobi system size
+JACOBI_SWEEPS = 24      # per branch; depth is what serial round trips pay for
+REPEATS = 7
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_graph.json"
+
+
+def _workload(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (N, N), jnp.float32)
+    b = jax.random.normal(k2, (N, N), jnp.float32) + 3.0
+    bv = jax.random.normal(k2, (NS,), jnp.float32)
+    return {
+        "a": a, "b": b,
+        "gamma": jnp.ones(N, jnp.float32),
+        "a_dd": (jax.random.normal(k1, (NS, NS), jnp.float32)
+                 + NS * jnp.eye(NS)),
+        "b1": bv, "b2": 2.0 * bv,
+        "x0": jnp.zeros(NS, jnp.float32),
+    }
+
+
+def _serial_pass(session, cr, w):
+    """One kernel at a time: blocking send/recv per node."""
+    session.send((w["a"], w["b"]), cr["EWMM"])
+    top = session.recv(cr["EWMM"])
+    session.send((top, w["b"]), cr["MMM"])
+    mm = session.recv(cr["MMM"])
+    session.send((mm, w["gamma"]), cr["RMSNORM"])
+    chain = session.recv(cr["RMSNORM"])
+    x, y = w["x0"], w["x0"]
+    for _ in range(JACOBI_SWEEPS):
+        session.send((w["a_dd"], w["b1"], x), cr["JS1"])
+        x = session.recv(cr["JS1"])
+    for _ in range(JACOBI_SWEEPS):
+        session.send((w["a_dd"], w["b2"], y), cr["JS2"])
+        y = session.recv(cr["JS2"])
+    return chain, x, y
+
+
+def _graph_pass(session, cr, w):
+    """Identical calls captured as one DAG; three independent branches."""
+    from repro.core import halo_graph
+
+    with halo_graph(session=session) as g:
+        t = session.isend((w["a"], w["b"]), cr["EWMM"])
+        m = session.isend((t, w["b"]), cr["MMM"])
+        session.isend((m, w["gamma"]), cr["RMSNORM"])
+        x, y = w["x0"], w["x0"]
+        for _ in range(JACOBI_SWEEPS):
+            x = session.isend((w["a_dd"], w["b1"], x), cr["JS1"])
+        for _ in range(JACOBI_SWEEPS):
+            y = session.isend((w["a_dd"], w["b2"], y), cr["JS2"])
+    outs = g.wait(timeout=300)
+    return outs, g
+
+
+def _best_of(fn, repeats=REPEATS):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _autotune_sweep(session, w, keep=2):
+    """Time every feasible record once per workload signature and feed the
+    scheduler's table, so graph placement scores measured-vs-measured from
+    the first timed pass (no cold jit/interpret compiles mid-measurement).
+    The first run per record is the compile; the scheduler's warmup-discard
+    drops its observation automatically."""
+    from repro.core import abstract_signature
+
+    jobs = {
+        "EWMM": (w["a"], w["b"]),
+        "MMM": (w["a"], w["b"]),
+        "RMSNORM": (w["a"], w["gamma"]),
+        "JS": (w["a_dd"], w["b1"], w["x0"]),
+    }
+    sched = session.scheduler
+    for alias, args in jobs.items():
+        sig = abstract_signature(args)
+        for rec in session.registry.records(alias):
+            agent = session.agents.get(rec.platform)
+            if agent is None or not agent.available() \
+                    or not rec.feasible(*args):
+                continue
+            for _ in range(keep + 1):
+                t0 = time.perf_counter()
+                out = agent.execute(rec, *args)
+                jax.block_until_ready(out)
+                if sched is not None:
+                    sched.observe(rec, sig, time.perf_counter() - t0)
+
+
+def main() -> None:
+    from repro.core import MPIX_Initialize, halo_session
+
+    MPIX_Initialize()
+    session = halo_session()
+    w = _workload(jax.random.PRNGKey(0))
+    # The chain is auto-placed; the two Jacobi branches carry explicit
+    # platform recommendations (the paper's platform_list override) pinning
+    # them to *different* jit-class substrates, so the overlap measured here
+    # is cross-agent by construction rather than at the mercy of run-to-run
+    # latency noise between two near-equivalent substrates.
+    cr = {alias: session.claim(alias)
+          for alias in ("EWMM", "MMM", "RMSNORM")}
+    cr["JS1"] = session.claim("JS", overrides={
+        "allowed_platforms": ["xla"], "platform_preference": ["xla"]})
+    cr["JS2"] = session.claim("JS", overrides={
+        "allowed_platforms": ["pallas"], "platform_preference": ["pallas"]})
+
+    # autotune sweep + one warmup pass of each driver, then parity check
+    _autotune_sweep(session, w)
+    if session.scheduler is not None:
+        # freeze the table during measurement: latencies observed *under
+        # pipeline load* include queue wait, and feeding them back would
+        # oscillate placement mid-benchmark
+        session.scheduler.sample_every = 10 ** 9
+        session.scheduler.min_samples = 0
+    ref = _serial_pass(session, cr, w)
+    outs, g = _graph_pass(session, cr, w)
+    for got, want in zip(outs, ref):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-3, atol=1e-3)
+
+    serial_s = _best_of(lambda: _serial_pass(session, cr, w))
+    last = {"g": g}
+
+    def timed_graph():
+        _, last["g"] = _graph_pass(session, cr, w)
+
+    graph_s = _best_of(timed_graph)
+    g = last["g"]
+    speedup = serial_s / max(graph_s, 1e-9)
+
+    by_platform = {}
+    for node in g.nodes:
+        by_platform[node.platform] = by_platform.get(node.platform, 0) + 1
+    n_roots = sum(1 for n in g.nodes if not n.parents)
+    rec = {
+        "n": N,
+        "nodes": len(g.nodes),
+        "independent_branches": n_roots,
+        "jacobi_sweeps": JACOBI_SWEEPS,
+        "repeats": REPEATS,
+        "serial_s": round(serial_s, 6),
+        "graph_s": round(graph_s, 6),
+        "speedup_x": round(speedup, 3),
+        "placements": by_platform,
+    }
+    OUT_PATH.write_text(json.dumps(rec, indent=1))
+
+    print("# === serial dispatch vs execution-graph overlap ===")
+    print("name,us_per_call,derived")
+    n_nodes = len(g.nodes)
+    print(f"serial/graph_workload,{serial_s / n_nodes * 1e6:.1f},"
+          f"nodes={n_nodes}")
+    print(f"graph/graph_workload,{graph_s / n_nodes * 1e6:.1f},"
+          f"speedup_x={speedup:.2f}")
+    print(f"# placements by platform: {by_platform}")
+    print(f"# wrote {OUT_PATH.name}: serial {serial_s * 1e3:.1f} ms, "
+          f"graph {graph_s * 1e3:.1f} ms, {speedup:.2f}x "
+          f"({n_roots} independent branches)")
+
+
+if __name__ == "__main__":
+    main()

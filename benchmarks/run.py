@@ -65,6 +65,10 @@ def main() -> None:
     from .async_dispatch import main as async_main
     async_main()
 
+    # Serial dispatch vs execution-graph overlap (writes BENCH_graph.json)
+    from .graph_overlap import main as graph_main
+    graph_main()
+
     # Serving: legacy whole-batch queue vs slot continuous batching
     from .serve_throughput import main as serve_main
     serve_main()

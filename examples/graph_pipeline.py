@@ -1,0 +1,83 @@
+"""Execution-graph pipeline: unified control flow over a DAG (DESIGN.md §8).
+
+The host program below is the paper's hardware-agnostic template, unchanged
+except for the ``halo_graph()`` region: inside it, ``MPIX_ISend`` records
+DAG nodes instead of executing, with data dependencies inferred from which
+node handles appear in later payloads.  On exit the runtime launches the
+DAG: the dependent chain EWMM → MMM → RMSNORM and the independent Jacobi
+branch are placed per-node (cost model + substrate-transfer penalty) and
+run concurrently on different virtualization agents.
+
+Run:  PYTHONPATH=src python examples/graph_pipeline.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (MPIX_Claim, MPIX_Finalize, MPIX_Initialize,
+                        MPIX_ISend, MPIX_Recv, MPIX_Send, halo_graph)
+
+
+def main():
+    MPIX_Initialize()
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    n = 128
+    a = jax.random.normal(k1, (n, n), jnp.float32)
+    b = jax.random.normal(k2, (n, n), jnp.float32) + 3.0
+    gamma = jnp.ones(n, jnp.float32)
+    a_dd = a + n * jnp.eye(n)                       # diagonally dominant
+    bvec = jax.random.normal(k1, (n,), jnp.float32)
+
+    cr = {alias: MPIX_Claim(alias)
+          for alias in ("EWMM", "MMM", "RMSNORM", "JS")}
+
+    # ---- serial reference: one kernel at a time (pre-graph HALO) ----------
+    t0 = time.perf_counter()
+    MPIX_Send((a, b), cr["EWMM"])
+    top = MPIX_Recv(cr["EWMM"])
+    MPIX_Send((top, b), cr["MMM"])
+    mm = MPIX_Recv(cr["MMM"])
+    MPIX_Send((mm, gamma), cr["RMSNORM"])
+    ref_chain = MPIX_Recv(cr["RMSNORM"])
+    x = jnp.zeros(n)
+    for _ in range(4):
+        MPIX_Send((a_dd, bvec, x), cr["JS"])
+        x = MPIX_Recv(cr["JS"])
+    ref_jacobi = x
+    serial_s = time.perf_counter() - t0
+
+    # ---- the same workload as one execution graph -------------------------
+    t0 = time.perf_counter()
+    with halo_graph() as g:
+        t = MPIX_ISend((a, b), cr["EWMM"])          # chain: ewise ...
+        m = MPIX_ISend((t, b), cr["MMM"])           # ... matmul ...
+        r = MPIX_ISend((m, gamma), cr["RMSNORM"])   # ... rmsnorm
+        xn = jnp.zeros(n)
+        for _ in range(4):                          # independent branch
+            xn = MPIX_ISend((a_dd, bvec, xn), cr["JS"])
+    out_chain, out_jacobi = g.wait(timeout=120)
+    graph_s = time.perf_counter() - t0
+
+    np.testing.assert_allclose(np.asarray(out_chain), np.asarray(ref_chain),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out_jacobi), np.asarray(ref_jacobi),
+                               rtol=1e-3, atol=1e-3)
+
+    print(f"graph: {len(g.nodes)} nodes, "
+          f"{sum(1 for nd in g.nodes if not nd.parents)} roots, "
+          f"{len(g.outputs)} outputs")
+    for node in g.nodes:
+        deps = ",".join(str(p.uid) for p in node.parents) or "-"
+        print(f"  node {node.uid:2d} {node.alias:8s} deps=[{deps:7s}] "
+              f"ran on {node.platform}")
+    print(f"serial {serial_s * 1e3:.1f} ms vs graph {graph_s * 1e3:.1f} ms "
+          f"(chain + jacobi branch overlap across agents)")
+    print("results match serial dispatch: OK")
+    MPIX_Finalize()
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,8 @@ The paper's contribution, as a composable library:
 * :mod:`repro.core.agents`         — runtime + virtualization agents (§V)
 * :mod:`repro.core.scheduler`      — cost-model scheduler + autotune cache
 * :mod:`repro.core.c2mpi`          — MPIX_* application interface (§IV)
+* :mod:`repro.core.graph`          — execution graphs: DAG capture, cost-model
+  placement, cross-substrate overlap (DESIGN.md §8)
 * :mod:`repro.core.portability`    — performance-portability metrics (§VI)
 """
 from .compute_object import BufferHandle, ComputeObject, as_compute_object
@@ -19,9 +21,12 @@ from .agents import (ChildRank, HaloCancelledError, HaloFuture, JnpAgent,
                      PallasAgent, RuntimeAgent, ShardedAgent,
                      VirtualizationAgent, XlaAgent)
 from .c2mpi import (MPIX_Claim, MPIX_CreateBuffer, MPIX_Finalize, MPIX_Free,
-                    MPIX_Initialize, MPIX_IRecv, MPIX_ISend, MPIX_Recv,
-                    MPIX_Send, MPIX_SendFwd, MPIX_Test, MPIX_Wait,
-                    MPIX_Waitall, halo_dispatch, halo_session)
+                    MPIX_GraphBegin, MPIX_GraphEnd, MPIX_Initialize,
+                    MPIX_IRecv, MPIX_ISend, MPIX_Recv, MPIX_Send,
+                    MPIX_SendFwd, MPIX_Test, MPIX_Wait, MPIX_Waitall,
+                    halo_dispatch, halo_session)
+from .graph import (ExecutionGraph, GraphDependencyError, GraphError,
+                    GraphNode, halo_graph)
 from .portability import (KernelReport, Timing, overhead_ratio,
                           performance_penalty, portability_score, time_fn)
 
@@ -35,9 +40,12 @@ __all__ = [
     "PallasAgent", "RuntimeAgent", "ShardedAgent",
     "VirtualizationAgent", "XlaAgent",
     "MPIX_Claim", "MPIX_CreateBuffer", "MPIX_Finalize", "MPIX_Free",
+    "MPIX_GraphBegin", "MPIX_GraphEnd",
     "MPIX_Initialize", "MPIX_IRecv", "MPIX_ISend", "MPIX_Recv",
     "MPIX_Send", "MPIX_SendFwd", "MPIX_Test", "MPIX_Wait", "MPIX_Waitall",
     "halo_dispatch", "halo_session",
+    "ExecutionGraph", "GraphDependencyError", "GraphError", "GraphNode",
+    "halo_graph",
     "KernelReport", "Timing", "overhead_ratio", "performance_penalty",
     "portability_score", "time_fn",
 ]

@@ -52,6 +52,19 @@ from .scheduler import CostModelScheduler, abstract_signature
 
 log = logging.getLogger("repro.halo.agents")
 
+# Execution-graph capture state (DESIGN.md §8).  The graph module installs
+# the active ExecutionGraph here (thread-local: capture is a host-thread
+# construct); isend/dispatch consult it so host code inside a
+# ``halo_graph()`` region records DAG nodes instead of executing.
+_graph_capture = threading.local()
+
+_TRACER_TYPES = (getattr(jax.core, "Tracer", ()),)
+
+
+def _active_graph(session: "RuntimeAgent"):
+    g = getattr(_graph_capture, "graph", None)
+    return g if g is not None and g.session is session else None
+
 
 # ---------------------------------------------------------------------------
 # Futures
@@ -558,6 +571,11 @@ class RuntimeAgent:
                     platform_preference=pref)
             except SelectionError:
                 candidates = None
+            if candidates:
+                # quarantine: a record whose execution raised stays
+                # unselectable until clear_failures() (failsafe semantics)
+                candidates = [c for c in candidates
+                              if not self.scheduler.is_failed(c)]
             # exploration only on the DRPC path: a jit trace must never
             # inline a deliberately-suboptimal record into a step program
             choice = self.scheduler.choose(alias, candidates, args,
@@ -577,7 +595,16 @@ class RuntimeAgent:
 
         This is the hot path used by hardware-agnostic model code.  No
         mailboxes, no buffer table, no host synchronization — the selected
-        record's fn is traced straight into the enclosing jit program."""
+        record's fn is traced straight into the enclosing jit program.
+
+        Inside a ``halo_graph()`` capture region (and outside any jit
+        trace — a traced value must inline immediately), the call records a
+        DAG node and returns it; passing the node into later captured calls
+        expresses the data dependency (DESIGN.md §8)."""
+        g = _active_graph(self)
+        if g is not None and not any(isinstance(l, _TRACER_TYPES)
+                                     for l in jax.tree_util.tree_leaves(args)):
+            return g.record_dispatch(alias, args, kwargs, overrides)
         t0 = time.perf_counter()
         try:
             record = self._select(alias, args, overrides)
@@ -589,16 +616,10 @@ class RuntimeAgent:
             self._account_t1(time.perf_counter() - t0)
         return record.fn(*args, **kwargs)
 
-    def _execute_record(self, record: KernelRecord, cr: ChildRank,
-                        args: Tuple, kwargs: Dict):
-        agent = self.agents.get(record.platform)
-        if agent is None or not agent.available():
-            fs = self.registry.failsafe(record.alias)
-            if fs is None:
-                raise SelectionError(
-                    f"no agent for platform {record.platform!r} and no fail-safe")
-            record, agent = fs, self.agents["jnp"]
-        if cr.stateful:
+    def _execute_on(self, agent: VirtualizationAgent, record: KernelRecord,
+                    cr: Optional[ChildRank], args: Tuple, kwargs: Dict):
+        """One execution attempt on an explicit agent — no failover."""
+        if cr is not None and cr.stateful:
             # snapshot under the lock: a concurrent free() may be clearing
             # the CR's buffers while this request is in flight on a worker
             with self._lock:
@@ -612,6 +633,75 @@ class RuntimeAgent:
                         self._buffer_table[h.uid] = new_state[n]
             return out
         return agent.execute(record, *args, **kwargs)
+
+    def _record_failure(self, record: KernelRecord, exc: BaseException) -> None:
+        """Quarantine a record whose execution raised so the scheduler stops
+        selecting it, and drop stale resolutions that may still name it."""
+        if self.scheduler is not None:
+            self.scheduler.mark_failed(record)
+        with self._lock:
+            for cr in self._crs.values():
+                cr.resolution_cache.clear()
+        log.warning("record %s/%s failed (%s: %s); re-placing",
+                    record.alias, record.platform, type(exc).__name__, exc)
+
+    def _agent_for(self, record: KernelRecord) -> Optional[VirtualizationAgent]:
+        agent = self.agents.get(record.platform)
+        return agent if agent is not None and agent.available() else None
+
+    def _execute_record(self, record: KernelRecord, cr: ChildRank,
+                        args: Tuple, kwargs: Dict):
+        """Execute with failsafe semantics (§IV-C): an agent that raises in
+        ``_device_execute`` quarantines its record and the request re-places
+        onto the next feasible record, ending at the registry fail-safe (or
+        the CR's claim-level callback); only when every path fails does the
+        *original* error surface to the waiter."""
+        agent = self._agent_for(record)
+        if agent is None:
+            fs = self.registry.failsafe(record.alias)
+            if fs is None:
+                raise SelectionError(
+                    f"no agent for platform {record.platform!r} and no fail-safe")
+            record, agent = fs, self.agents["jnp"]
+        tried: List[KernelRecord] = []
+        first_exc: Optional[BaseException] = None
+        overrides = cr.overrides if cr is not None else {}
+        while True:
+            try:
+                return self._execute_on(agent, record, cr, args, kwargs)
+            except Exception as exc:  # noqa: BLE001 — failsafe re-placement
+                tried.append(record)
+                first_exc = first_exc or exc
+                self._record_failure(record, exc)
+            nxt = self._next_record(record.alias, args, overrides, tried)
+            if nxt is None:
+                if cr is not None and cr.failsafe is not None:
+                    log.warning("CR %d (%s): fail-safe callback engaged after "
+                                "execution failure", cr.uid, cr.alias)
+                    return cr.failsafe(*args, **kwargs)
+                raise first_exc
+            record = nxt
+            agent = self._agent_for(record) or self.agents["jnp"]
+
+    def _next_record(self, alias: str, args: Tuple, overrides: Dict,
+                     tried: Sequence[KernelRecord]) -> Optional[KernelRecord]:
+        """Next feasible record for re-placement, excluding already-tried
+        ones; falls back to the registry fail-safe record."""
+        allowed = overrides.get("allowed_platforms", self._allowed_platforms())
+        pref = overrides.get("platform_preference", self._platform_preference())
+        try:
+            cands = self.registry.candidates(
+                alias, *args, allowed_platforms=allowed,
+                platform_preference=pref, exclude=tried)
+        except SelectionError:
+            cands = []
+        for rec in cands:
+            if self._agent_for(rec) is not None:
+                return rec
+        fs = self.registry.failsafe(alias)
+        if fs is not None and all(fs is not r for r in tried):
+            return fs
+        return None
 
     #: sends per (CR, signature) before re-consulting the scheduler — lets
     #: measured-latency feedback re-rank records for long-lived CRs without
@@ -672,10 +762,22 @@ class RuntimeAgent:
         isend/recv pairs compose.  Pass ``mailbox=False`` when the result
         will only ever be consumed through the returned handle (Wait/Test):
         otherwise each un-recv'd future stays queued — and keeps its result
-        array alive — until the CR is freed."""
+        array alive — until the CR is freed.
+
+        Inside a ``halo_graph()`` capture region the call records a DAG node
+        (returned in place of a live request) instead of executing; graph
+        results are delivered through the node futures only, never the CR
+        mailbox (DESIGN.md §8)."""
         self._check_live()
         if cr.freed:
             raise RuntimeError(f"CR {cr.uid} was freed")
+        g = _active_graph(self)
+        if g is not None:
+            if dest is not None:
+                raise RuntimeError(
+                    "MPIX_SendFwd/dest is not supported inside graph capture; "
+                    "pass the returned node as a later payload instead")
+            return g.record_isend(cr, payload, tag=tag, kwargs=kwargs)
         co = as_compute_object(payload)
         args = tuple(co.inputs[k] for k in sorted(co.inputs))
         kwargs = dict(kwargs)
@@ -758,6 +860,9 @@ class RuntimeAgent:
         """MPIX_Send: blocking path — a thin wait-on-future wrapper over
         :meth:`isend`.  Waits for completion so errors surface here (the
         pre-async contract); the result stays queued for ``recv``."""
+        if _active_graph(self) is not None:
+            raise RuntimeError("blocking MPIX_Send inside a halo_graph "
+                               "capture would deadlock; use MPIX_ISend")
         self.isend(payload, cr, tag=tag, **kwargs).result()
 
     def recv(self, cr: ChildRank, tag: int = 0, block: bool = True):
@@ -767,6 +872,9 @@ class RuntimeAgent:
         blocking receive); ``block=False`` only skips the final device sync.
         For a true non-blocking fetch use ``irecv`` + ``MPIX_Test``."""
         self._check_live()
+        if _active_graph(self) is not None:
+            raise RuntimeError("MPIX_Recv inside a halo_graph capture: graph "
+                               "results arrive on node futures, not mailboxes")
         with self._lock:
             box = cr.mailboxes[tag]
             if not box:

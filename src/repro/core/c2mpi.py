@@ -157,6 +157,26 @@ def MPIX_Test(request: HaloFuture) -> Tuple[bool, Optional[Any]]:
 
 
 # ---------------------------------------------------------------------------
+# Execution graphs (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+def MPIX_GraphBegin() -> "ExecutionGraph":
+    """Start capturing MPIX_ISend/halo_dispatch calls into an execution
+    graph on this thread.  Captured calls return :class:`GraphNode` request
+    handles; pass a node inside a later payload to express the dependency."""
+    from .graph import begin_capture
+    return begin_capture(halo_session())
+
+
+def MPIX_GraphEnd(launch: bool = True) -> "ExecutionGraph":
+    """Stop capturing; by default launch the DAG immediately.  Ready nodes
+    are scheduled concurrently across virtualization agents (cost-model
+    placement with transfer penalty); wait via ``graph.wait()`` or any
+    node's future (``MPIX_Wait(node)``)."""
+    from .graph import end_capture
+    return end_capture(launch=launch)
+
+
+# ---------------------------------------------------------------------------
 # Trace-safe dispatch for hardware-agnostic model code
 # ---------------------------------------------------------------------------
 def halo_dispatch(alias: str, *args, overrides: Optional[Dict] = None, **kwargs):

@@ -1,0 +1,491 @@
+"""C²MPI execution graphs: DAG capture + concurrent dispatch (DESIGN.md §8).
+
+The paper's host programs keep a *unified control flow* while the runtime
+orchestrates heterogeneous accelerators.  One-kernel-at-a-time dispatch
+leaves that promise half-kept: independent subroutines never overlap across
+substrates, and placement is decided per call rather than per workload.
+This module closes the gap with a task-graph layer in the style of
+asynchronous task-based runtimes (ORCHA, arXiv:2507.09337; Thomadakis &
+Chrisochoides, arXiv:2303.02543):
+
+* **Capture** — inside ``halo_graph()`` (or ``MPIX_GraphBegin``/``End``),
+  ``MPIX_ISend`` and host-level ``halo_dispatch`` calls record
+  :class:`GraphNode` s instead of executing.  Each node doubles as the
+  request's :class:`~repro.core.agents.HaloFuture`, so the graph *is* the
+  paper's future tree.  Data-dependency edges are inferred from payload
+  identity (a node appearing in a later payload) and from internal-buffer
+  identity (two stateful nodes sharing a ``BufferHandle`` serialize in
+  capture order).
+* **Placement** — at the moment a node becomes ready (parents done, their
+  actual substrates known), the :class:`~repro.core.scheduler.
+  CostModelScheduler` scores each feasible record by estimated latency +
+  per-substrate backlog + a cross-substrate transfer penalty per parent on
+  a different agent.  Backlog spreads independent branches across agents;
+  the transfer penalty keeps dependent chains on one agent unless splitting
+  pays.  Without estimates, placement falls back to static preference with
+  parent-platform affinity.
+* **Execution** — ready nodes are submitted to their placed agent's worker
+  queue, so nodes placed on different substrates genuinely overlap.  A node
+  whose record raises is re-placed onto the next feasible record (the
+  failing record is quarantined — failsafe semantics preserved); only when
+  every path fails does the error surface on the node future, and
+  descendants fail with :class:`GraphDependencyError`.  ``cancel()``
+  cancels every not-yet-started node.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from .agents import (HaloFuture, RuntimeAgent, VirtualizationAgent,
+                     _graph_capture, log)
+from .compute_object import ComputeObject, as_compute_object
+from .registry import KernelRecord, SelectionError
+from .scheduler import abstract_signature
+
+
+class GraphError(RuntimeError):
+    pass
+
+
+class GraphDependencyError(GraphError):
+    """A node could not run because an upstream dependency failed."""
+
+
+class GraphNode(HaloFuture):
+    """One captured kernel dispatch: DAG node and request future in one.
+
+    Passing a node inside a later captured payload both wires the
+    dependency edge and splices the parent's (future) result into the
+    child's arguments at execution time."""
+
+    def __init__(self, uid: int, alias: str, payload: Any,
+                 kwargs: Optional[Dict] = None, cr=None,
+                 overrides: Optional[Dict] = None,
+                 failsafe: Optional[Callable] = None, tag: int = 0):
+        super().__init__(uid=uid, alias=alias, tag=tag)
+        self.payload = payload
+        self.kwargs = dict(kwargs or {})
+        self.cr = cr
+        self.overrides = dict(overrides or {})
+        self.failsafe = failsafe
+        self.parents: List["GraphNode"] = []
+        self.children: List["GraphNode"] = []
+        self.platform: Optional[str] = None      # substrate it actually ran on
+        self.attempts: List[str] = []            # platforms tried, in order
+        self._tried: List[KernelRecord] = []     # records tried (failures)
+        self._first_exc: Optional[BaseException] = None
+        self._pending_parents = 0
+
+    def __repr__(self):
+        return (f"GraphNode(uid={self.uid}, alias={self.alias!r}, "
+                f"parents={[p.uid for p in self.parents]}, "
+                f"platform={self.platform!r})")
+
+
+def _scan_nodes(obj: Any, found: List[GraphNode]) -> None:
+    """Collect GraphNode references anywhere in a payload structure."""
+    if isinstance(obj, GraphNode):
+        found.append(obj)
+    elif isinstance(obj, ComputeObject):
+        for v in obj.inputs.values():
+            _scan_nodes(v, found)
+    elif isinstance(obj, dict):
+        for v in obj.values():
+            _scan_nodes(v, found)
+    elif isinstance(obj, (tuple, list)):
+        for v in obj:
+            _scan_nodes(v, found)
+
+
+def _materialize(obj: Any) -> Any:
+    """Substitute completed parents' results into a captured payload."""
+    if isinstance(obj, GraphNode):
+        return obj.result(timeout=0)             # parents completed by now
+    if isinstance(obj, ComputeObject):
+        return dataclasses.replace(
+            obj, inputs={k: _materialize(v) for k, v in obj.inputs.items()})
+    if isinstance(obj, dict):
+        return {k: _materialize(v) for k, v in obj.items()}
+    if isinstance(obj, (tuple, list)):
+        return type(obj)(_materialize(v) for v in obj)
+    return obj
+
+
+def _payload_bytes(args: Sequence[Any]) -> int:
+    return sum(int(a.nbytes) for a in args if hasattr(a, "nbytes"))
+
+
+class ExecutionGraph:
+    """A captured DAG of kernel dispatches plus its executor and handle.
+
+    Lifecycle: capture (``record_*`` via the session's isend/dispatch
+    hooks) → :meth:`launch` (submit every ready node) → :meth:`wait` /
+    per-node futures.  All executor state transitions run under one lock;
+    kernel execution itself runs on the virtualization agents' workers."""
+
+    def __init__(self, session: RuntimeAgent):
+        self.session = session
+        self.nodes: List[GraphNode] = []
+        self._buffer_writers: Dict[int, GraphNode] = {}
+        self._lock = threading.Lock()
+        self._launched = False
+        #: platform -> estimated seconds of queued graph work (backlog term)
+        self._backlog: Dict[str, float] = {}
+        #: (alias, sig, allowed, tried) -> feasible candidate list; chains
+        #: re-place the same signature repeatedly, and the registry filter
+        #: (supports predicates + sort) dominates placement cost otherwise
+        self._cand_cache: Dict[Any, List[KernelRecord]] = {}
+
+    # -- capture ---------------------------------------------------------
+    def record_isend(self, cr, payload, tag: int = 0,
+                     kwargs: Optional[Dict] = None) -> GraphNode:
+        node = GraphNode(len(self.nodes) + 1, cr.alias, payload, kwargs,
+                         cr=cr, overrides=cr.overrides, failsafe=cr.failsafe,
+                         tag=tag)
+        self._wire(node)
+        # stateful hazard edges: nodes sharing an internal buffer must
+        # preserve capture order (read/write of CR state is not commutative)
+        for handle in cr.buffers.values():
+            prev = self._buffer_writers.get(handle.uid)
+            if prev is not None and prev is not node \
+                    and all(p is not prev for p in node.parents):
+                node.parents.append(prev)
+                prev.children.append(node)
+            self._buffer_writers[handle.uid] = node
+        return node
+
+    def record_dispatch(self, alias: str, args: Tuple, kwargs: Dict,
+                        overrides: Optional[Dict]) -> GraphNode:
+        overrides = dict(overrides or {})
+        node = GraphNode(len(self.nodes) + 1, alias, tuple(args), kwargs,
+                         overrides=overrides,
+                         failsafe=overrides.get("failsafe"))
+        self._wire(node)
+        return node
+
+    def _wire(self, node: GraphNode) -> None:
+        if self._launched:
+            raise GraphError("graph already launched; begin a new capture")
+        found: List[GraphNode] = []
+        _scan_nodes(node.payload, found)
+        for parent in dict.fromkeys(found):      # dedupe, keep order
+            if parent is node:
+                continue
+            node.parents.append(parent)
+            parent.children.append(node)
+        self.nodes.append(node)
+
+    # -- handle ----------------------------------------------------------
+    @property
+    def outputs(self) -> List[GraphNode]:
+        """Terminal nodes (no consumers) — the graph's result frontier."""
+        return [n for n in self.nodes if not n.children]
+
+    def placements(self) -> Dict[int, Optional[str]]:
+        return {n.uid: n.platform for n in self.nodes}
+
+    def wait(self, timeout: Optional[float] = None) -> List[Any]:
+        """Block until every output node completes; returns their results in
+        capture order (device-ready).  Re-raises the first node error."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        out = []
+        for n in self.outputs:
+            left = None if deadline is None \
+                else max(0.0, deadline - time.monotonic())
+            out.append(jax.block_until_ready(n.result(left)))
+        return out
+
+    def cancel(self) -> int:
+        """Cancel every node not yet claimed by a worker; returns count."""
+        return sum(1 for n in self.nodes if n.cancel())
+
+    # -- execution ---------------------------------------------------------
+    def launch(self) -> "ExecutionGraph":
+        with self._lock:
+            if self._launched:
+                return self
+            self._launched = True
+            for n in self.nodes:
+                n._pending_parents = len(n.parents)
+        for n in self.nodes:
+            if not n.parents:
+                self._submit(n)
+        return self
+
+    def _submit(self, node: GraphNode) -> None:
+        placed = self._prepare(node)
+        if placed is not None:
+            self._dispatch_attempt(node, *placed)
+
+    def _prepare(self, node: GraphNode):
+        """Materialize + place one ready node; returns the dispatch tuple
+        ``(rec, agent, est, args, kwargs)`` or None after failing the node."""
+        if node.done():                          # cancelled / failed upstream
+            return None
+        try:
+            args, kwargs = self._node_args(node)
+        except Exception as exc:  # noqa: BLE001 — upstream outcome propagates
+            self._fail_node(node, GraphDependencyError(
+                f"node {node.uid} ({node.alias}): dependency failed: {exc}"))
+            return None
+        try:
+            rec, agent, est = self._place(node, args)
+        except Exception as exc:  # noqa: BLE001 — SelectionError et al.
+            self._fail_node(node, exc)
+            return None
+        return rec, agent, est, args, kwargs
+
+    def _node_args(self, node: GraphNode) -> Tuple[Tuple, Dict]:
+        payload = _materialize(node.payload)
+        if node.cr is not None:                  # isend-captured: C²MPI path
+            co = as_compute_object(payload)
+            args = tuple(co.inputs[k] for k in sorted(co.inputs))
+            kwargs = dict(node.kwargs)
+            kwargs.update(co.meta)
+            return args, kwargs
+        return tuple(payload), dict(node.kwargs)
+
+    def _place(self, node: GraphNode, args: Tuple
+               ) -> Tuple[Optional[KernelRecord], VirtualizationAgent, float]:
+        """Pick (record, agent, estimate) for one ready node.
+
+        Returns ``record=None`` for the claim-level failsafe callback.
+        Raises SelectionError when nothing can run the node."""
+        sess = self.session
+        overrides = node.overrides
+        sched = sess.scheduler
+        sig = abstract_signature(args)
+        allowed_ov = overrides.get("allowed_platforms")
+        pref_ov = overrides.get("platform_preference")
+        key = (node.alias, sig, tuple(allowed_ov) if allowed_ov else None,
+               tuple(pref_ov) if pref_ov else None,
+               tuple(id(r) for r in node._tried))
+        with self._lock:
+            cands = self._cand_cache.get(key)
+        if cands is None:
+            allowed = allowed_ov or sess._allowed_platforms()
+            pref = pref_ov or sess._platform_preference()
+            try:
+                cands = sess.registry.candidates(
+                    node.alias, *args, allowed_platforms=allowed,
+                    platform_preference=pref, exclude=node._tried)
+            except SelectionError:
+                cands = []
+            with self._lock:
+                self._cand_cache[key] = cands
+        if sched is not None and cands:
+            # filter at use time, not cache time: a record quarantined after
+            # this key was cached must stop being offered immediately
+            cands = [c for c in cands if not sched.is_failed(c)]
+        parent_platforms = [p.platform for p in node.parents]
+        rec: Optional[KernelRecord] = None
+        est = 0.0
+        if sched is not None and len(cands) == 1:
+            # chains re-place one pinned/cached candidate per node: skip
+            # the scoring pass, keep the estimate for backlog accounting
+            rec = cands[0]
+            est = sched.estimate(rec, sig, args) or 0.0
+        elif sched is not None and cands:
+            with self._lock:
+                backlog = dict(self._backlog)
+            rec = sched.place(node.alias, cands, args,
+                              parent_platforms=parent_platforms,
+                              payload_bytes=_payload_bytes(args),
+                              backlog=backlog)
+            if rec is not None:
+                est = sched.estimate(rec, sig, args) or 0.0
+        if rec is None and cands:
+            # no estimates: static preference with parent-platform affinity,
+            # so unmeasured chains still stay on one substrate
+            for p in parent_platforms:
+                rec = next((c for c in cands if c.platform == p), None)
+                if rec is not None:
+                    break
+            rec = rec or cands[0]
+        if rec is None:
+            fs = sess.registry.failsafe(node.alias)
+            if fs is not None and all(fs is not r for r in node._tried):
+                rec = fs
+        if rec is None:
+            if node.failsafe is not None:
+                return None, sess.agents["jnp"], 0.0
+            raise SelectionError(
+                f"graph node {node.uid}: no feasible record for "
+                f"{node.alias!r} and no fail-safe")
+        agent = sess._agent_for(rec) or sess.agents["jnp"]
+        return rec, agent, est
+
+    def _dispatch_attempt(self, node: GraphNode, rec: Optional[KernelRecord],
+                          agent: VirtualizationAgent, est: float,
+                          args: Tuple, kwargs: Dict) -> None:
+        with self._lock:
+            self._backlog[agent.platform] = \
+                self._backlog.get(agent.platform, 0.0) + est
+        node.attempts.append(rec.platform if rec is not None else "failsafe")
+        internal = HaloFuture(uid=node.uid, alias=node.alias, tag=node.tag)
+        try:
+            agent.submit(
+                lambda: self._run(node, rec, agent, est, args, kwargs),
+                future=internal)
+        except Exception as exc:  # noqa: BLE001 — agent shut down
+            with self._lock:
+                self._backlog[agent.platform] = \
+                    max(0.0, self._backlog.get(agent.platform, 0.0) - est)
+            self._fail_node(node, exc)
+
+    def _run(self, node: GraphNode, rec: Optional[KernelRecord],
+             agent: VirtualizationAgent, est: float,
+             args: Tuple, kwargs: Dict) -> None:
+        """Worker-side body of node attempts (runs on ``agent``'s worker).
+
+        After a success, one ready child placed on the *same* agent
+        continues inline — a dependent chain runs back-to-back on its
+        substrate without a queue round trip per node; children placed on
+        other agents are enqueued there (that's the overlap)."""
+        sess = self.session
+        while True:
+            try:
+                # first attempt claims the node (refusing a queued cancel);
+                # re-placement attempts arrive already RUNNING
+                if not node._try_start() and not node.running():
+                    self._backlog_sub(agent.platform, est)
+                    return                       # cancelled while queued
+                t0 = time.perf_counter()
+                if rec is None:
+                    out = node.failsafe(*args, **kwargs)
+                else:
+                    out = sess._execute_on(agent, rec, node.cr, args, kwargs)
+            except Exception as exc:  # noqa: BLE001 — re-place or surface
+                self._backlog_sub(agent.platform, est)
+                self._retry_or_fail(node, rec, args, kwargs, exc)
+                return
+            self._backlog_sub(agent.platform, est)
+            node.platform = rec.platform if rec is not None else agent.platform
+            node.set_result(out)
+            # sample *before* child placement/dispatch so the observed
+            # window matches the DRPC path's (fn + device sync only) — an
+            # EMA inflated by executor host work would skew the shared table
+            if rec is not None and sess.scheduler is not None:
+                sig = abstract_signature(args)
+                if sess.scheduler.wants_sample(rec, sig):
+                    try:
+                        jax.block_until_ready(out)
+                    except Exception:            # non-array outputs
+                        pass
+                    sess.scheduler.observe(rec, sig, time.perf_counter() - t0)
+            ready: List[GraphNode] = []
+            with self._lock:
+                for child in node.children:
+                    child._pending_parents -= 1
+                    if child._pending_parents == 0:
+                        ready.append(child)
+            nxt = None
+            for child in ready:
+                placed = self._prepare(child)
+                if placed is None:
+                    continue
+                c_rec, c_agent, c_est, c_args, c_kwargs = placed
+                if nxt is None and c_agent is agent:
+                    child.attempts.append(
+                        c_rec.platform if c_rec is not None else "failsafe")
+                    nxt = (child, c_rec, c_args, c_kwargs)   # run inline
+                else:
+                    self._dispatch_attempt(child, c_rec, c_agent, c_est,
+                                           c_args, c_kwargs)
+            if nxt is None:
+                return
+            # inline continuation: est=0 (never queued, no backlog entry)
+            node, rec, args, kwargs = nxt
+            est = 0.0
+
+    def _backlog_sub(self, platform: str, est: float) -> None:
+        if est:
+            with self._lock:
+                self._backlog[platform] = \
+                    max(0.0, self._backlog.get(platform, 0.0) - est)
+
+    def _retry_or_fail(self, node: GraphNode, rec: Optional[KernelRecord],
+                       args: Tuple, kwargs: Dict, exc: BaseException) -> None:
+        # like RuntimeAgent._execute_record, the *original* error is what
+        # surfaces after every re-placement path fails (later attempts'
+        # errors are secondary symptoms of an already-degraded node)
+        node._first_exc = node._first_exc or exc
+        if rec is not None:
+            node._tried.append(rec)
+            self.session._record_failure(rec, exc)
+            log.warning("graph node %d (%s): attempt on %s failed; re-placing",
+                        node.uid, node.alias, rec.platform)
+            try:
+                rec2, agent2, est2 = self._place(node, args)
+            except Exception:  # noqa: BLE001 — nothing left to try
+                rec2 = None
+            else:
+                self._dispatch_attempt(node, rec2, agent2, est2, args, kwargs)
+                return
+        self._fail_node(node, node._first_exc)
+
+    def _fail_node(self, node: GraphNode, exc: BaseException) -> None:
+        if not node.done():
+            node.set_exception(exc)
+        self._fail_descendants(node, exc)
+
+    def _fail_descendants(self, node: GraphNode, exc: BaseException) -> None:
+        for child in node.children:
+            if child.done():
+                continue
+            child.set_exception(GraphDependencyError(
+                f"node {child.uid} ({child.alias}): upstream node "
+                f"{node.uid} ({node.alias}) failed: {exc}"))
+            self._fail_descendants(child, exc)
+
+# ---------------------------------------------------------------------------
+# Capture API (MPIX_GraphBegin / MPIX_GraphEnd / halo_graph)
+# ---------------------------------------------------------------------------
+def begin_capture(session: RuntimeAgent) -> ExecutionGraph:
+    if getattr(_graph_capture, "graph", None) is not None:
+        raise GraphError("a graph capture is already active on this thread")
+    g = ExecutionGraph(session)
+    _graph_capture.graph = g
+    return g
+
+
+def end_capture(launch: bool = True) -> ExecutionGraph:
+    g = getattr(_graph_capture, "graph", None)
+    if g is None:
+        raise GraphError("no active graph capture on this thread")
+    _graph_capture.graph = None
+    if launch:
+        g.launch()
+    return g
+
+
+@contextlib.contextmanager
+def halo_graph(session: Optional[RuntimeAgent] = None, launch: bool = True):
+    """Capture every ``MPIX_ISend``/``halo_dispatch`` in the block into one
+    execution graph, launched on exit (``launch=False`` defers to an
+    explicit ``g.launch()``).  Yields the :class:`ExecutionGraph`:
+
+        with halo_graph() as g:
+            t = MPIX_ISend((a, b), cr_ewmm)
+            m = MPIX_ISend((t, w), cr_mmm)     # depends on t by identity
+            r = MPIX_ISend((m, gamma), cr_rms)
+        out = g.wait()                         # HaloFuture tree, resolved
+    """
+    if session is None:
+        from .c2mpi import halo_session
+        session = halo_session()
+    g = begin_capture(session)
+    ok = False
+    try:
+        yield g
+        ok = True
+    finally:
+        _graph_capture.graph = None
+        if ok and launch:
+            g.launch()

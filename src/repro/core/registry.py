@@ -175,18 +175,24 @@ class KernelRegistry:
                    allowed_platforms: Sequence[str] = PLATFORM_PREFERENCE,
                    platform_preference: Optional[Sequence[str]] = None,
                    required_attrs: Optional[KernelAttributes] = None,
+                   exclude: Sequence[KernelRecord] = (),
                    **kwargs) -> List[KernelRecord]:
         """All feasible records for an alias, best-static-rank first.
 
         Shared by :meth:`select` (static order) and the cost-model scheduler
-        (which re-ranks by estimated latency).  Raises for unknown aliases;
-        returns ``[]`` when nothing feasible survives the filters."""
+        (which re-ranks by estimated latency).  ``exclude`` drops specific
+        records by identity — used for re-placement after an execution
+        failure, where already-tried records must not be offered again.
+        Raises for unknown aliases; returns ``[]`` when nothing feasible
+        survives the filters."""
         alias = self._canonical(alias)
         pref = tuple(platform_preference or PLATFORM_PREFERENCE)
         allowed = set(allowed_platforms)
+        skip = {id(r) for r in exclude}
         out = [
             r for r in self._records[alias]
-            if r.platform in allowed
+            if id(r) not in skip
+            and r.platform in allowed
             and (required_attrs is None or r.attrs.matches(required_attrs))
             and r.feasible(*args, **kwargs)
         ]

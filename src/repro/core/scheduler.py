@@ -51,12 +51,17 @@ def _sig_str(sig: SigType) -> str:
     return ",".join(f"{dt}[{'x'.join(map(str, shape))}]" for shape, dt in sig)
 
 
-def _key(record: KernelRecord, sig: SigType) -> str:
-    """Measurement key.  Includes priority + version so two records on the
-    same alias+platform (registry supports replicas, §V-C) keep separate
-    latency tables."""
+def _record_key(record: KernelRecord) -> str:
+    """Stable per-record key.  Includes priority + version so two records on
+    the same alias+platform (registry supports replicas, §V-C) keep separate
+    entries."""
     return (f"{record.alias}|{record.platform}|"
-            f"{record.priority}:{record.attrs.sw_verid}|{_sig_str(sig)}")
+            f"{record.priority}:{record.attrs.sw_verid}")
+
+
+def _key(record: KernelRecord, sig: SigType) -> str:
+    """Measurement key: the record key specialized by argument signature."""
+    return f"{_record_key(record)}|{_sig_str(sig)}"
 
 
 class CostModelScheduler:
@@ -72,9 +77,23 @@ class CostModelScheduler:
     sample_every: int = 8
     #: route every Nth DRPC selection to the best-ranked *unmeasured*
     #: candidate so greedy choice cannot lock out an untried record.
-    explore_every: int = 16
+    #: Overridable per instance (``explore_every=``); None/0 disables.
+    explore_every: Optional[int] = 16
+    #: cross-substrate transfer model for graph placement (DESIGN.md §8):
+    #: a fixed staging latency plus payload-bytes over an effective
+    #: host-side link bandwidth.  Crossing agents is never free — one
+    #: device sync + re-dispatch per hop — so chained nodes stay on one
+    #: substrate unless the estimated kernel-time win exceeds the hop cost.
+    transfer_latency_s: float = 2e-5
+    transfer_bandwidth: float = 8e9          # bytes / second
 
-    def __init__(self, cache_path: Optional[os.PathLike] = None):
+    def __init__(self, cache_path: Optional[os.PathLike] = None,
+                 explore_every: Optional[int] = None,
+                 explore_offset: int = 0):
+        """``explore_every``/``explore_offset`` inject the exploration
+        policy: every Nth :meth:`choose` per key explores, starting the
+        per-key counter at ``offset`` — so tests can pin exactly which call
+        explores instead of depending on instance-global call history."""
         self._lock = threading.Lock()
         # key -> [n_observations, ema_seconds]; n counts *kept* samples
         # (the warmup/compile sample per key is discarded, see observe()).
@@ -82,7 +101,11 @@ class CostModelScheduler:
         self._warmed: Dict[str, bool] = {}
         self._attempts: Dict[str, int] = {}    # wants_sample() call counts
         self._chooses: Dict[str, int] = {}     # choose() call counts per key
+        self._failed: Dict[str, int] = {}      # record key -> failure count
         self._since_save = 0
+        if explore_every is not None:
+            self.explore_every = explore_every or None
+        self.explore_offset = explore_offset
         self.cache_path = Path(cache_path) if cache_path else None
         if self.cache_path is not None and self.cache_path.exists():
             self.load(self.cache_path)
@@ -138,6 +161,23 @@ class CostModelScheduler:
                 return True
             return n % self.sample_every == 0
 
+    # -- failure quarantine ---------------------------------------------------
+    def mark_failed(self, record: KernelRecord) -> None:
+        """Quarantine a record whose execution raised: selection skips it
+        until :meth:`clear_failures`.  Failures are per-process (never
+        persisted) — a failing substrate may be healthy in the next run."""
+        with self._lock:
+            key = _record_key(record)
+            self._failed[key] = self._failed.get(key, 0) + 1
+
+    def is_failed(self, record: KernelRecord) -> bool:
+        with self._lock:
+            return _record_key(record) in self._failed
+
+    def clear_failures(self) -> None:
+        with self._lock:
+            self._failed.clear()
+
     # -- selection -----------------------------------------------------------
     def estimate(self, record: KernelRecord, sig: SigType, args: Sequence[Any]
                  ) -> Optional[float]:
@@ -168,11 +208,12 @@ class CostModelScheduler:
             return None
         sig = abstract_signature(args)
         estimates = [self.estimate(rec, sig, args) for rec in candidates]
-        if explore and any(e is None for e in estimates) \
+        if explore and self.explore_every \
+                and any(e is None for e in estimates) \
                 and any(e is not None for e in estimates):
             key = f"{alias}|{_sig_str(sig)}"
             with self._lock:
-                n = self._chooses.get(key, 0)
+                n = self._chooses.get(key, self.explore_offset)
                 self._chooses[key] = n + 1
             if n % self.explore_every == self.explore_every - 1:
                 return next(rec for rec, e in zip(candidates, estimates)
@@ -181,6 +222,52 @@ class CostModelScheduler:
         for i, est in enumerate(estimates):
             if est is not None and (best is None or est < best[0]):
                 best = (est, i)
+        return candidates[best[1]] if best is not None else None
+
+    # -- graph placement (DESIGN.md §8) ---------------------------------------
+    def transfer_penalty(self, nbytes: int) -> float:
+        """Estimated seconds to stage one node's inputs onto a different
+        substrate than the one that produced them."""
+        return self.transfer_latency_s + max(0, nbytes) / self.transfer_bandwidth
+
+    def place(self, alias: str, candidates: Sequence[KernelRecord],
+              args: Sequence[Any], parent_platforms: Sequence[str] = (),
+              payload_bytes: int = 0,
+              backlog: Optional[Dict[str, float]] = None
+              ) -> Optional[KernelRecord]:
+        """Per-node graph placement: cheapest estimated completion time.
+
+        Score = kernel-latency estimate + the chosen substrate's queued work
+        (``backlog``, seconds of already-placed nodes per platform — this is
+        what spreads *independent* branches across agents) + one
+        :meth:`transfer_penalty` per parent that ran on a different substrate
+        (this is what keeps *dependent* chains together unless splitting
+        pays).  A candidate with no estimate scores as the *worst* estimated
+        one (pessimistic proxy): an idle unmeasured substrate absorbs
+        spill-over only when the queue imbalance exceeds the whole known
+        latency spread — protecting against substrates that are orders of
+        magnitude slow (e.g. pallas-interpret off-TPU) while its first
+        execution feeds the table and makes future scoring honest.
+        Returns None when *no* candidate has an estimate — callers fall back
+        to static preference with parent-platform affinity."""
+        if not candidates:
+            return None
+        sig = abstract_signature(args)
+        estimates = [self.estimate(rec, sig, args) for rec in candidates]
+        known = [e for e in estimates if e is not None]
+        if not known:
+            return None
+        proxy = max(known)
+        best: Optional[Tuple[float, int]] = None
+        for i, rec in enumerate(candidates):
+            score = estimates[i] if estimates[i] is not None else proxy
+            if backlog:
+                score += backlog.get(rec.platform, 0.0)
+            score += sum(self.transfer_penalty(payload_bytes)
+                         for p in parent_platforms
+                         if p is not None and p != rec.platform)
+            if best is None or score < best[0]:
+                best = (score, i)
         return candidates[best[1]] if best is not None else None
 
     # -- persistence ---------------------------------------------------------

@@ -11,6 +11,7 @@ best feasible substrate (pallas > xla > jnp by default) per invocation.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from ..core.registry import GLOBAL_REGISTRY, KernelAttributes, KernelRecord
@@ -37,6 +38,12 @@ def _pallas_ok(*args, **kw) -> bool:
 def _rec(alias, fn, platform, prio, *, failsafe=False, supports=None,
          cost=None, doc=""):
     hw = _TPU_ATTRS if platform == "pallas" else _ANY_ATTRS
+    if platform == "pallas" and jax.default_backend() != "tpu":
+        # Table-II cost models are per-hardware attributes calibrated for
+        # the TPU target; off-TPU the pallas records run in interpret mode
+        # (a validation vehicle), where the analytic estimate is off by
+        # orders of magnitude and would hijack latency-aware placement.
+        cost = None
     return KernelRecord(
         alias=alias, fn=fn, platform=platform, priority=prio,
         attrs=KernelAttributes(sw_fid=f"fid:{alias.lower()}", **hw),

@@ -389,6 +389,60 @@ def _write(rec: Dict[str, Any], out_dir: Optional[Path]):
     (out_dir / name).write_text(json.dumps(rec, indent=1))
 
 
+def run_graph_smoke(out_dir: Optional[Path] = None,
+                    verbose: bool = True) -> Dict[str, Any]:
+    """Validate the execution-graph layer (DESIGN.md §8) in the dry-run
+    environment: capture a small diamond DAG with an independent branch,
+    run it on the forced-host backend, and record per-node placements and
+    wall time to ``graph_smoke.json``."""
+    import jax.numpy as jnp
+
+    from ..core import (KernelRegistry, RuntimeAgent, default_manifest,
+                        halo_graph)
+    from ..kernels import register_all
+
+    registry = KernelRegistry()
+    register_all(registry)
+    agent = RuntimeAgent(registry=registry, manifest=default_manifest())
+    rec: Dict[str, Any] = {"kind": "graph_smoke"}
+    t0 = time.time()
+    try:
+        n = 64
+        a = jnp.eye(n) + 0.1
+        gamma = jnp.ones(n)
+        cr = {al: agent.claim(al) for al in ("EWMM", "MMM", "RMSNORM", "JS")}
+        a_dd = a + n * jnp.eye(n)
+        with halo_graph(session=agent) as g:
+            top = agent.isend((a, a), cr["EWMM"])
+            left = agent.isend((top, a), cr["MMM"])
+            right = agent.isend((top, gamma), cr["RMSNORM"])
+            out = agent.isend((left, right), cr["EWMM"])
+            js = agent.isend((a_dd, jnp.zeros(n), jnp.ones(n)), cr["JS"])
+        g.wait(timeout=120)
+        rec["nodes"] = [
+            {"uid": node.uid, "alias": node.alias,
+             "parents": [p.uid for p in node.parents],
+             "platform": node.platform}
+            for node in g.nodes]
+        rec["outputs"] = len(g.outputs)
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        agent.finalize()
+    rec["total_s"] = round(time.time() - t0, 2)
+    if verbose:
+        print(f"[dryrun] graph smoke: {rec['status']} "
+              f"({len(rec.get('nodes', []))} nodes, {rec['total_s']}s)",
+              flush=True)
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / "graph_smoke.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -397,12 +451,17 @@ def main():
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--rules", default="default", choices=["default", "sp"])
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--graph-smoke", action="store_true",
+                    help="also validate the execution-graph layer on the "
+                         "forced-host backend (writes graph_smoke.json)")
     args = ap.parse_args()
     archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
     shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
     meshes = args.mesh.split(",")
     out_dir = Path(args.out)
     failures = 0
+    if args.graph_smoke:
+        failures += run_graph_smoke(out_dir)["status"] == "error"
     for arch in archs:
         for shape in shapes:
             for mesh_kind in meshes:

@@ -10,3 +10,12 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(monkeypatch):
+    """Keep tests hermetic: a developer's HALO_AUTOTUNE_CACHE must not leak
+    persisted latency tables into CostModelScheduler.default() instances
+    (RuntimeAgent builds one per session), which would make record selection
+    depend on module-external state."""
+    monkeypatch.delenv("HALO_AUTOTUNE_CACHE", raising=False)

@@ -90,6 +90,104 @@ def test_failsafe_registry_fallback(agent, rng):
     assert rec.platform == "jnp" and rec.is_failsafe
 
 
+class _FaultyAgent(VirtualizationAgent):
+    """Substrate whose device stage always raises — simulates a lost or
+    misbehaving accelerator behind a healthy-looking agent."""
+    platform = "xla"
+
+    def __init__(self):
+        super().__init__(name="faulty-xla")
+        self.failures = 0
+
+    def _device_execute(self, record, args, kwargs):
+        self.failures += 1
+        raise RuntimeError("device lost")
+
+
+def test_execution_failure_falls_back_to_failsafe_record(agent, rng):
+    """An agent raising in _device_execute re-places the request onto the
+    registry fail-safe record: host code still gets the right answer."""
+    faulty = _FaultyAgent()
+    agent.attach_agent(faulty)            # replaces the real xla agent
+    a = jax.random.normal(rng, (16, 16))
+    cr = agent.claim("MMM", overrides={
+        "allowed_platforms": ["xla", "jnp"],
+        "platform_preference": ["xla", "jnp"]})
+    agent.send((a, a), cr)                # must not raise
+    out = agent.recv(cr)
+    np.testing.assert_allclose(out, a @ a, rtol=1e-4, atol=1e-4)
+    assert faulty.failures == 1
+
+
+def test_execution_failure_quarantines_record_in_scheduler(agent, rng):
+    """After one failure the scheduler stops selecting the failing record:
+    later sends never touch the faulty substrate again."""
+    faulty = _FaultyAgent()
+    agent.attach_agent(faulty)
+    a = jax.random.normal(rng, (16, 16))
+    overrides = {"allowed_platforms": ["xla", "jnp"],
+                 "platform_preference": ["xla", "jnp"]}
+    cr = agent.claim("MMM", overrides=overrides)
+    for _ in range(4):
+        agent.send((a, a), cr)
+        agent.recv(cr)
+    assert faulty.failures == 1           # only the first send tried xla
+    xla_rec = next(r for r in agent.registry.records("MMM")
+                   if r.platform == "xla")
+    assert agent.scheduler.is_failed(xla_rec)
+    # a *fresh* CR also skips the quarantined record immediately
+    cr2 = agent.claim("MMM", overrides=overrides)
+    agent.send((a, a), cr2)
+    agent.recv(cr2)
+    assert faulty.failures == 1
+
+
+def test_execution_failure_error_surfaces_sync_and_async(agent):
+    """When no fallback exists (the fail-safe itself fails), the original
+    error surfaces through both the blocking send and the future path."""
+    def boom(x):
+        raise ValueError("kernel exploded")
+
+    agent.registry.register(KernelRecord(alias="BOOM", fn=boom,
+                                         platform="jnp", is_failsafe=True))
+    cr = agent.claim("BOOM")
+    with pytest.raises(ValueError, match="kernel exploded"):
+        agent.send((jnp.ones(2),), cr)    # sync path
+    fut = agent.isend((jnp.ones(2),), agent.claim("BOOM"))
+    with pytest.raises(ValueError, match="kernel exploded"):
+        fut.result(timeout=30)            # future path
+    assert isinstance(fut.exception(), ValueError)
+
+
+def test_execution_failure_engages_claim_callback_last(agent, rng):
+    """Claim-level fail-safe callback engages only after every registered
+    record (including the registry fail-safe) failed."""
+    faulty = _FaultyAgent()
+    agent.attach_agent(faulty)
+
+    def bad_ref(x):
+        raise RuntimeError("oracle also down")
+
+    reg = KernelRegistry()
+    reg.register(KernelRecord(alias="K", fn=bad_ref, platform="xla",
+                              priority=10))
+    reg.register(KernelRecord(alias="K", fn=bad_ref, platform="jnp",
+                              is_failsafe=True))
+    agent2 = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                          agents=[faulty, VirtualizationAgent()])
+    called = {}
+
+    def cb(*args):
+        called["yes"] = True
+        return jnp.zeros(2)
+
+    cr = agent2.claim("K", failsafe=cb)
+    agent2.send((jnp.ones(2),), cr)
+    np.testing.assert_allclose(agent2.recv(cr), 0.0)
+    assert called.get("yes")
+    agent2.finalize()
+
+
 def test_selection_prefers_optimized(agent, rng):
     a = jax.random.normal(rng, (8, 8))
     rec = agent.registry.select("MMM", a, a,

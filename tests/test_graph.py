@@ -1,0 +1,335 @@
+"""Execution graphs (DESIGN.md §8): capture semantics, diamond-DAG parity
+with serial dispatch, cross-substrate overlap, cost-model placement with
+transfer penalty, node-failure re-placement, and cancellation."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CostModelScheduler, GraphDependencyError, GraphError,
+                        HaloCancelledError, KernelRecord, KernelRegistry,
+                        RuntimeAgent, default_manifest, halo_graph)
+from repro.core.graph import GraphNode
+from repro.kernels import register_all
+
+
+@pytest.fixture()
+def agent():
+    registry = KernelRegistry()
+    register_all(registry)
+    a = RuntimeAgent(registry=registry, manifest=default_manifest())
+    yield a
+    a.finalize()
+
+
+def test_diamond_dag_matches_serial_dispatch(agent, rng):
+    """a → (b, c) → d: graph results are numerically identical to the same
+    chain dispatched serially one kernel at a time."""
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.normal(k1, (24, 24))
+    b = jax.random.normal(k2, (24, 24)) + 3.0
+    gamma = jnp.ones(24)
+
+    # serial reference: blocking send/recv per node
+    cr = {al: agent.claim(al) for al in ("EWMM", "MMM", "RMSNORM")}
+    agent.send((a, b), cr["EWMM"])
+    top = agent.recv(cr["EWMM"])
+    agent.send((top, b), cr["MMM"])
+    left = agent.recv(cr["MMM"])
+    agent.send((top, gamma), cr["RMSNORM"])
+    right = agent.recv(cr["RMSNORM"])
+    agent.send((left, right), cr["EWMM"])
+    ref = agent.recv(cr["EWMM"])
+
+    with halo_graph(session=agent) as g:
+        n_top = agent.isend((a, b), cr["EWMM"])
+        n_left = agent.isend((n_top, b), cr["MMM"])
+        n_right = agent.isend((n_top, gamma), cr["RMSNORM"])
+        n_out = agent.isend((n_left, n_right), cr["EWMM"])
+    assert [p.uid for p in n_out.parents] == [n_left.uid, n_right.uid]
+    assert n_top.children == [n_left, n_right]
+    (out,) = g.wait(timeout=60)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    # every node ran somewhere and reports its placement
+    assert all(p is not None for p in g.placements().values())
+
+
+def test_independent_branches_run_on_distinct_agents(agent):
+    """Two independent branches: while one stalls the jnp worker, the other
+    completes on the xla agent — distinct worker queues, true overlap."""
+    gate = threading.Event()
+
+    def stall(x):
+        gate.wait(10)
+        return x
+
+    agent.registry.register(KernelRecord(alias="STALL", fn=stall,
+                                         platform="jnp", is_failsafe=True))
+    cr_stall = agent.claim("STALL")
+    cr_fast = agent.claim("MMM", overrides={"allowed_platforms": ["xla"],
+                                            "platform_preference": ["xla"]})
+    # spy on the worker queues: record which agents received submissions
+    submitted = []
+    for platform, va in agent.agents.items():
+        orig = va.submit
+
+        def spy(fn, future=None, after=None, _p=platform, _o=orig):
+            submitted.append(_p)
+            return _o(fn, future=future, after=after)
+
+        va.submit = spy
+    with halo_graph(session=agent) as g:
+        n_slow = agent.isend((jnp.ones(4),), cr_stall)
+        n_fast = agent.isend((jnp.eye(8), jnp.eye(8)), cr_fast)
+    np.testing.assert_allclose(np.asarray(n_fast.result(timeout=30)),
+                               np.eye(8))
+    assert not n_slow.done()          # jnp branch still stalled → overlap
+    gate.set()
+    g.wait(timeout=30)
+    assert n_slow.platform == "jnp" and n_fast.platform == "xla"
+    assert {"jnp", "xla"} <= set(submitted)
+
+
+def test_transfer_penalty_keeps_chains_on_one_agent():
+    """With near-equal per-kernel estimates, the transfer penalty makes a
+    dependent chain stay on the parent's substrate."""
+    reg = KernelRegistry()
+    reg.register(KernelRecord(alias="K", fn=lambda a: a + 1.0, platform="xla",
+                              priority=10, cost_model=lambda a: 1.00e-4))
+    reg.register(KernelRecord(alias="K", fn=lambda a: a + 1.0, platform="jnp",
+                              cost_model=lambda a: 0.99e-4, is_failsafe=True))
+    sched = CostModelScheduler()
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                         scheduler=sched)
+    # force the root onto xla; the child's jnp record is 1 µs cheaper but a
+    # hop costs transfer_penalty(nbytes) >> 1 µs, so the chain stays on xla
+    cr_root = agent.claim("K", overrides={"allowed_platforms": ["xla"],
+                                          "platform_preference": ["xla"]})
+    cr_child = agent.claim("K")
+    with halo_graph(session=agent) as g:
+        root = agent.isend((jnp.zeros((256, 256)),), cr_root)
+        child = agent.isend((root,), cr_child)
+    g.wait(timeout=30)
+    assert root.platform == "xla"
+    assert child.platform == "xla"
+    # an *independent* node with the same records takes the cheaper jnp one
+    cr_free = agent.claim("K")
+    with halo_graph(session=agent) as g2:
+        free = agent.isend((jnp.zeros((256, 256)),), cr_free)
+    g2.wait(timeout=30)
+    assert free.platform == "jnp"
+    agent.finalize()
+
+
+def test_node_failure_replaces_onto_next_record():
+    """A node whose record raises re-places onto the next feasible record;
+    the failing record is quarantined; downstream nodes still complete."""
+    calls = []
+
+    def bad(a):
+        calls.append("xla")
+        raise RuntimeError("substrate lost")
+
+    def good(a):
+        calls.append("jnp")
+        return a + 1.0
+
+    reg = KernelRegistry()
+    xla_rec = reg.register(KernelRecord(alias="K", fn=bad, platform="xla",
+                                        priority=10))
+    reg.register(KernelRecord(alias="K", fn=good, platform="jnp",
+                              is_failsafe=True))
+    sched = CostModelScheduler()
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                         scheduler=sched)
+    cr1, cr2 = agent.claim("K"), agent.claim("K")
+    with halo_graph(session=agent) as g:
+        n1 = agent.isend((jnp.zeros(4),), cr1)
+        n2 = agent.isend((n1,), cr2)
+    np.testing.assert_allclose(np.asarray(n2.result(timeout=30)), 2.0)
+    assert n1.attempts == ["xla", "jnp"]          # tried, failed, re-placed
+    assert n1.platform == "jnp"
+    assert sched.is_failed(xla_rec)               # quarantined
+    assert n2.attempts == ["jnp"]                 # never offered the bad one
+    agent.finalize()
+
+
+def test_replacement_exhaustion_surfaces_original_error():
+    """When every re-placement also fails, the *first* attempt's error is
+    what surfaces (later errors are symptoms of an already-degraded node)."""
+    def bad_xla(a):
+        raise RuntimeError("device lost")
+
+    def bad_jnp(a):
+        raise TypeError("oracle also broken")
+
+    reg = KernelRegistry()
+    reg.register(KernelRecord(alias="K", fn=bad_xla, platform="xla",
+                              priority=10))
+    reg.register(KernelRecord(alias="K", fn=bad_jnp, platform="jnp",
+                              is_failsafe=True))
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest())
+    with halo_graph(session=agent) as g:
+        node = agent.isend((jnp.zeros(2),), agent.claim("K"))
+    with pytest.raises(RuntimeError, match="device lost"):
+        node.result(timeout=30)
+    assert node.attempts == ["xla", "jnp"]
+    agent.finalize()
+
+
+def test_per_node_platform_preference_respected():
+    """Two nodes with the same alias+signature but different preference
+    overrides must not share a placement: the candidate cache keys on the
+    preference as well."""
+    reg = KernelRegistry()
+    reg.register(KernelRecord(alias="K", fn=lambda a: a + 1.0, platform="xla",
+                              priority=10))
+    reg.register(KernelRecord(alias="K", fn=lambda a: a + 2.0, platform="jnp",
+                              is_failsafe=True))
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest())
+    cr_x = agent.claim("K", overrides={"platform_preference": ["xla", "jnp"]})
+    cr_j = agent.claim("K", overrides={"platform_preference": ["jnp", "xla"]})
+    with halo_graph(session=agent) as g:
+        nx = agent.isend((jnp.zeros(3),), cr_x)
+        nj = agent.isend((jnp.zeros(3),), cr_j)
+    g.wait(timeout=30)
+    assert nx.platform == "xla" and nj.platform == "jnp"
+    agent.finalize()
+
+
+def test_node_failure_without_fallback_cascades_to_descendants():
+    def boom(a):
+        raise ValueError("kernel exploded")
+
+    reg = KernelRegistry()
+    reg.register(KernelRecord(alias="BOOM", fn=boom, platform="jnp",
+                              is_failsafe=True))
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest())
+    cr1, cr2 = agent.claim("BOOM"), agent.claim("BOOM")
+    with halo_graph(session=agent) as g:
+        n1 = agent.isend((jnp.zeros(2),), cr1)
+        n2 = agent.isend((n1,), cr2)
+    with pytest.raises(ValueError, match="kernel exploded"):
+        n1.result(timeout=30)
+    with pytest.raises(GraphDependencyError):
+        n2.result(timeout=30)
+    with pytest.raises((ValueError, GraphDependencyError)):
+        g.wait(timeout=5)
+    agent.finalize()
+
+
+def test_claim_level_failsafe_engages_in_graph(agent):
+    cr = agent.claim("NO_SUCH_KERNEL", failsafe=lambda *a: jnp.zeros((2, 2)))
+    with halo_graph(session=agent) as g:
+        node = agent.isend((jnp.ones((2, 2)),), cr)
+    np.testing.assert_allclose(np.asarray(node.result(timeout=30)), 0.0)
+    assert node.attempts == ["failsafe"]
+
+
+def test_cancellation_propagates_to_not_yet_started_nodes(agent):
+    """Cancelling the graph while the root runs cancels every queued node;
+    the running node is unaffected (a worker already claimed it)."""
+    gate = threading.Event()
+
+    def slow(x):
+        gate.wait(10)
+        return x
+
+    agent.registry.register(KernelRecord(alias="SLOW", fn=slow,
+                                         platform="jnp", is_failsafe=True))
+    cr_slow, cr_next = agent.claim("SLOW"), agent.claim("SLOW")
+    with halo_graph(session=agent) as g:
+        root = agent.isend((jnp.ones(3),), cr_slow)
+        child = agent.isend((root,), cr_next)
+        grandchild = agent.isend((child,), cr_next)
+    deadline = time.monotonic() + 5
+    while not root.running() and time.monotonic() < deadline:
+        time.sleep(0.001)
+    assert root.running()
+    n = g.cancel()
+    assert n == 2                                  # child + grandchild
+    gate.set()
+    np.testing.assert_allclose(np.asarray(root.result(timeout=30)), 1.0)
+    assert child.cancelled() and grandchild.cancelled()
+    with pytest.raises(HaloCancelledError):
+        child.result(timeout=5)
+    # a parent completing after the cancel never resurrects cancelled kids
+    time.sleep(0.05)
+    assert child.cancelled() and not child.running()
+
+
+def test_cancel_before_launch_runs_nothing(agent):
+    ran = []
+    agent.registry.register(KernelRecord(
+        alias="TRACK", fn=lambda x: ran.append(1) or x, platform="jnp",
+        is_failsafe=True))
+    cr = agent.claim("TRACK")
+    with halo_graph(session=agent, launch=False) as g:
+        n1 = agent.isend((jnp.ones(2),), cr)
+        n2 = agent.isend((n1,), cr)
+    assert g.cancel() == 2
+    g.launch()
+    with pytest.raises(HaloCancelledError):
+        n1.result(timeout=5)
+    time.sleep(0.05)
+    assert ran == []
+
+
+def test_dispatch_capture_and_unified_control_flow(agent, rng):
+    """halo_dispatch inside a capture region records nodes — the paper's
+    unified control flow drives a DAG with zero API changes."""
+    a = jax.random.normal(rng, (16, 16))
+    with halo_graph(session=agent) as g:
+        t = agent.dispatch("MMM", a, a)
+        assert isinstance(t, GraphNode)
+        u = agent.dispatch("EWMM", t, t)
+    (out,) = g.wait(timeout=30)
+    ref = np.asarray(a @ a) ** 2
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-3, atol=1e-3)
+    # outside the region, dispatch executes immediately again
+    assert not isinstance(agent.dispatch("MMM", a, a), GraphNode)
+
+
+def test_blocking_calls_rejected_during_capture(agent):
+    cr = agent.claim("MMM")
+    with halo_graph(session=agent, launch=False) as g:
+        with pytest.raises(RuntimeError, match="MPIX_ISend"):
+            agent.send((jnp.eye(2), jnp.eye(2)), cr)
+        with pytest.raises(RuntimeError, match="node futures"):
+            agent.recv(cr)
+        with pytest.raises(GraphError, match="already active"):
+            from repro.core.graph import begin_capture
+            begin_capture(agent)
+    assert g.nodes == []
+
+
+def test_stateful_buffer_identity_orders_nodes(agent):
+    """Two nodes sharing a CR's internal buffer serialize in capture order
+    even with no payload dependency (write-write hazard)."""
+    def accum(x, state):
+        new = state["acc"] + x
+        return new, {"acc": new}
+
+    agent.registry.register(KernelRecord(alias="ACCUM", fn=accum,
+                                         platform="jnp", is_failsafe=True))
+    cr = agent.claim("ACCUM")
+    agent.create_buffer(cr, (2,), jnp.float32, name="acc")
+    with halo_graph(session=agent) as g:
+        n1 = agent.isend((jnp.ones(2),), cr)
+        n2 = agent.isend((10.0 * jnp.ones(2),), cr)
+    assert n2.parents == [n1]                      # buffer-identity edge
+    g.wait(timeout=30)
+    np.testing.assert_allclose(np.asarray(n2.result()), 11.0)
+
+
+def test_graph_results_not_mailboxed(agent):
+    cr = agent.claim("MMM")
+    with halo_graph(session=agent) as g:
+        agent.isend((jnp.eye(2), jnp.eye(2)), cr)
+    g.wait(timeout=30)
+    with pytest.raises(RuntimeError, match="empty mailbox"):
+        agent.recv(cr)

@@ -1,11 +1,28 @@
-"""Property-based tests (hypothesis) on kernel and system invariants."""
+"""Property-based tests (hypothesis) on kernel and system invariants, plus
+the differential conformance suite (which needs no hypothesis and must run
+even where hypothesis is absent — so the dependency degrades per-test, not
+per-module)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # hypothesis is an optional extra
+    def given(*a, **k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    class _NoStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NoStrategies()
 
 from repro.kernels.ewise import ewmd, ewmm
 from repro.kernels.matmul import mmm, mmm_ref
@@ -79,6 +96,154 @@ def test_rmsnorm_scale_invariance(rows, d, s, seed):
     g = jnp.ones(d)
     np.testing.assert_allclose(rmsnorm(x * s, g), rmsnorm(x, g),
                                rtol=1e-3, atol=1e-3)
+
+
+# -- differential conformance: every record on every alias agrees -------------
+# For each registered alias, every feasible record (jnp oracle, xla, pallas
+# interpret) must agree numerically on shapes × dtypes within per-dtype
+# tolerances.  A newly registered record that silently diverges from the
+# fail-safe oracle fails this suite by construction: the alias list is
+# asserted complete against the live registry.
+
+from repro.core import KernelRegistry  # noqa: E402
+from repro.kernels import register_all  # noqa: E402
+from repro.kernels.spmm import dense_to_bell, random_block_sparse  # noqa: E402
+
+
+def _u(seed, shape, dtype, lo=-1.0, hi=1.0):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), shape,
+                           minval=lo, maxval=hi)
+    return x.astype(dtype)
+
+
+def _smmm_args(seed, n, dtype):
+    key = jax.random.PRNGKey(seed)
+    sp = random_block_sparse(key, n, n, 32, 64, 0.5)
+    vals, idx = dense_to_bell(sp, 32, 64)
+    return (vals.astype(dtype), idx, _u(seed + 1, (n, n), dtype))
+
+
+def _ssd_args(seed, s, dtype):
+    b, h, p, g, n = 1, 2, 8, 1, 16
+    return (_u(seed, (b, s, h, p), dtype, -0.5, 0.5),
+            jax.nn.softplus(_u(seed + 1, (b, s, h), jnp.float32)).astype(dtype)
+            * jnp.asarray(0.1, dtype),
+            -jnp.exp(_u(seed + 2, (h,), jnp.float32)).astype(dtype),
+            _u(seed + 3, (b, s, g, n), dtype, -0.5, 0.5),
+            _u(seed + 4, (b, s, g, n), dtype, -0.5, 0.5),
+            _u(seed + 5, (h,), dtype, -0.1, 0.1))
+
+
+def _ssd_decode_args(seed, dtype):
+    b, h, p, g, n = 2, 2, 8, 1, 16
+    return (jnp.zeros((b, h, p, n), dtype),
+            _u(seed, (b, h, p), dtype, -0.5, 0.5),
+            jax.nn.softplus(_u(seed + 1, (b, h), jnp.float32)).astype(dtype)
+            * jnp.asarray(0.1, dtype),
+            -jnp.exp(_u(seed + 2, (h,), jnp.float32)).astype(dtype),
+            _u(seed + 3, (b, g, n), dtype, -0.5, 0.5),
+            _u(seed + 4, (b, g, n), dtype, -0.5, 0.5),
+            _u(seed + 5, (h,), dtype, -0.1, 0.1))
+
+
+def _attn_args(seed, s, dtype):
+    return (_u(seed, (1, 4, s, 32), dtype),
+            _u(seed + 1, (1, 2, s, 32), dtype),
+            _u(seed + 2, (1, 2, s, 32), dtype))
+
+
+def _moe_args(seed, rows, dtype):
+    return (_u(seed, (2, rows, 16), dtype),
+            _u(seed + 1, (2, 16, 32), dtype, -0.1, 0.1),
+            _u(seed + 2, (2, 16, 32), dtype, -0.1, 0.1),
+            _u(seed + 3, (2, 32, 16), dtype, -0.1, 0.1))
+
+
+def _js_args(seed, n, dtype):
+    a = _u(seed, (n, n), dtype) + jnp.asarray(n, dtype) * jnp.eye(n, dtype=dtype)
+    return (a, jnp.zeros(n, dtype), _u(seed + 1, (n,), dtype))
+
+
+# alias -> list of arg builders, one per shape case (≥2 cases each; the
+# bfloat16 pass runs the first case only to keep the fast job fast)
+CONFORMANCE_CASES = {
+    "MMM": [lambda d: (_u(0, (16, 24), d), _u(1, (24, 8), d)),
+            lambda d: (_u(2, (40, 33), d), _u(3, (33, 48), d))],
+    "EWMM": [lambda d: (_u(0, (8, 16), d), _u(1, (8, 16), d)),
+             lambda d: (_u(2, (33, 65), d), _u(3, (33, 65), d))],
+    "EWMD": [lambda d: (_u(0, (8, 16), d), _u(1, (8, 16), d, 0.5, 3.0)),
+             lambda d: (_u(2, (33, 65), d), _u(3, (33, 65), d, 0.5, 3.0))],
+    "MVM": [lambda d: (_u(0, (16, 24), d), _u(1, (24,), d)),
+            lambda d: (_u(2, (40, 56), d), _u(3, (56,), d))],
+    "VDP": [lambda d: (_u(0, (64,), d), _u(1, (64,), d)),
+            lambda d: (_u(2, (1000,), d), _u(3, (1000,), d))],
+    "JS": [lambda d: _js_args(0, 16, d),
+           lambda d: _js_args(2, 48, d)],
+    "1DCONV": [lambda d: (_u(0, (256,), d), _u(1, (5,), d)),
+               lambda d: (_u(2, (1024,), d), _u(3, (9,), d))],
+    "SMMM": [lambda d: _smmm_args(0, 64, d),
+             lambda d: _smmm_args(2, 128, d)],
+    "RMSNORM": [lambda d: (_u(0, (4, 32), d, 0.1, 2.0), _u(1, (32,), d)),
+                lambda d: (_u(2, (7, 129), d, 0.1, 2.0), _u(3, (129,), d))],
+    "FLASH_ATTN": [lambda d: _attn_args(0, 32, d),
+                   lambda d: _attn_args(3, 64, d)],
+    "GQA_DECODE": [lambda d: _attn_args(0, 32, d),
+                   lambda d: _attn_args(3, 48, d)],
+    "SSD": [lambda d: _ssd_args(0, 32, d),
+            lambda d: _ssd_args(6, 64, d)],
+    "SSD_DECODE": [lambda d: _ssd_decode_args(0, d),
+                   lambda d: _ssd_decode_args(6, d)],
+    "MOE_FFN": [lambda d: _moe_args(0, 4, d),
+                lambda d: _moe_args(4, 6, d)],
+}
+
+#: per-dtype numerical tolerances: bfloat16 has an 8-bit mantissa, so
+#: records that reduce in different orders legitimately differ by ~1e-2
+CONFORMANCE_TOL = {
+    "float32": dict(rtol=2e-4, atol=2e-4),
+    "bfloat16": dict(rtol=4e-2, atol=4e-2),
+}
+
+
+@pytest.fixture(scope="module")
+def kernel_registry():
+    reg = KernelRegistry()
+    register_all(reg)
+    return reg
+
+
+def test_conformance_covers_every_registered_alias(kernel_registry):
+    """A new alias registered without a conformance case fails here, so no
+    kernel can join the registry outside the differential suite."""
+    assert sorted(CONFORMANCE_CASES) == kernel_registry.aliases()
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("alias", sorted(CONFORMANCE_CASES))
+def test_records_conform_to_failsafe_oracle(kernel_registry, alias, dtype):
+    """Differential check: every feasible record for the alias reproduces
+    the fail-safe oracle within the dtype's tolerance on every case."""
+    cases = CONFORMANCE_CASES[alias]
+    if dtype == "bfloat16":
+        cases = cases[:1]                 # keep the fast job fast
+    oracle = kernel_registry.failsafe(alias)
+    assert oracle is not None, alias
+    tol = CONFORMANCE_TOL[dtype]
+    jdt = jnp.dtype(dtype)
+    for ci, build in enumerate(cases):
+        args = build(jdt)
+        ref = [np.asarray(l, np.float32)
+               for l in jax.tree.leaves(oracle.fn(*args))]
+        for rec in kernel_registry.records(alias):
+            if rec is oracle or not rec.feasible(*args):
+                continue
+            out = [np.asarray(l, np.float32)
+                   for l in jax.tree.leaves(rec.fn(*args))]
+            assert len(out) == len(ref), (alias, rec.platform)
+            for l_ref, l_out in zip(ref, out):
+                np.testing.assert_allclose(
+                    l_out, l_ref, err_msg=f"{alias}[{rec.platform}] case {ci} "
+                    f"{dtype}", **tol)
 
 
 # -- system invariant: registry selection is deterministic given signature ----

@@ -134,6 +134,83 @@ def test_runtime_feedback_populates_measurements():
     assert est is not None and est > 0.0
 
 
+def test_exploration_policy_is_injectable_and_deterministic():
+    """The 1-in-N exploration is seeded via (explore_every, explore_offset):
+    two schedulers built with the same knobs make identical choices, and the
+    exploring call index is exactly pinned — no instance-global call history
+    or module state involved."""
+    reg = _registry(cost_fast=None, cost_slow=lambda a: 1e-6)  # jnp unmeasured
+    xla_rec, jnp_rec = reg.records("K")
+    args = (jnp.zeros(4),)
+
+    def choices(sched, n=6):
+        return [sched.choose("K", [xla_rec, jnp_rec], args, explore=True)
+                for _ in range(n)]
+
+    a = CostModelScheduler(explore_every=3)
+    b = CostModelScheduler(explore_every=3)
+    assert choices(a) == choices(b)                      # deterministic
+    assert choices(CostModelScheduler(explore_every=3)) == [
+        xla_rec, xla_rec, jnp_rec, xla_rec, xla_rec, jnp_rec]
+    # offset shifts which call explores: offset = N-1 → the first call
+    assert choices(CostModelScheduler(explore_every=3, explore_offset=2),
+                   n=3) == [jnp_rec, xla_rec, xla_rec]
+    # explore_every=0/None disables exploration entirely
+    assert choices(CostModelScheduler(explore_every=0)) == [xla_rec] * 6
+
+
+def test_runtime_agent_accepts_injected_exploration():
+    """End-to-end determinism: an agent wired with explore_every=0 never
+    routes a DRPC send to an unmeasured record."""
+    reg = _registry(cost_fast=None, cost_slow=lambda a: 1e-6)
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                         scheduler=CostModelScheduler(explore_every=0))
+    cr = agent.claim("K")
+    for _ in range(40):                   # > default explore_every
+        agent.send((jnp.zeros(4),), cr)
+        out = agent.recv(cr)
+    np.testing.assert_allclose(np.asarray(out), 1.0)     # always xla
+
+
+def test_mark_failed_quarantines_until_cleared():
+    reg = _registry(cost_fast=lambda a: 1e-6, cost_slow=lambda a: 1e-3)
+    xla_rec, jnp_rec = reg.records("K")
+    sched = CostModelScheduler()
+    args = (jnp.zeros(4),)
+    sched.mark_failed(jnp_rec)
+    assert sched.is_failed(jnp_rec) and not sched.is_failed(xla_rec)
+    # the runtime agent's selection skips quarantined records
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                         scheduler=sched)
+    cr = agent.claim("K")
+    agent.send(args, cr)
+    np.testing.assert_allclose(np.asarray(agent.recv(cr)), 1.0)  # xla record
+    sched.clear_failures()
+    assert not sched.is_failed(jnp_rec)
+
+
+def test_place_transfer_penalty_and_backlog():
+    """Graph placement scoring: transfer penalty binds chains to the parent
+    substrate; backlog spreads independent work to an idle substrate."""
+    reg = _registry(cost_fast=lambda a: 0.9e-4, cost_slow=lambda a: 1.0e-4)
+    xla_rec, jnp_rec = reg.records("K")
+    sched = CostModelScheduler()
+    args = (jnp.zeros((64, 64)),)
+    cands = [xla_rec, jnp_rec]
+    # independent node: jnp is cheapest outright
+    assert sched.place("K", cands, args) is jnp_rec
+    # same node downstream of an xla parent: the hop costs more than 10 µs
+    assert sched.place("K", cands, args,
+                       parent_platforms=["xla"],
+                       payload_bytes=64 * 64 * 4) is xla_rec
+    # heavy xla backlog pushes an independent node onto jnp
+    assert sched.place("K", cands, args,
+                       backlog={"xla": 1.0}) is jnp_rec
+    # no candidate has an estimate → None (caller falls back to static)
+    bare = KernelRecord(alias="K", fn=lambda a: a, platform="xla")
+    assert sched.place("K", [bare], args) is None
+
+
 def test_abstract_signature_shapes_and_dtypes():
     import jax
     sig = abstract_signature((jnp.zeros((2, 3), jnp.float32),
