@@ -1,0 +1,112 @@
+"""Tuned-vs-default kernel configs per alias (DESIGN.md §9).
+
+For each tunable alias the sweep driver tunes one representative shape
+bucket on the *pinned* pallas substrate (the record is invoked directly —
+no scheduler, no cross-substrate routing, per the noisy-box protocol:
+pin substrates, sweep-then-freeze, best-of-N).  The benchmark then
+re-measures the default and tuned configs back-to-back in alternating
+rounds (min per arm), so slow drift on a shared box cannot masquerade as
+a tuning gain.  Results go to ``BENCH_tuning.json`` and print per the
+harness CSV contract (``name,us_per_call,derived``).
+
+Run:  PYTHONPATH=src python -m benchmarks.tuning_gain
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_tuning.json"
+REPEATS = 5          # best-of-N per arm in the re-measure phase
+ROUNDS = 5           # alternating default/tuned rounds
+SWEEP_REPEATS = 3
+
+
+def _workloads():
+    """(alias, args) per representative bucket — shapes chosen so the
+    default tile caps (256/512/1024 preferred blocks) genuinely bind."""
+    from repro.launch.tune import (_mk_conv, _mk_js, _mk_mmm, _mk_mvm,
+                                   _mk_rmsnorm)
+    return [
+        ("MMM", _mk_mmm(512, 512, 512)),
+        ("MVM", _mk_mvm(2048, 1024)),
+        ("RMSNORM", _mk_rmsnorm(4096, 256)),
+        ("1DCONV", _mk_conv(8192, 65)),
+        ("JS", _mk_js(512)),
+    ]
+
+
+def _best_of(fn, n, *, warmup=1):
+    best = float("inf")
+    for i in range(warmup + n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        if i >= warmup:
+            best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> dict:
+    """Run the sweep + re-measure; writes BENCH_tuning.json, returns it."""
+    from repro import kernels
+    from repro.core.registry import GLOBAL_REGISTRY
+    from repro.core.tuning import TuningDB, autotune
+
+    kernels.register_all()
+    print("# === tuned vs default kernel configs (pallas substrate, "
+          "sweep-then-freeze, best-of-N) ===", flush=True)
+    print("name,us_per_call,derived")
+    db = TuningDB()                       # fresh, memory-only: hermetic
+    entries = []
+    for alias, args in _workloads():
+        rec = next(r for r in GLOBAL_REGISTRY.records(alias)
+                   if r.platform == "pallas")
+        if not rec.feasible(*args):
+            continue
+        res = autotune(rec, args, db=db, repeats=SWEEP_REPEATS, warmup=1)
+        cfg = res.entry.config
+        if cfg:
+            # alternating best-of-N re-measure: default arm vs tuned arm
+            default_s = tuned_s = float("inf")
+            _best_of(lambda: rec.fn(*args), 1)       # shared warm-up
+            _best_of(lambda: rec.fn(*args, **cfg), 1)
+            for _ in range(ROUNDS):
+                default_s = min(default_s, _best_of(
+                    lambda: rec.fn(*args), REPEATS, warmup=0))
+                tuned_s = min(tuned_s, _best_of(
+                    lambda: rec.fn(*args, **cfg), REPEATS, warmup=0))
+        else:
+            # default config won the sweep: the arms would run identical
+            # programs, so re-measuring could only report noise
+            default_s = tuned_s = _best_of(lambda: rec.fn(*args), REPEATS)
+        ratio = default_s / tuned_s if tuned_s > 0 else 1.0
+        entries.append({
+            "alias": alias,
+            "platform": rec.platform,
+            "key": res.key,
+            "config": cfg,
+            "non_default": bool(cfg),
+            "default_us": round(default_s * 1e6, 1),
+            "tuned_us": round(tuned_s * 1e6, 1),
+            "speedup_x": round(ratio, 3),
+        })
+        print(f"tuned/{alias},{tuned_s*1e6:.1f},"
+              f"default_us={default_s*1e6:.1f};gain_x={ratio:.2f};"
+              f"config={cfg or 'default'}", flush=True)
+    payload = {
+        "protocol": {"sweep_repeats": SWEEP_REPEATS, "repeats": REPEATS,
+                     "rounds": ROUNDS, "substrate": "pallas (pinned)"},
+        "entries": entries,
+        "non_default_winners": sum(e["non_default"] for e in entries),
+        "best_gain_x": max((e["speedup_x"] for e in entries), default=1.0),
+    }
+    OUT_PATH.write_text(json.dumps(payload, indent=1))
+    print(f"# wrote {OUT_PATH}", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

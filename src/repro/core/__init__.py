@@ -7,6 +7,8 @@ The paper's contribution, as a composable library:
 * :mod:`repro.core.manifest`       — unified configuration file (Table I)
 * :mod:`repro.core.agents`         — runtime + virtualization agents (§V)
 * :mod:`repro.core.scheduler`      — cost-model scheduler + autotune cache
+* :mod:`repro.core.tuning`         — shape-bucketed kernel autotuner +
+  persistent TuningDB (DESIGN.md §9)
 * :mod:`repro.core.c2mpi`          — MPIX_* application interface (§IV)
 * :mod:`repro.core.graph`          — execution graphs: DAG capture, cost-model
   placement, cross-substrate overlap (DESIGN.md §8)
@@ -17,6 +19,8 @@ from .registry import (GLOBAL_REGISTRY, KernelAttributes, KernelRecord,
                        KernelRegistry, SelectionError, PLATFORM_PREFERENCE)
 from .manifest import FuncEntry, HostEntry, Manifest, default_manifest
 from .scheduler import CostModelScheduler, abstract_signature
+from .tuning import (TuneEntry, TuneResult, TuningDB, autotune,
+                     config_feasible, shape_bucket, tuning_key)
 from .agents import (ChildRank, HaloCancelledError, HaloFuture, JnpAgent,
                      PallasAgent, RuntimeAgent, ShardedAgent,
                      VirtualizationAgent, XlaAgent)
@@ -36,6 +40,8 @@ __all__ = [
     "SelectionError", "PLATFORM_PREFERENCE",
     "FuncEntry", "HostEntry", "Manifest", "default_manifest",
     "CostModelScheduler", "abstract_signature",
+    "TuneEntry", "TuneResult", "TuningDB", "autotune", "config_feasible",
+    "shape_bucket", "tuning_key",
     "ChildRank", "HaloCancelledError", "HaloFuture", "JnpAgent",
     "PallasAgent", "RuntimeAgent", "ShardedAgent",
     "VirtualizationAgent", "XlaAgent",

@@ -337,6 +337,11 @@ class XlaAgent(VirtualizationAgent):
         self._jit_cache: Dict[int, Callable] = {}
 
     def _device_execute(self, record: KernelRecord, args, kwargs):
+        if record.tuning_space is not None:
+            # tunable records promise an internally-jitted fn whose tile
+            # config kwargs are static (DESIGN.md §9); an outer jit here
+            # would trace the config ints and break the static block specs
+            return record.fn(*args, **kwargs)
         key = id(record)
         fn = self._jit_cache.get(key)
         if fn is None:
@@ -589,13 +594,30 @@ class RuntimeAgent:
                                     platform_preference=pref,
                                     _candidates=candidates)
 
+    def _tuned_kwargs(self, record: KernelRecord, args: Tuple,
+                      kwargs: Dict) -> Dict:
+        """Merge the TuningDB's winning tile config for (record, args) into
+        the call kwargs (DESIGN.md §9).  Explicit caller kwargs always win;
+        records without a tuning space (or schedulers without a DB) pass
+        through untouched."""
+        if self.scheduler is None or record.tuning_space is None:
+            return kwargs
+        cfg = self.scheduler.tuned_config(record, args)
+        if not cfg:
+            return kwargs
+        cfg.update(kwargs)
+        return cfg
+
     def dispatch(self, alias: str, *args, overrides: Optional[Dict] = None,
                  **kwargs):
         """Pure trace-safe dispatch: select at trace time, inline the kernel.
 
         This is the hot path used by hardware-agnostic model code.  No
         mailboxes, no buffer table, no host synchronization — the selected
-        record's fn is traced straight into the enclosing jit program.
+        record's fn is traced straight into the enclosing jit program.  A
+        TuningDB entry for the selected record merges its tile config into
+        the call at trace time (DESIGN.md §9), so a swept winner reshapes
+        the step program without any host-code change.
 
         Inside a ``halo_graph()`` capture region (and outside any jit
         trace — a traced value must inline immediately), the call records a
@@ -614,11 +636,16 @@ class RuntimeAgent:
             raise
         finally:
             self._account_t1(time.perf_counter() - t0)
-        return record.fn(*args, **kwargs)
+        return record.fn(*args, **self._tuned_kwargs(record, args, kwargs))
 
     def _execute_on(self, agent: VirtualizationAgent, record: KernelRecord,
                     cr: Optional[ChildRank], args: Tuple, kwargs: Dict):
-        """One execution attempt on an explicit agent — no failover."""
+        """One execution attempt on an explicit agent — no failover.
+
+        Shared by the DRPC path and graph-node execution, so the TuningDB
+        config merge (DESIGN.md §9) happens here: whichever record was
+        placed runs at its swept tile configuration."""
+        kwargs = self._tuned_kwargs(record, args, kwargs)
         if cr is not None and cr.stateful:
             # snapshot under the lock: a concurrent free() may be clearing
             # the CR's buffers while this request is in flight on a worker

@@ -32,6 +32,13 @@ from .compute_object import BufferHandle, ComputeObject, as_compute_object
 from .manifest import Manifest, default_manifest
 from .registry import GLOBAL_REGISTRY, KernelRegistry
 
+__all__ = [
+    "MPIX_Claim", "MPIX_CreateBuffer", "MPIX_Finalize", "MPIX_Free",
+    "MPIX_GraphBegin", "MPIX_GraphEnd", "MPIX_Initialize", "MPIX_IRecv",
+    "MPIX_ISend", "MPIX_Recv", "MPIX_Send", "MPIX_SendFwd", "MPIX_Test",
+    "MPIX_Wait", "MPIX_Waitall", "halo_dispatch", "halo_session",
+]
+
 _session_lock = threading.RLock()
 _session: Optional[RuntimeAgent] = None
 
@@ -42,7 +49,11 @@ _session: Optional[RuntimeAgent] = None
 def MPIX_Initialize(manifest: Optional[Manifest] = None,
                     registry: Optional[KernelRegistry] = None,
                     mesh=None) -> RuntimeAgent:
-    """Create (or replace) the process-global HALO session."""
+    """Create (or replace) the process-global HALO session.
+
+    ``manifest`` is the unified config (Table I), ``registry`` the kernel
+    repository (defaults to the global one with built-ins registered), and
+    ``mesh`` attaches the sharded substrate."""
     global _session
     from .. import kernels  # ensure built-in kernel records are registered
     kernels.register_all()
@@ -63,6 +74,8 @@ def halo_session() -> RuntimeAgent:
 
 
 def MPIX_Finalize() -> None:
+    """Tear down the process-global session: free all CRs and internal
+    buffers, stop agent workers, persist the autotune cache."""
     global _session
     with _session_lock:
         if _session is not None:
@@ -75,17 +88,27 @@ def MPIX_Finalize() -> None:
 # ---------------------------------------------------------------------------
 def MPIX_Claim(func_alias, failsafe_func: Optional[Callable] = None,
                overrides: Optional[Dict[str, Any]] = None) -> ChildRank:
+    """Allocate a child rank for ``func_alias`` (str) or a pipeline (list).
+
+    ``failsafe_func`` is the claim-level fallback callable; ``overrides``
+    merge over the manifest's per-alias config (MPI_Info style)."""
     return halo_session().claim(func_alias, failsafe=failsafe_func,
                                 overrides=overrides)
 
 
 def MPIX_CreateBuffer(child_rank: Optional[ChildRank], shape, dtype,
                       init=None, name: Optional[str] = None) -> BufferHandle:
+    """Allocate a framework-managed internal buffer of ``shape``/``dtype``.
+
+    ``init`` seeds the contents (zeros otherwise); a non-None ``child_rank``
+    attaches the buffer as CR state (stateful invocations)."""
     return halo_session().create_buffer(child_rank, shape, dtype,
                                         init=init, name=name)
 
 
 def MPIX_Free(child_rank: ChildRank) -> None:
+    """Deallocate ``child_rank`` and its internal buffers; pending posted
+    receives are cancelled."""
     halo_session().free(child_rank)
 
 
@@ -93,15 +116,21 @@ def MPIX_Free(child_rank: ChildRank) -> None:
 # Data movement (Table III / Figure 3)
 # ---------------------------------------------------------------------------
 def MPIX_Send(payload, child_rank: ChildRank, tag: int = 0, **kwargs) -> None:
+    """Blocking invoke: marshal ``payload`` (compute object / tuple) to the
+    CR; waits for worker completion, result queued FIFO per ``tag``."""
     halo_session().send(payload, child_rank, tag=tag, **kwargs)
 
 
 def MPIX_Recv(child_rank: ChildRank, tag: int = 0, block: bool = True):
+    """Pop the oldest pending result for ``(child_rank, tag)``; ``block``
+    controls only the final device sync (the receive itself always waits)."""
     return halo_session().recv(child_rank, tag=tag, block=block)
 
 
 def MPIX_SendFwd(payload, child_rank: ChildRank, dest: ChildRank,
                  tag: int = 0, **kwargs) -> None:
+    """Like :func:`MPIX_Send`, but the result lands in ``dest``'s mailbox
+    instead of returning to the source PR (device-resident end to end)."""
     halo_session().send_fwd(payload, child_rank, dest, tag=tag, **kwargs)
 
 

@@ -48,9 +48,14 @@ from .compute_object import ComputeObject, as_compute_object
 from .registry import KernelRecord, SelectionError
 from .scheduler import abstract_signature
 
+__all__ = [
+    "ExecutionGraph", "GraphDependencyError", "GraphError", "GraphNode",
+    "begin_capture", "end_capture", "halo_graph",
+]
+
 
 class GraphError(RuntimeError):
-    pass
+    """Base error for execution-graph capture and launch failures."""
 
 
 class GraphDependencyError(GraphError):
@@ -448,6 +453,8 @@ class ExecutionGraph:
 # Capture API (MPIX_GraphBegin / MPIX_GraphEnd / halo_graph)
 # ---------------------------------------------------------------------------
 def begin_capture(session: RuntimeAgent) -> ExecutionGraph:
+    """Start capturing ``session``'s isend/dispatch calls on this thread
+    into a fresh :class:`ExecutionGraph`; raises if one is already active."""
     if getattr(_graph_capture, "graph", None) is not None:
         raise GraphError("a graph capture is already active on this thread")
     g = ExecutionGraph(session)
@@ -456,6 +463,8 @@ def begin_capture(session: RuntimeAgent) -> ExecutionGraph:
 
 
 def end_capture(launch: bool = True) -> ExecutionGraph:
+    """Stop the active capture; ``launch=True`` (default) dispatches the
+    DAG immediately.  Returns the graph; raises if no capture is active."""
     g = getattr(_graph_capture, "graph", None)
     if g is None:
         raise GraphError("no active graph capture on this thread")

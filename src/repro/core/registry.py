@@ -28,6 +28,15 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 log = logging.getLogger("repro.halo.registry")
 
+__all__ = [
+    "GLOBAL_REGISTRY",
+    "KernelAttributes",
+    "KernelRecord",
+    "KernelRegistry",
+    "PLATFORM_PREFERENCE",
+    "SelectionError",
+]
+
 # Platform ids, ordered by default performance preference on the TPU target.
 PLATFORM_PREFERENCE: Tuple[str, ...] = ("sharded", "pallas", "xla", "jnp")
 
@@ -72,8 +81,16 @@ class KernelRecord:
     cost_model: Optional[Callable[..., float]] = None  # est. seconds for args
     is_failsafe: bool = False        # reference oracle for the alias
     doc: str = ""
+    # Tunable-configuration axis (DESIGN.md §9): maps abstract args to a
+    # list of tile/block/grid config dicts the autotuner may sweep.  A
+    # record that declares a space promises (a) ``fn`` accepts every config
+    # dict's keys as keyword arguments, and (b) ``fn`` handles its own jit
+    # with those keys static — so agents call it directly instead of
+    # wrapping it in a fresh ``jax.jit`` that would trace the config ints.
+    tuning_space: Optional[Callable[..., List[Dict[str, Any]]]] = None
 
     def feasible(self, *args, **kwargs) -> bool:
+        """True when ``supports`` accepts these abstract args (or is unset)."""
         if self.supports is None:
             return True
         try:
@@ -83,9 +100,23 @@ class KernelRecord:
                       self.alias, self.platform, exc_info=True)
             return False
 
+    def variants(self, *args, **kwargs) -> List[Dict[str, Any]]:
+        """Feasible tuning-space configs for these args ([] when untunable).
+
+        A raising space is treated as empty — tuning is advisory and must
+        never break dispatch."""
+        if self.tuning_space is None:
+            return []
+        try:
+            return list(self.tuning_space(*args, **kwargs))
+        except Exception:  # noqa: BLE001 — same contract as supports()
+            log.debug("tuning_space raised for %s/%s; treating as empty",
+                      self.alias, self.platform, exc_info=True)
+            return []
+
 
 class SelectionError(KeyError):
-    pass
+    """No kernel record (and no fail-safe) satisfies a selection request."""
 
 
 class KernelRegistry:
@@ -99,6 +130,7 @@ class KernelRegistry:
 
     # -- registration -------------------------------------------------------
     def register(self, record: KernelRecord) -> KernelRecord:
+        """Publish one record; returns it (so callers can keep the handle)."""
         with self._lock:
             recs = self._records.setdefault(record.alias, [])
             recs.append(record)
@@ -112,14 +144,15 @@ class KernelRegistry:
     def register_fn(self, alias: str, platform: str, *, priority: int = 0,
                     attrs: Optional[KernelAttributes] = None,
                     supports=None, cost_model=None, is_failsafe: bool = False,
-                    doc: str = ""):
+                    tuning_space=None, doc: str = ""):
         """Decorator form: ``@registry.register_fn("MMM", "pallas")``."""
         def deco(fn):
             self.register(KernelRecord(
                 alias=alias, fn=fn, platform=platform,
                 attrs=attrs or KernelAttributes(sw_fid=alias),
                 priority=priority, supports=supports, cost_model=cost_model,
-                is_failsafe=is_failsafe, doc=doc or (fn.__doc__ or "")))
+                is_failsafe=is_failsafe, tuning_space=tuning_space,
+                doc=doc or (fn.__doc__ or "")))
             return fn
         return deco
 
@@ -137,15 +170,19 @@ class KernelRegistry:
 
     # -- lookup --------------------------------------------------------------
     def aliases(self) -> List[str]:
+        """All registered func aliases, sorted."""
         return sorted(self._records)
 
     def records(self, alias: str) -> List[KernelRecord]:
+        """All records for ``alias`` in registration order ([] if unknown)."""
         return list(self._records.get(alias, ()))
 
     def resolve_fid(self, sw_fid: str) -> Optional[str]:
+        """Map a Table-II ``sw_fid`` to its alias, or None."""
         return self._fid_index.get(sw_fid)
 
     def failsafe(self, alias: str) -> Optional[KernelRecord]:
+        """The alias's fail-safe (reference-oracle) record, or None."""
         for r in self._records.get(alias, ()):
             if r.is_failsafe:
                 return r

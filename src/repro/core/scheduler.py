@@ -3,20 +3,26 @@
 The registry's static selection (platform preference → priority → version →
 round-robin) answers "which record *should* be fastest on this target"; the
 scheduler answers "which record *is* fastest for these argument shapes",
-using two information sources, best first:
+using three information sources, best first (the full selection-precedence
+ladder is documented in DESIGN.md §9):
 
-1. **Measured latency** — an EMA of wall-clock seconds per
+1. **Tuned sweep result** — the :class:`~repro.core.tuning.TuningDB` entry
+   for ``(platform, alias, shape-bucket, dtype)``, written by the
+   :func:`~repro.core.tuning.autotune` sweep driver.  A feasible entry
+   supplies both the latency estimate *and* the tile config the runtime
+   agent merges into the kernel call.
+2. **Measured latency** — an EMA of wall-clock seconds per
    ``(alias, platform, abstract-arg-signature)`` key, fed back by the runtime
    agent's worker after each DRPC execution.  The first observation per key
    is discarded as warmup (it includes jit compilation), so estimates track
    steady-state latency.  The table persists as a small JSON autotune cache
    (``HALO_AUTOTUNE_CACHE`` env var or an explicit path) so a second process
    starts warm.
-2. **Analytic cost model** — ``KernelRecord.cost_model(*args) -> seconds``,
+3. **Analytic cost model** — ``KernelRecord.cost_model(*args) -> seconds``,
    the Table-II attribute that was previously registered but unused at
    dispatch.
 
-Records with neither source are left to the static selection order, so a
+Records with no source at all are left to the static selection order, so a
 registry without cost models behaves exactly as before this subsystem
 existed.  This is the task-queue + cost-model scheduling structure that
 runtime-support frameworks (Thomadakis & Chrisochoides, arXiv:2303.02543;
@@ -35,6 +41,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from .registry import KernelRecord
 
 log = logging.getLogger("repro.halo.scheduler")
+
+__all__ = ["CostModelScheduler", "SigType", "abstract_signature"]
 
 SigType = Tuple[Tuple[Any, str], ...]
 
@@ -89,11 +97,16 @@ class CostModelScheduler:
 
     def __init__(self, cache_path: Optional[os.PathLike] = None,
                  explore_every: Optional[int] = None,
-                 explore_offset: int = 0):
+                 explore_offset: int = 0,
+                 tuning_db=None):
         """``explore_every``/``explore_offset`` inject the exploration
         policy: every Nth :meth:`choose` per key explores, starting the
         per-key counter at ``offset`` — so tests can pin exactly which call
-        explores instead of depending on instance-global call history."""
+        explores instead of depending on instance-global call history.
+        ``tuning_db`` wires a :class:`~repro.core.tuning.TuningDB` (rung 1
+        of the precedence ladder): None builds an empty in-memory DB,
+        ``False`` disables tuned-config consultation entirely."""
+        from .tuning import TuningDB       # deferred: tuning imports us
         self._lock = threading.Lock()
         # key -> [n_observations, ema_seconds]; n counts *kept* samples
         # (the warmup/compile sample per key is discarded, see observe()).
@@ -106,14 +119,22 @@ class CostModelScheduler:
         if explore_every is not None:
             self.explore_every = explore_every or None
         self.explore_offset = explore_offset
+        # note: an empty TuningDB is falsy (len 0) — test identity, not truth
+        if tuning_db is None:
+            tuning_db = TuningDB()
+        self.tuning = tuning_db if tuning_db is not False else None
         self.cache_path = Path(cache_path) if cache_path else None
         if self.cache_path is not None and self.cache_path.exists():
             self.load(self.cache_path)
 
     @classmethod
     def default(cls) -> "CostModelScheduler":
-        """Process-default scheduler: persistent iff HALO_AUTOTUNE_CACHE set."""
-        return cls(cache_path=os.environ.get("HALO_AUTOTUNE_CACHE") or None)
+        """Process-default scheduler: EMA table persistent iff
+        ``HALO_AUTOTUNE_CACHE`` is set; tuning DB from ``HALO_TUNING_DB``
+        (or the cache path's ``.tuning.json`` sibling)."""
+        from .tuning import TuningDB       # deferred: tuning imports us
+        return cls(cache_path=os.environ.get("HALO_AUTOTUNE_CACHE") or None,
+                   tuning_db=TuningDB.default())
 
     # -- measurement feedback ------------------------------------------------
     def observe(self, record: KernelRecord, sig: SigType,
@@ -181,7 +202,19 @@ class CostModelScheduler:
     # -- selection -----------------------------------------------------------
     def estimate(self, record: KernelRecord, sig: SigType, args: Sequence[Any]
                  ) -> Optional[float]:
-        """Best available latency estimate for one record, or None."""
+        """Best available latency estimate for one record, or None.
+
+        Precedence (DESIGN.md §9): a feasible TuningDB sweep result, then
+        the measured-latency EMA, then the analytic cost model."""
+        if self.tuning is not None:
+            try:
+                est = self.tuning.tuned_seconds(record, sig, args)
+            except Exception:              # advisory data must never break
+                log.debug("tuning lookup raised for %s/%s", record.alias,
+                          record.platform, exc_info=True)
+                est = None
+            if est is not None:
+                return est
         est = self.measured(record, sig)
         if est is not None:
             return est
@@ -192,6 +225,26 @@ class CostModelScheduler:
                 log.debug("cost_model raised for %s/%s", record.alias,
                           record.platform, exc_info=True)
         return None
+
+    def tuned_config(self, record: KernelRecord, args: Sequence[Any],
+                     sig: Optional[SigType] = None
+                     ) -> Optional[Dict[str, Any]]:
+        """The TuningDB's winning tile config for (record, args-bucket).
+
+        Returns a fresh dict of config kwargs, or None when no DB is wired,
+        no entry exists, the default config won the sweep, or the stored
+        config is no longer a feasible variant for these args (stale entry
+        → fall through safely)."""
+        if self.tuning is None:
+            return None
+        try:
+            return self.tuning.tuned_config_for(
+                record, sig if sig is not None else abstract_signature(args),
+                args)
+        except Exception:                  # advisory data must never break
+            log.debug("tuned_config raised for %s/%s", record.alias,
+                      record.platform, exc_info=True)
+            return None
 
     def choose(self, alias: str, candidates: Sequence[KernelRecord],
                args: Sequence[Any], explore: bool = False

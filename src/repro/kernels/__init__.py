@@ -36,7 +36,7 @@ def _pallas_ok(*args, **kw) -> bool:
 
 
 def _rec(alias, fn, platform, prio, *, failsafe=False, supports=None,
-         cost=None, doc=""):
+         cost=None, space=None, doc=""):
     hw = _TPU_ATTRS if platform == "pallas" else _ANY_ATTRS
     if platform == "pallas" and jax.default_backend() != "tpu":
         # Table-II cost models are per-hardware attributes calibrated for
@@ -47,7 +47,8 @@ def _rec(alias, fn, platform, prio, *, failsafe=False, supports=None,
     return KernelRecord(
         alias=alias, fn=fn, platform=platform, priority=prio,
         attrs=KernelAttributes(sw_fid=f"fid:{alias.lower()}", **hw),
-        supports=supports, cost_model=cost, is_failsafe=failsafe, doc=doc)
+        supports=supports, cost_model=cost, is_failsafe=failsafe,
+        tuning_space=space, doc=doc)
 
 
 def register_all(registry=None) -> None:
@@ -59,15 +60,23 @@ def register_all(registry=None) -> None:
 
     from .matmul import mmm, mmm_ref
     from .matmul.ref import mmm_xla
+    from .matmul.ops import mmm_space
     from .ewise import ewmd, ewmd_ref, ewmm, ewmm_ref
+    from .ewise.ops import ewise_space
     from .spmm import smmm, smmm_ref
+    from .spmm.ops import smmm_space
     from .mvm import mvm, mvm_ref
+    from .mvm.ops import mvm_space
     from .vdp import vdp, vdp_ref
     from .jacobi import jacobi_step, jacobi_step_ref
+    from .jacobi.ops import jacobi_space
     from .conv1d import conv1d, conv1d_ref
+    from .conv1d.ops import conv1d_space
     from .flash_attention import attention_ref, flash_attention
+    from .flash_attention.ops import fa_space
     from .flash_attention.xla import mea_attention
     from .rmsnorm import rmsnorm, rmsnorm_ref
+    from .rmsnorm.ops import rmsnorm_space
     from .rmsnorm.ref import rmsnorm_xla
     from .ssd import ssd_chunked, ssd_decode_step, ssd_ref
     from .moe_ffn import grouped_ffn, grouped_ffn_ref
@@ -77,23 +86,31 @@ def register_all(registry=None) -> None:
         n = b.shape[1]
         return 2.0 * m * n * k / 197e12
 
+    # tunable-config axes for the xla records that expose tile kwargs
+    # (the chunked mea formulation tiles its q/kv block loop like the
+    # pallas kernel does, so it shares the FLASH_ATTN space)
+    xla_spaces = {"FLASH_ATTN": fa_space}
+
     table = [
-        # (alias, ref_fn, xla_fn, pallas_fn, cost)
-        ("MMM", mmm_ref, mmm_xla, mmm, mmm_cost),
-        ("EWMM", ewmm_ref, ewmm_ref, ewmm, None),
-        ("EWMD", ewmd_ref, ewmd_ref, ewmd, None),
-        ("MVM", mvm_ref, mvm_ref, mvm, None),
-        ("VDP", vdp_ref, vdp_ref, vdp, None),
-        ("JS", jacobi_step_ref, jacobi_step_ref, jacobi_step, None),
-        ("1DCONV", conv1d_ref, conv1d_ref, conv1d, None),
-        ("RMSNORM", rmsnorm_ref, rmsnorm_xla, rmsnorm, None),
-        ("FLASH_ATTN", attention_ref, mea_attention, flash_attention, None),
+        # (alias, ref_fn, xla_fn, pallas_fn, cost, pallas_space)
+        ("MMM", mmm_ref, mmm_xla, mmm, mmm_cost, mmm_space),
+        ("EWMM", ewmm_ref, ewmm_ref, ewmm, None, ewise_space),
+        ("EWMD", ewmd_ref, ewmd_ref, ewmd, None, ewise_space),
+        ("MVM", mvm_ref, mvm_ref, mvm, None, mvm_space),
+        ("VDP", vdp_ref, vdp_ref, vdp, None, None),
+        ("JS", jacobi_step_ref, jacobi_step_ref, jacobi_step, None,
+         jacobi_space),
+        ("1DCONV", conv1d_ref, conv1d_ref, conv1d, None, conv1d_space),
+        ("RMSNORM", rmsnorm_ref, rmsnorm_xla, rmsnorm, None, rmsnorm_space),
+        ("FLASH_ATTN", attention_ref, mea_attention, flash_attention, None,
+         fa_space),
     ]
-    for alias, ref_fn, xla_fn, pallas_fn, cost in table:
+    for alias, ref_fn, xla_fn, pallas_fn, cost, space in table:
         registry.register(_rec(alias, ref_fn, "jnp", 0, failsafe=True))
-        registry.register(_rec(alias, xla_fn, "xla", 10, cost=cost))
+        registry.register(_rec(alias, xla_fn, "xla", 10, cost=cost,
+                               space=xla_spaces.get(alias)))
         registry.register(_rec(alias, pallas_fn, "pallas", 20,
-                               supports=_pallas_ok, cost=cost))
+                               supports=_pallas_ok, cost=cost, space=space))
 
     # SMMM: the xla variant is a dense-gather einsum over the blocked-ELL
     # parts; it doubles as the jnp fail-safe (the ref.py oracle reconstructs
@@ -108,7 +125,8 @@ def register_all(registry=None) -> None:
 
     registry.register(_rec("SMMM", smmm_xla, "jnp", 0, failsafe=True))
     registry.register(_rec("SMMM", smmm_xla, "xla", 10))
-    registry.register(_rec("SMMM", smmm, "pallas", 20, supports=_pallas_ok))
+    registry.register(_rec("SMMM", smmm, "pallas", 20, supports=_pallas_ok,
+                           space=smmm_space))
 
     # Sequence-model substrate aliases (no pallas variant: the chunked SSD
     # is already MXU-shaped einsums; see EXPERIMENTS.md §Perf).

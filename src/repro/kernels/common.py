@@ -58,6 +58,47 @@ def pick_block(size: int, preferred: int, align: int) -> int:
     return max(align, round_up(size, align))
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two ≥ ``n`` (1 for n ≤ 1)."""
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+def clamp_block(block: int, size: int, align: int) -> int:
+    """Feasibility guard for a *requested* (tuned) block size.
+
+    Clamps ``block`` into [align, round_up(size, align)] and re-aligns it, so
+    a config tuned on one shape bucket can never produce a degenerate or
+    wildly-overpadded grid when applied to a smaller/odd shape.
+    """
+    padded = round_up(max(1, size), align)
+    return max(align, min(round_up(int(block), align), padded))
+
+
+def block_choices(size: int, align: int, *, limit: int = 3) -> Tuple[int, ...]:
+    """Deterministic candidate block sizes for one tiled dimension.
+
+    Candidates depend only on the dimension's power-of-two *bucket* (the
+    aligned ``next_pow2``), never on the raw size: the standard TPU tile
+    sizes (128…2048) that fit the bucket, plus the bucket extent itself.
+    Every member of a bucket therefore gets the identical candidate list,
+    so a winner swept at one member stays a listed (feasible) variant for
+    all of them — :func:`clamp_block` adapts it to the actual padded extent
+    at apply time.  At most ``limit`` candidates are returned, evenly
+    spaced with the smallest and the bucket extent always kept; tiny
+    shapes collapse to a single entry.
+    """
+    bucket = round_up(next_pow2(size), align)
+    cands = {bucket}
+    for c in (128, 256, 512, 1024, 2048):
+        if align <= c <= bucket:
+            cands.add(c)
+    out = sorted(cands)
+    if len(out) > limit:
+        step = (len(out) - 1) / (limit - 1)
+        out = sorted({out[round(i * step)] for i in range(limit)})
+    return tuple(out)
+
+
 def compiler_params(dimension_semantics: Optional[Tuple[str, ...]] = None):
     """Version-tolerant TPU compiler params (ignored in interpret mode)."""
     if dimension_semantics is None:

@@ -6,18 +6,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..common import interpret_default, pad_dim, pick_block
+from ..common import (block_choices, clamp_block, interpret_default, pad_dim,
+                      pick_block)
 from .ewise import ewise_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("op", "interpret"))
-def _ewise_impl(a, b, op, interpret):
+@functools.partial(jax.jit, static_argnames=("op", "bm", "bn", "interpret"))
+def _ewise_impl(a, b, op, bm, bn, interpret):
     shape = a.shape
     a2 = a.reshape(-1, shape[-1]) if a.ndim != 2 else a
     b2 = b.reshape(a2.shape)
     m, n = a2.shape
-    bm = pick_block(m, 512, 8)
-    bn = pick_block(n, 1024, 128)
+    bm = pick_block(m, 512, 8) if bm is None else clamp_block(bm, m, 8)
+    bn = pick_block(n, 1024, 128) if bn is None else clamp_block(bn, n, 128)
     # pad divisor with ones to keep EWMD finite in the dead region
     pad_val = 1 if op == "div" else 0
     ap = pad_dim(pad_dim(a2, 0, bm), 1, bn)
@@ -27,13 +28,30 @@ def _ewise_impl(a, b, op, interpret):
     return out[:m, :n].reshape(shape)
 
 
-def ewmm(a, b, *, interpret: bool | None = None):
-    """Element-wise matrix multiplication."""
-    return _ewise_impl(a, b, "mul",
+def ewmm(a, b, *, bm: int | None = None, bn: int | None = None,
+         interpret: bool | None = None):
+    """Element-wise matrix multiplication.
+
+    ``bm``/``bn`` override the default VPU tile sizes (autotuner axis)."""
+    return _ewise_impl(a, b, "mul", bm, bn,
                        interpret_default() if interpret is None else interpret)
 
 
-def ewmd(a, b, *, interpret: bool | None = None):
-    """Element-wise matrix division."""
-    return _ewise_impl(a, b, "div",
+def ewmd(a, b, *, bm: int | None = None, bn: int | None = None,
+         interpret: bool | None = None):
+    """Element-wise matrix division.
+
+    ``bm``/``bn`` override the default VPU tile sizes (autotuner axis)."""
+    return _ewise_impl(a, b, "div", bm, bn,
                        interpret_default() if interpret is None else interpret)
+
+
+def ewise_space(a, b, **kw):
+    """Tuning space for EWMM/EWMD: feasible (bm, bn) VPU tile candidates."""
+    last = a.shape[-1] if a.ndim else 1
+    rows = 1
+    for d in a.shape[:-1]:
+        rows *= d
+    return [dict(bm=i, bn=j)
+            for i in block_choices(rows, 8)
+            for j in block_choices(last, 128, limit=2)]

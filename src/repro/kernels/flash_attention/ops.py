@@ -6,7 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..common import interpret_default, pad_dim, pick_block
+from ..common import block_choices, interpret_default, pad_dim, pick_block
 from .flash_attention import flash_attention_pallas
 
 
@@ -56,9 +56,20 @@ def _fa_diff(causal, window, prefix_len, bq, bk, interpret):
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
                     prefix_len: int = 0, bq: int = 256, bk: int = 512,
                     interpret: bool | None = None):
-    """Online-softmax GQA attention; see flash_attention.py for semantics."""
+    """Online-softmax GQA attention; see flash_attention.py for semantics.
+
+    ``bq``/``bk`` are the query/key sequence tile sizes (autotuner axis);
+    they are clamped to the padded sequence extents."""
     if interpret is None:
         interpret = interpret_default()
     bq = pick_block(q.shape[2], bq, 8)
     bk = pick_block(k.shape[2], bk, 128)
     return _fa_diff(causal, window, prefix_len, bq, bk, interpret)(q, k, v)
+
+
+def fa_space(q, k, v, **kw):
+    """Tuning space for FLASH_ATTN: feasible (bq, bk) sequence tiles."""
+    return [dict(bq=i, bk=j)
+            for i in block_choices(q.shape[2], 8, limit=2)
+            for j in block_choices(k.shape[2], 128, limit=2)]
+

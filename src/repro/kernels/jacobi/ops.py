@@ -6,15 +6,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..common import interpret_default, pad_dim, pick_block
+from ..common import (block_choices, clamp_block, interpret_default, pad_dim,
+                      pick_block)
 from .jacobi import jacobi_step_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _jacobi_step_impl(a, x, b, interpret):
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def _jacobi_step_impl(a, x, b, bm, bk, interpret):
     m, k = a.shape
-    bm = pick_block(m, 512, 128)
-    bk = pick_block(k, 512, 128)
+    bm = pick_block(m, 512, 128) if bm is None else clamp_block(bm, m, 128)
+    bk = pick_block(k, 512, 128) if bk is None else clamp_block(bk, k, 128)
     # pad A with identity on the diagonal so padded rows stay well-defined
     mp = ((m + bm - 1) // bm) * bm
     ap = pad_dim(pad_dim(a, 0, bm), 1, bk)
@@ -30,19 +31,32 @@ def _jacobi_step_impl(a, x, b, interpret):
     return out[0, :m]
 
 
-def jacobi_step(a, x, b, *, interpret: bool | None = None):
-    """One fused Jacobi sweep for Ax = b."""
+def jacobi_step(a, x, b, *, bm: int | None = None, bk: int | None = None,
+                interpret: bool | None = None):
+    """One fused Jacobi sweep for Ax = b.
+
+    ``bm``/``bk`` override the default row/contraction tile sizes
+    (autotuner axis); requested blocks are clamped to the padded extents."""
     if interpret is None:
         interpret = interpret_default()
-    return _jacobi_step_impl(a, x, b, interpret)
+    return _jacobi_step_impl(a, x, b, bm, bk, interpret)
 
 
 def jacobi_solve(a, b, iters: int = 20, x0=None, *,
+                 bm: int | None = None, bk: int | None = None,
                  interpret: bool | None = None):
     """Run ``iters`` fused sweeps (device-resident between sweeps)."""
     if interpret is None:
         interpret = interpret_default()
     x = jnp.zeros_like(b) if x0 is None else x0
     for _ in range(iters):
-        x = _jacobi_step_impl(a, x, b, interpret)
+        x = _jacobi_step_impl(a, x, b, bm, bk, interpret)
     return x
+
+
+def jacobi_space(a, x, b, **kw):
+    """Tuning space for JS: feasible (bm, bk) tile candidates."""
+    m, k = a.shape
+    return [dict(bm=i, bk=j)
+            for i in block_choices(m, 128)
+            for j in block_choices(k, 128, limit=2)]

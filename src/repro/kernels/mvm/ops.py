@@ -6,23 +6,36 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..common import interpret_default, pad_dim, pick_block
+from ..common import (block_choices, clamp_block, interpret_default, pad_dim,
+                      pick_block)
 from .mvm import mvm_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _mvm_impl(a, x, interpret):
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def _mvm_impl(a, x, bm, bk, interpret):
     m, k = a.shape
-    bm = pick_block(m, 512, 128)
-    bk = pick_block(k, 1024, 128)
+    bm = pick_block(m, 512, 128) if bm is None else clamp_block(bm, m, 128)
+    bk = pick_block(k, 1024, 128) if bk is None else clamp_block(bk, k, 128)
     ap = pad_dim(pad_dim(a, 0, bm), 1, bk)
     xp = pad_dim(x.reshape(1, k), 1, bk)
     y = mvm_pallas(ap, xp, bm=bm, bk=bk, interpret=interpret)
     return y[0, :m]
 
 
-def mvm(a, x, *, interpret: bool | None = None):
-    """y = A @ x for A (M,K), x (K,)."""
+def mvm(a, x, *, bm: int | None = None, bk: int | None = None,
+        interpret: bool | None = None):
+    """y = A @ x for A (M,K), x (K,).
+
+    ``bm``/``bk`` override the default row/contraction tile sizes
+    (autotuner axis); requested blocks are clamped to the padded extents."""
     if interpret is None:
         interpret = interpret_default()
-    return _mvm_impl(a, x, interpret)
+    return _mvm_impl(a, x, bm, bk, interpret)
+
+
+def mvm_space(a, x, **kw):
+    """Tuning space for MVM: feasible (bm, bk) tile candidates."""
+    m, k = a.shape
+    return [dict(bm=i, bk=j)
+            for i in block_choices(m, 128)
+            for j in block_choices(k, 128, limit=2)]

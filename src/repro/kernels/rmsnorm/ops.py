@@ -6,17 +6,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..common import interpret_default, pad_dim, pick_block
+from ..common import (block_choices, clamp_block, interpret_default, pad_dim,
+                      pick_block)
 from .rmsnorm import rmsnorm_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def _rmsnorm_impl(x, gamma, eps, interpret):
+@functools.partial(jax.jit, static_argnames=("eps", "br", "interpret"))
+def _rmsnorm_impl(x, gamma, eps, br, interpret):
     shape = x.shape
     d = shape[-1]
     x2 = x.reshape(-1, d)
     r = x2.shape[0]
-    br = pick_block(r, 256, 8)
+    br = pick_block(r, 256, 8) if br is None else clamp_block(br, r, 8)
     x2 = pad_dim(pad_dim(x2, 0, br), 1, 128)
     g2 = pad_dim(gamma.reshape(1, d), 1, 128)
     out = rmsnorm_pallas(x2, g2, eps=eps, d_actual=d, br=br,
@@ -27,15 +28,15 @@ def _rmsnorm_impl(x, gamma, eps, interpret):
 # Differentiable wrapper: pallas forward, exact recompute backward via the
 # jnp oracle's VJP (cheap: rmsnorm is memory-bound, recompute is one pass).
 @functools.lru_cache(maxsize=None)
-def _rmsnorm_diff(eps: float, interpret: bool):
+def _rmsnorm_diff(eps: float, br, interpret: bool):
     from .ref import rmsnorm_ref
 
     @jax.custom_vjp
     def f(x, gamma):
-        return _rmsnorm_impl(x, gamma, eps, interpret)
+        return _rmsnorm_impl(x, gamma, eps, br, interpret)
 
     def fwd(x, gamma):
-        return _rmsnorm_impl(x, gamma, eps, interpret), (x, gamma)
+        return _rmsnorm_impl(x, gamma, eps, br, interpret), (x, gamma)
 
     def bwd(res, g):
         x, gamma = res
@@ -46,8 +47,20 @@ def _rmsnorm_diff(eps: float, interpret: bool):
     return f
 
 
-def rmsnorm(x, gamma, *, eps: float = 1e-6, interpret: bool | None = None):
-    """Fused RMSNorm over the last dim; gamma has shape (D,)."""
+def rmsnorm(x, gamma, *, eps: float = 1e-6, br: int | None = None,
+            interpret: bool | None = None):
+    """Fused RMSNorm over the last dim; gamma has shape (D,).
+
+    ``br`` overrides the default row tile size (autotuner axis); the
+    requested block is clamped to the padded row extent."""
     if interpret is None:
         interpret = interpret_default()
-    return _rmsnorm_diff(eps, interpret)(x, gamma)
+    return _rmsnorm_diff(eps, br, interpret)(x, gamma)
+
+
+def rmsnorm_space(x, gamma, **kw):
+    """Tuning space for RMSNORM: feasible row-tile (br) candidates."""
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= d
+    return [dict(br=c) for c in block_choices(rows, 8)]

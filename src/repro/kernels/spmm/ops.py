@@ -5,23 +5,32 @@ import functools
 
 import jax
 
-from ..common import interpret_default, pad_dim, pick_block
+from ..common import (block_choices, clamp_block, interpret_default, pad_dim,
+                      pick_block)
 from .spmm import smmm_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _smmm_impl(values, indices, b, interpret):
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def _smmm_impl(values, indices, b, bn, interpret):
     k, n = b.shape
-    bn = pick_block(n, 256, 128)
+    bn = pick_block(n, 256, 128) if bn is None else clamp_block(bn, n, 128)
     bp = pad_dim(b, 1, bn)
     out = smmm_pallas(values, indices, bp, bn=bn, interpret=interpret)
     return out[:, :n]
 
 
-def smmm(values, indices, b, *, interpret: bool | None = None):
+def smmm(values, indices, b, *, bn: int | None = None,
+         interpret: bool | None = None):
     """Blocked-ELL sparse(A) @ dense(B).
 
-    ``values``/``indices`` come from :func:`..spmm.ref.dense_to_bell`."""
+    ``values``/``indices`` come from :func:`..spmm.ref.dense_to_bell`.
+    ``bn`` overrides the default dense-operand column tile (autotuner
+    axis); the requested block is clamped to the padded extent."""
     if interpret is None:
         interpret = interpret_default()
-    return _smmm_impl(values, indices, b, interpret)
+    return _smmm_impl(values, indices, b, bn, interpret)
+
+
+def smmm_space(values, indices, b, **kw):
+    """Tuning space for SMMM: feasible column-tile (bn) candidates."""
+    return [dict(bn=c) for c in block_choices(b.shape[1], 128)]

@@ -1,0 +1,210 @@
+"""Autotune CLI: sweep kernel tuning spaces on the current substrate.
+
+Sweeps every feasible ``alias × record × shape-bucket`` combination whose
+record declares a tuning space (DESIGN.md §9), committing winners into a
+persistent :class:`~repro.core.tuning.TuningDB`:
+
+    PYTHONPATH=src python -m repro.launch.tune                # full sweep
+    PYTHONPATH=src python -m repro.launch.tune --smoke        # tiny shapes
+    PYTHONPATH=src python -m repro.launch.tune --report       # print the DB
+    PYTHONPATH=src python -m repro.launch.tune --aliases MMM,MVM --repeats 5
+
+The DB path resolves ``--db`` → ``HALO_TUNING_DB`` → the
+``HALO_AUTOTUNE_CACHE`` sibling → ``halo_tuning.json`` in the working
+directory.  Entries are frozen after a sweep; pass ``--force`` to re-sweep
+committed buckets.  ``--smoke`` keeps shapes tiny and repeats low so the
+whole sweep fits a CI fast job.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tuning import TuningDB, autotune
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+def _mk_mmm(m, k, n):
+    return (_rand(0, (m, k)), _rand(1, (k, n)))
+
+
+def _mk_ewise(m, n):
+    return (_rand(0, (m, n)), _rand(1, (m, n)) + 3.0)
+
+
+def _mk_mvm(m, k):
+    return (_rand(0, (m, k)), _rand(1, (k,)))
+
+
+def _mk_js(n):
+    a = _rand(0, (n, n)) + n * jnp.eye(n, dtype=jnp.float32)
+    return (a, jnp.zeros((n,), jnp.float32), _rand(1, (n,)))
+
+
+def _mk_conv(n, k):
+    return (_rand(0, (n,)), _rand(1, (k,)))
+
+
+def _mk_rmsnorm(r, d):
+    return (_rand(0, (r, d)), jnp.ones((d,), jnp.float32))
+
+
+def _mk_fa(b, h, s, d):
+    return (_rand(0, (b, h, s, d)), _rand(1, (b, h, s, d)),
+            _rand(2, (b, h, s, d)))
+
+
+def _mk_smmm(k, n):
+    from repro.kernels.spmm.ref import dense_to_bell
+    dense = jnp.where(_rand(0, (k, k)) > 0.5, _rand(1, (k, k)), 0.0)
+    values, indices = dense_to_bell(dense, 64, 64)
+    return (values, indices, _rand(2, (k, n)))
+
+
+#: alias → list of arg builders, one per shape bucket to sweep.
+SHAPES: Dict[str, List[Callable[[], Tuple]]] = {
+    "MMM": [lambda: _mk_mmm(256, 256, 256), lambda: _mk_mmm(512, 512, 512)],
+    "EWMM": [lambda: _mk_ewise(512, 512), lambda: _mk_ewise(1024, 1024)],
+    "EWMD": [lambda: _mk_ewise(512, 512)],
+    "MVM": [lambda: _mk_mvm(512, 512), lambda: _mk_mvm(1024, 1024)],
+    "JS": [lambda: _mk_js(256), lambda: _mk_js(512)],
+    "1DCONV": [lambda: _mk_conv(4096, 33), lambda: _mk_conv(8192, 65)],
+    "RMSNORM": [lambda: _mk_rmsnorm(512, 512)],
+    "SMMM": [lambda: _mk_smmm(256, 256)],
+    "FLASH_ATTN": [lambda: _mk_fa(1, 4, 256, 64)],
+}
+
+#: --smoke: one tiny bucket per alias; the sweep must fit a CI fast job.
+SMOKE_SHAPES: Dict[str, List[Callable[[], Tuple]]] = {
+    "MMM": [lambda: _mk_mmm(96, 80, 72)],
+    "EWMM": [lambda: _mk_ewise(64, 160)],
+    "EWMD": [lambda: _mk_ewise(64, 160)],
+    "MVM": [lambda: _mk_mvm(160, 160)],
+    "JS": [lambda: _mk_js(96)],
+    "1DCONV": [lambda: _mk_conv(512, 9)],
+    "RMSNORM": [lambda: _mk_rmsnorm(48, 256)],
+}
+
+
+def _default_db_path(explicit: str | None) -> Path:
+    """--db → :meth:`TuningDB.default`'s env resolution → cwd default."""
+    if explicit:
+        return Path(explicit)
+    return TuningDB.default().path or Path("halo_tuning.json")
+
+
+def report(db: TuningDB, out=sys.stdout) -> int:
+    """Print the DB as an aligned table; returns the number of rows."""
+    rows = [("key", "config", "tuned_us", "default_us", "gain_x")]
+    for key, ent in sorted(db.entries().items()):
+        cfg = ",".join(f"{k}={v}" for k, v in sorted(ent.config.items())) \
+            or "(default)"
+        rows.append((key, cfg, f"{ent.seconds*1e6:.1f}",
+                     f"{ent.default_seconds*1e6:.1f}",
+                     f"{ent.speedup:.2f}"))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    for r in rows:
+        print("  ".join(c.ljust(w) for c, w in zip(r, widths)), file=out)
+    return len(rows) - 1
+
+
+def sweep(db: TuningDB, aliases: Sequence[str], *, smoke: bool = False,
+          repeats: int = 3, warmup: int = 1, force: bool = False,
+          verbose: bool = True) -> int:
+    """Sweep all feasible record × shape-bucket combos for ``aliases``.
+
+    Returns the number of buckets swept (frozen entries count as visited
+    but not swept).  Records without a tuning space, records infeasible
+    for the sample shape, and platforms without a live agent are skipped.
+    """
+    from repro import kernels
+    from repro.core import RuntimeAgent, default_manifest
+    from repro.core.registry import GLOBAL_REGISTRY
+
+    kernels.register_all()
+    # a throwaway session tells us which platforms have live agents here
+    session = RuntimeAgent(manifest=default_manifest(), scheduler=False)
+    live = set(session._allowed_platforms())
+    shapes = SMOKE_SHAPES if smoke else SHAPES
+    swept = 0
+    for alias in aliases:
+        builders = shapes.get(alias)
+        if not builders:
+            continue
+        for build in builders:
+            args = build()
+            for rec in GLOBAL_REGISTRY.records(alias):
+                if rec.tuning_space is None or rec.platform not in live:
+                    continue
+                if not rec.feasible(*args) or not rec.variants(*args):
+                    continue
+                t0 = time.perf_counter()
+                res = autotune(rec, args, db=db, repeats=repeats,
+                               warmup=warmup, force=force)
+                if verbose:
+                    state = (f"swept {len(res.timings)} variants in "
+                             f"{time.perf_counter() - t0:.1f}s"
+                             if res.swept else "frozen (skipped)")
+                    cfg = res.entry.config or "(default)"
+                    print(f"{res.key}: {state} → {cfg} "
+                          f"[{res.entry.seconds*1e6:.0f}us, "
+                          f"{res.entry.speedup:.2f}x vs default]",
+                          flush=True)
+                swept += bool(res.swept)
+    session.finalize()
+    return swept
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    """Entry point for ``python -m repro.launch.tune``; returns exit code."""
+    p = argparse.ArgumentParser(
+        prog="repro.launch.tune",
+        description="Sweep kernel tuning spaces and persist the TuningDB.")
+    p.add_argument("--db", default=None, help="TuningDB path (default: "
+                   "HALO_TUNING_DB, HALO_AUTOTUNE_CACHE sibling, or "
+                   "./halo_tuning.json)")
+    p.add_argument("--aliases", default=None,
+                   help="comma-separated alias filter (default: all tunable)")
+    p.add_argument("--repeats", type=int, default=3,
+                   help="best-of-N samples per variant")
+    p.add_argument("--warmup", type=int, default=1,
+                   help="discarded leading samples per variant")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny shapes + repeats=2 (CI fast-job budget)")
+    p.add_argument("--force", action="store_true",
+                   help="re-sweep buckets with frozen entries")
+    p.add_argument("--report", action="store_true",
+                   help="print the DB as a table after sweeping "
+                   "(alone: just print and exit)")
+    p.add_argument("--no-sweep", action="store_true",
+                   help="skip sweeping (use with --report)")
+    args = p.parse_args(argv)
+
+    path = _default_db_path(args.db)
+    db = TuningDB(path)
+    if args.no_sweep:
+        report(db)
+        return 0
+    aliases = (args.aliases.split(",") if args.aliases
+               else sorted(SMOKE_SHAPES if args.smoke else SHAPES))
+    repeats = 2 if args.smoke and args.repeats == 3 else args.repeats
+    n = sweep(db, aliases, smoke=args.smoke, repeats=repeats,
+              warmup=args.warmup, force=args.force)
+    saved = db.save()
+    print(f"swept {n} bucket(s); {len(db)} entr(y/ies) in {saved or path}")
+    if args.report:
+        report(db)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

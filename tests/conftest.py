@@ -14,8 +14,10 @@ def rng():
 
 @pytest.fixture(autouse=True)
 def _isolated_autotune_cache(monkeypatch):
-    """Keep tests hermetic: a developer's HALO_AUTOTUNE_CACHE must not leak
-    persisted latency tables into CostModelScheduler.default() instances
-    (RuntimeAgent builds one per session), which would make record selection
-    depend on module-external state."""
+    """Keep tests hermetic: a developer's HALO_AUTOTUNE_CACHE / HALO_TUNING_DB
+    must not leak persisted latency tables or tuned tile configs into
+    CostModelScheduler.default() instances (RuntimeAgent builds one per
+    session), which would make record selection depend on module-external
+    state."""
     monkeypatch.delenv("HALO_AUTOTUNE_CACHE", raising=False)
+    monkeypatch.delenv("HALO_TUNING_DB", raising=False)

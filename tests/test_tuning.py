@@ -1,0 +1,388 @@
+"""Shape-bucketed autotuner: TuningDB persistence, sweep driver, selection
+precedence (tuned → EMA → cost model → static), variant feasibility guards,
+and the end-to-end config-application contract (DESIGN.md §9)."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CostModelScheduler, KernelRecord, KernelRegistry,
+                        RuntimeAgent, TuneEntry, TuningDB, abstract_signature,
+                        autotune, config_feasible, default_manifest,
+                        shape_bucket, tuning_key)
+from repro.core.tuning import dtype_tag
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _spy_record(seen, alias="SPY", platform="pallas", space=None, **kw):
+    """A record whose fn appends every received kwargs dict to ``seen``."""
+    def fn(a, **kwargs):
+        seen.append(dict(kwargs))
+        return a + 1.0
+
+    if space is None:
+        def space(a, **kwargs):
+            return [dict(bm=64), dict(bm=128)]
+    return KernelRecord(alias=alias, fn=fn, platform=platform,
+                        tuning_space=space, **kw)
+
+
+def _seed(db, record, args, config, seconds=1e-6, default_seconds=1e-3):
+    sig = abstract_signature(args)
+    key = tuning_key(record.platform, record.alias, shape_bucket(sig),
+                     dtype_tag(sig))
+    db.put(key, TuneEntry(config=config, seconds=seconds,
+                          default_seconds=default_seconds, source="seed"))
+    return key
+
+
+# ---------------------------------------------------------------------------
+# keys + buckets
+# ---------------------------------------------------------------------------
+def test_shape_bucket_and_dtype_tag():
+    sig = abstract_signature((jnp.zeros((300, 5), jnp.float32),
+                              jnp.zeros((128,), jnp.bfloat16), 7))
+    assert shape_bucket(sig) == "512x8,128,-"
+    assert dtype_tag(sig) == "float32+bfloat16+int"
+    assert tuning_key("pallas", "MMM", "512x8", "float32") == \
+        "pallas|MMM|512x8|float32"
+
+
+# ---------------------------------------------------------------------------
+# TuningDB persistence
+# ---------------------------------------------------------------------------
+def test_tuningdb_roundtrip(tmp_path):
+    path = tmp_path / "tuning.json"
+    db = TuningDB(path)
+    ent = TuneEntry(config={"bm": 512}, seconds=2e-4, default_seconds=4e-4)
+    db.put("pallas|MMM|512x512,512x512|float32", ent)
+    assert db.save() == path
+    warm = TuningDB(path)
+    got = warm.get("pallas|MMM|512x512,512x512|float32")
+    assert got is not None and got.config == {"bm": 512}
+    assert got.seconds == pytest.approx(2e-4)
+    assert got.frozen and got.speedup == pytest.approx(2.0)
+
+
+def test_tuningdb_merge_on_save(tmp_path):
+    """Two writers share one file: a plain overwrite must not clobber the
+    other's winners, and conflicts resolve to the faster entry."""
+    path = tmp_path / "tuning.json"
+    a, b = TuningDB(path), TuningDB(path)
+    a.put("k1", TuneEntry(config={"bm": 64}, seconds=5e-4,
+                          default_seconds=6e-4))
+    a.save()
+    b.put("k2", TuneEntry(config={"bn": 128}, seconds=1e-4,
+                          default_seconds=2e-4))
+    b.put("k1", TuneEntry(config={"bm": 256}, seconds=1e-4,   # faster
+                          default_seconds=6e-4))
+    b.save()
+    merged = TuningDB(path)
+    assert set(merged.entries()) == {"k1", "k2"}
+    assert merged.get("k1").config == {"bm": 256}
+    # the slower conflicting entry never wins, regardless of save order
+    a.save()
+    assert TuningDB(path).get("k1").config == {"bm": 256}
+
+
+def test_tuningdb_corrupt_file_recovery(tmp_path):
+    path = tmp_path / "tuning.json"
+    path.write_text("{not json at all")
+    db = TuningDB(path)                        # must not raise
+    assert len(db) == 0
+    db.put("k", TuneEntry(config={}, seconds=1e-4, default_seconds=1e-4))
+    assert db.save() == path                   # and can still persist
+    assert TuningDB(path).get("k") is not None
+    # valid JSON, wrong shape → cold; malformed row → skipped
+    path.write_text(json.dumps({"entries": {
+        "good": {"config": {}, "seconds": 1e-4, "default_seconds": 1e-4},
+        "bad": {"seconds": "nope"}}}))
+    db2 = TuningDB(path)
+    assert set(db2.entries()) == {"good"}
+    path.write_text(json.dumps([1, 2, 3]))
+    assert len(TuningDB(path)) == 0
+
+
+# ---------------------------------------------------------------------------
+# feasibility guards
+# ---------------------------------------------------------------------------
+def test_config_feasible_against_variants():
+    rec = _spy_record([])
+    args = (jnp.zeros((8, 8)),)
+    assert config_feasible(rec, {"bm": 64}, args)
+    assert config_feasible(rec, {}, args)              # default: always ok
+    assert not config_feasible(rec, {"bm": 4096}, args)
+    assert not config_feasible(rec, {"bogus": 1}, args)
+
+
+def test_variants_guard_small_and_odd_shapes():
+    """Real kernel spaces collapse for tiny/odd shapes instead of emitting
+    infeasible configs, and every emitted config runs correctly."""
+    from repro import kernels
+    kernels.register_all()
+    from repro.core.registry import GLOBAL_REGISTRY
+    from repro.kernels.matmul import mmm_ref
+
+    rec = next(r for r in GLOBAL_REGISTRY.records("MMM")
+               if r.platform == "pallas")
+    a = jnp.asarray(np.random.RandomState(0).randn(5, 7), jnp.float32)
+    b = jnp.asarray(np.random.RandomState(1).randn(7, 3), jnp.float32)
+    variants = rec.variants(a, b)
+    assert 1 <= len(variants) <= 12
+    ref = np.asarray(mmm_ref(a, b))
+    for cfg in variants:
+        assert set(cfg) == {"bm", "bn", "bk"}
+        assert all(isinstance(v, int) and v >= 1 for v in cfg.values())
+        np.testing.assert_allclose(np.asarray(rec.fn(a, b, **cfg)), ref,
+                                   rtol=2e-4, atol=2e-4)
+    # a raising space is treated as empty, never fatal
+    def bad_space(*args, **kw):
+        raise ValueError("boom")
+    broken = KernelRecord(alias="X", fn=lambda a: a, platform="jnp",
+                          tuning_space=bad_space)
+    assert broken.variants(a) == []
+
+
+def test_variants_stable_across_shape_bucket():
+    """The bucket invariant: every member of a shape bucket gets the same
+    variant list, so a winner swept at one member is a feasible (applied)
+    config for all of them — including non-power-of-two shapes."""
+    from repro import kernels
+    kernels.register_all()
+    from repro.core.registry import GLOBAL_REGISTRY
+
+    rec = next(r for r in GLOBAL_REGISTRY.records("MMM")
+               if r.platform == "pallas")
+    swept = (jnp.zeros((512, 512)), jnp.zeros((512, 512)))
+    member = (jnp.zeros((300, 400)), jnp.zeros((400, 290)))
+    sig_a, sig_b = abstract_signature(swept), abstract_signature(member)
+    assert shape_bucket(sig_a) == shape_bucket(sig_b)    # same DB key …
+    assert rec.variants(*swept) == rec.variants(*member)  # … same variants
+    for cfg in rec.variants(*swept):
+        assert config_feasible(rec, cfg, member)
+    # the largest (bucket-extent) candidate is always offered, even on
+    # limit=2 axes — it is the cross-bucket anchor
+    from repro.kernels.common import block_choices
+    assert block_choices(512, 128, limit=2) == (128, 512)
+    assert block_choices(300, 128, limit=2) == (128, 512)
+    assert block_choices(4992, 128, limit=4)[-1] == 8192
+
+
+# ---------------------------------------------------------------------------
+# selection precedence (DESIGN.md §9 ladder)
+# ---------------------------------------------------------------------------
+def test_tuned_entry_beats_ema_and_cost_model():
+    seen = []
+    rec = _spy_record(seen)
+    sched = CostModelScheduler()
+    args = (jnp.zeros((64, 64)),)
+    sig = abstract_signature(args)
+    # EMA says 5ms; cost model absent
+    for _ in range(3):
+        sched.observe(rec, sig, 5e-3)
+    assert sched.estimate(rec, sig, args) == pytest.approx(5e-3)
+    # a tuned entry overrides the EMA for the same record
+    _seed(sched.tuning, rec, args, {"bm": 64}, seconds=1e-6)
+    assert sched.estimate(rec, sig, args) == pytest.approx(1e-6)
+    assert sched.tuned_config(rec, args) == {"bm": 64}
+
+
+def test_tuned_entry_flips_record_choice():
+    """A tuned entry on the statically-dispreferred record outranks the
+    preferred record's EMA — rung 1 beats rung 2 across records too."""
+    reg = KernelRegistry()
+    seen = []
+    slow = KernelRecord(alias="K", fn=lambda a: a + 5.0, platform="xla",
+                        priority=10)
+    fast = _spy_record(seen, alias="K", platform="jnp", priority=0,
+                       is_failsafe=True)
+    reg.register(slow)
+    reg.register(fast)
+    sched = CostModelScheduler()
+    args = (jnp.zeros(4),)
+    sig = abstract_signature(args)
+    for _ in range(3):
+        sched.observe(slow, sig, 1e-4)     # xla measured fast-ish
+    _seed(sched.tuning, fast, args, {"bm": 64}, seconds=1e-6)
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                         scheduler=sched)
+    cr = agent.claim("K")
+    agent.send(args, cr)
+    np.testing.assert_allclose(np.asarray(agent.recv(cr)), 1.0)  # jnp won
+    assert seen and seen[-1] == {"bm": 64}  # and ran at the tuned config
+
+
+def test_stale_infeasible_entry_falls_through():
+    """A tuned config the space no longer offers is ignored: the estimate
+    falls back to the EMA and no config kwargs are applied."""
+    seen = []
+    rec = _spy_record(seen)
+    sched = CostModelScheduler()
+    args = (jnp.zeros((64, 64)),)
+    sig = abstract_signature(args)
+    for _ in range(3):
+        sched.observe(rec, sig, 7e-3)
+    _seed(sched.tuning, rec, args, {"bm": 9999}, seconds=1e-6)  # infeasible
+    assert sched.estimate(rec, sig, args) == pytest.approx(7e-3)  # EMA rung
+    assert sched.tuned_config(rec, args) is None
+    agent = RuntimeAgent(registry=None, manifest=default_manifest(),
+                         scheduler=sched)
+    agent.registry = KernelRegistry()
+    agent.registry.register(rec)
+    agent.dispatch("SPY", *args)
+    assert seen[-1] == {}                      # no stale kwargs injected
+
+
+def test_dispatch_applies_tuned_config_via_spy():
+    """Acceptance: a seeded TuningDB entry changes the config halo_dispatch
+    uses — asserted via spy — with zero host-program changes."""
+    import repro.core.c2mpi as c2mpi
+
+    seen = []
+    reg = KernelRegistry()
+    rec = _spy_record(seen, is_failsafe=True)
+    reg.register(rec)
+    args = (jnp.zeros((32, 32)),)
+    db = TuningDB()
+    _seed(db, rec, args, {"bm": 128})
+    session = RuntimeAgent(registry=reg, manifest=default_manifest(),
+                           scheduler=CostModelScheduler(tuning_db=db))
+    out = session.dispatch("SPY", *args)       # the host line never changes
+    np.testing.assert_allclose(np.asarray(out), 1.0)
+    assert seen[-1] == {"bm": 128}
+    # DRPC path applies the same config
+    cr = session.claim("SPY")
+    session.send(args, cr)
+    session.recv(cr)
+    assert seen[-1] == {"bm": 128}
+    # explicit caller kwargs beat the tuned config
+    session.dispatch("SPY", *args, bm=8)
+    assert seen[-1] == {"bm": 8}
+    session.finalize()
+
+
+def test_halo_dispatch_env_seeded_db(tmp_path, monkeypatch):
+    """Whole-machinery variant: the DB arrives via HALO_TUNING_DB, flows
+    through CostModelScheduler.default() into the process session, and
+    reshapes halo_dispatch — no host-program change anywhere."""
+    from repro.core import MPIX_Finalize, MPIX_Initialize, halo_dispatch
+
+    seen = []
+    reg = KernelRegistry()
+    rec = _spy_record(seen, is_failsafe=True)
+    reg.register(rec)
+    args = (jnp.zeros((32, 32)),)
+    path = tmp_path / "db.json"
+    db = TuningDB(path)
+    _seed(db, rec, args, {"bm": 64})
+    db.save()
+    monkeypatch.setenv("HALO_TUNING_DB", str(path))
+    try:
+        MPIX_Initialize(registry=reg)
+        halo_dispatch("SPY", *args)
+        assert seen[-1] == {"bm": 64}
+    finally:
+        MPIX_Finalize()
+
+
+def test_scheduler_without_tuning_db():
+    """tuning_db=False disables rung 1 entirely (and nothing crashes)."""
+    seen = []
+    rec = _spy_record(seen)
+    sched = CostModelScheduler(tuning_db=False)
+    assert sched.tuning is None
+    args = (jnp.zeros((16, 16)),)
+    assert sched.tuned_config(rec, args) is None
+    assert sched.estimate(rec, abstract_signature(args), args) is None
+
+
+# ---------------------------------------------------------------------------
+# sweep driver
+# ---------------------------------------------------------------------------
+def test_autotune_sweep_commits_and_freezes():
+    calls = []
+
+    def fn(a, bm=None):
+        calls.append(bm)
+        return a
+
+    ticks = iter(range(1000))
+
+    def timer():
+        return next(ticks) * 1e-3
+
+    rec = KernelRecord(alias="K", fn=fn, platform="jnp",
+                       tuning_space=lambda a, **kw: [dict(bm=64)])
+    db = TuningDB()
+    res = autotune(rec, (jnp.zeros((8, 8)),), db=db, repeats=2, warmup=1,
+                   timer=timer)
+    assert res.swept and res.entry.frozen
+    assert [cfg for cfg, _ in res.timings] == [{}, {"bm": 64}]
+    assert db.get(res.key) is res.entry
+    # frozen: the second call does not re-sweep …
+    n = len(calls)
+    res2 = autotune(rec, (jnp.zeros((8, 8)),), db=db, repeats=2, timer=timer)
+    assert not res2.swept and len(calls) == n
+    # … unless forced
+    res3 = autotune(rec, (jnp.zeros((8, 8)),), db=db, repeats=2, force=True,
+                    timer=timer)
+    assert res3.swept and len(calls) > n
+
+
+def test_autotune_noise_keeps_default():
+    """A variant inside the min_gain noise band must not displace the
+    default config."""
+    times = {None: 1.000, 64: 0.995}           # 0.5% "win": pure noise
+    clock = [0.0]
+
+    def fn(a, bm=None):
+        clock[0] += times[bm]
+        return a
+
+    rec = KernelRecord(alias="K", fn=fn, platform="jnp",
+                       tuning_space=lambda a, **kw: [dict(bm=64)])
+    res = autotune(rec, (jnp.zeros(4),), repeats=2, warmup=1,
+                   timer=lambda: clock[0])
+    assert res.entry.config == {}              # default retained
+    # a real win (beyond min_gain) is committed
+    times[64] = 0.5
+    res2 = autotune(rec, (jnp.zeros(4),), repeats=2, warmup=1,
+                    timer=lambda: clock[0])
+    assert res2.entry.config == {"bm": 64}
+    assert res2.entry.speedup == pytest.approx(2.0)
+
+
+def test_autotune_skips_raising_variant():
+    def fn(a, bm=None):
+        if bm == 64:
+            raise RuntimeError("infeasible after all")
+        return a
+
+    rec = KernelRecord(alias="K", fn=fn, platform="jnp",
+                       tuning_space=lambda a, **kw: [dict(bm=64),
+                                                     dict(bm=128)])
+    res = autotune(rec, (jnp.zeros(4),), repeats=1)
+    assert {"bm": 64} not in [cfg for cfg, _ in res.timings]
+    assert {"bm": 128} in [cfg for cfg, _ in res.timings]
+
+
+def test_cpu_sweep_smoke_cli(tmp_path, capsys):
+    """End-to-end CLI smoke: tiny sweep, DB written, report prints."""
+    from repro.launch import tune
+
+    path = tmp_path / "db.json"
+    assert tune.main(["--smoke", "--db", str(path),
+                      "--aliases", "MMM,EWMM", "--report"]) == 0
+    assert path.exists()
+    db = TuningDB(path)
+    assert len(db) >= 2                        # one bucket per alias
+    assert all(e.frozen for e in db.entries().values())
+    out = capsys.readouterr().out
+    assert "pallas|MMM|" in out and "gain_x" in out
+    # re-run: everything frozen, nothing re-swept
+    assert tune.main(["--smoke", "--db", str(path),
+                      "--aliases", "MMM,EWMM"]) == 0
+    assert "frozen (skipped)" in capsys.readouterr().out
