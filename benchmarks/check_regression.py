@@ -1,0 +1,138 @@
+"""CI bench-regression gate: BENCH_summary.json vs BENCH_baseline.json.
+
+The gate compares *speedup ratios*, never absolute times — ratios are
+contrast measurements (tuned vs default, collective vs serial) and survive
+the move between developer boxes and CI runners far better than wall
+clocks do.  Per the noisy-box protocol, a tracked ratio fails only when it
+drops more than ``--tolerance`` (default 25%) below its committed
+baseline; ratios whose baseline is below ``--min-ratio`` (default 1.05)
+carry no signal (noise around 1.0x) and are reported but never gated.
+
+Usage:
+    python -m benchmarks.check_regression                 # gate
+    python -m benchmarks.check_regression --update        # refresh baseline
+    python -m benchmarks.check_regression --summary A B   # best-of-N runs
+
+``--update`` rewrites BENCH_baseline.json from the current summary (run a
+fresh ``benchmarks.run --smoke`` pass first); commit the result.  With
+multiple ``--summary`` files the per-key maximum gates (best of N runs).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE = ROOT / "BENCH_baseline.json"
+SUMMARY = ROOT / "BENCH_summary.json"
+
+
+def _ratios(summary: dict) -> dict:
+    """Flatten a BENCH_summary.json into {artifact.path: ratio}."""
+    out = {}
+    for artifact, ent in summary.items():
+        for path, val in (ent.get("ratios") or {}).items():
+            out[f"{artifact}.{path}"] = float(val)
+    return out
+
+
+def _merged_ratios(paths, agg=max) -> dict:
+    """Aggregate per key over several summary files: ``max`` when gating
+    (best of N runs must clear the floor), ``min`` when updating the
+    baseline (a conservative floor — a ratio that swings below
+    ``--min-ratio`` across calibration runs self-excludes from gating)."""
+    merged: dict = {}
+    for p in paths:
+        for key, val in _ratios(json.loads(Path(p).read_text())).items():
+            merged[key] = agg(val, merged.get(key, val))
+    return merged
+
+
+def main(argv=None) -> int:
+    """Gate (exit 1 on regression) or refresh the baseline (--update)."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--summary", nargs="+", default=[str(SUMMARY)],
+                    help="summary file(s); several = per-key best of N runs")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional drop below baseline")
+    ap.add_argument("--min-ratio", type=float, default=1.05,
+                    help="baseline ratios below this are not gated (noise)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated key prefixes to gate (e.g. "
+                         "BENCH_smoke_); other baseline keys are reported "
+                         "as 'stale' but never pass or fail.  Use in the "
+                         "CI smoke job, where committed full-run artifacts "
+                         "fold into the summary without being re-measured")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current summary")
+    args = ap.parse_args(argv)
+    prefixes = tuple(p.strip() for p in args.only.split(",")
+                     if p.strip()) if args.only else None
+
+    if args.update:
+        floor = _merged_ratios(args.summary, agg=min)
+        Path(args.baseline).write_text(json.dumps(
+            {"tolerance": args.tolerance, "min_ratio": args.min_ratio,
+             "ratios": floor}, indent=1, sort_keys=True))
+        gated = sum(1 for v in floor.values() if v >= args.min_ratio)
+        print(f"wrote {args.baseline}: {len(floor)} tracked ratios, "
+              f"{gated} above the {args.min_ratio}x gating threshold")
+        return 0
+    current = _merged_ratios(args.summary, agg=max)
+
+    try:
+        base = json.loads(Path(args.baseline).read_text())
+    except (OSError, ValueError) as exc:
+        print(f"FAIL: baseline {args.baseline} unreadable ({exc}); "
+              f"generate one with --update and commit it")
+        return 1
+    baseline = {k: float(v) for k, v in base.get("ratios", {}).items()}
+    if not baseline:
+        print(f"FAIL: baseline {args.baseline} tracks no ratios")
+        return 1
+
+    failures, gated, skipped = [], 0, []
+    print(f"{'status':8s} {'ratio':>8s} {'baseline':>9s} {'floor':>8s}  key")
+    for key in sorted(baseline):
+        want = baseline[key]
+        have = current.get(key)
+        floor = want * (1.0 - args.tolerance)
+        if prefixes is not None and not key.startswith(prefixes):
+            status = "stale"          # not re-measured by this pass's
+            skipped.append(key)       # sections: no pass, no fail
+        elif want < args.min_ratio:
+            status = "no-gate"
+            skipped.append(key)
+        elif have is None:
+            status = "missing"              # not measured this pass: warn
+            skipped.append(key)
+        elif have < floor:
+            status = "FAIL"
+            failures.append(key)
+        else:
+            status = "ok"
+            gated += 1
+        shown = "-" if have is None else f"{have:8.3f}"
+        print(f"{status:8s} {shown:>8s} {want:9.3f} {floor:8.3f}  {key}")
+    for key in sorted(set(current) - set(baseline)):
+        print(f"{'new':8s} {current[key]:8.3f} {'-':>9s} {'-':>8s}  {key} "
+              f"(not in baseline; --update to track)")
+
+    if not gated and not failures:
+        print("FAIL: no tracked ratio was actually measured this pass — "
+              "the gate would be vacuous")
+        return 1
+    if failures:
+        print(f"FAIL: {len(failures)} ratio(s) dropped >"
+              f"{args.tolerance:.0%} below baseline: {failures}")
+        return 1
+    print(f"ok: {gated} ratio(s) within tolerance "
+          f"({len(skipped)} ungated/missing)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

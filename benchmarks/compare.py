@@ -11,7 +11,7 @@ import json
 import sys
 from pathlib import Path
 
-from .roofline import HBM_BW, LINK_BW, PEAK_FLOPS, roofline_row
+from .roofline import roofline_row
 
 
 def load(d):

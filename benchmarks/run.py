@@ -2,19 +2,30 @@
 
 One section per paper table (VI/VII/VIII) + the roofline table from dry-run
 artifacts (if present) + the subsystem benchmarks (async dispatch, graph
-overlap, serving, tuning gain) + a model-step microbench.  Output: CSV
-(``name,us_per_call,derived``) per the harness contract, with section
-headers as comments.
+overlap, collective scaling, serving, tuning gain) + a model-step
+microbench.  Output: CSV (``name,us_per_call,derived``) per the harness
+contract, with section headers as comments.
 
-Sections with missing *optional* dependencies are skipped with a notice,
-never crashed on.  At the end, every ``BENCH_*.json`` artifact is folded
-into ``BENCH_summary.json`` with its best speedup/gain ratio, so one file
-answers "what did each subsystem buy".
+Sections with missing *optional* third-party dependencies are skipped with
+a notice; any other crash in a requested section is reported, the
+remaining sections still run, the summary is still written — and the
+process exits **non-zero** (a broken benchmark must not silently produce a
+partial ``BENCH_summary.json``).  At the end, every ``BENCH_*.json``
+artifact is folded into ``BENCH_summary.json`` with its best speedup/gain
+ratio, so one file answers "what did each subsystem buy".
+
+``--smoke`` runs the reduced best-of-N subset (tuning gain at smaller
+shapes, collective scaling at fewer repeats, writing
+``BENCH_smoke_*.json``) that feeds the CI bench-regression gate
+(``benchmarks.check_regression --only BENCH_smoke_``); ``--sections``
+selects sections by name.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
+import traceback
 from pathlib import Path
 
 import jax
@@ -27,17 +38,26 @@ def _section(title: str):
     print(f"# === {title} ===", flush=True)
 
 
-def _optional(name: str, fn) -> None:
-    """Run one benchmark section; a missing optional dependency skips it
-    (the harness contract: report, don't crash).  An ImportError naming one
-    of *our own* packages is a real bug, not a missing dep — re-raised."""
+def _run_section(name: str, fn, failures: list) -> None:
+    """Run one benchmark section.  A missing optional *third-party*
+    dependency skips it (the harness contract: report, don't crash); an
+    ImportError naming one of our own packages, or any other exception, is
+    a real failure — recorded so main() can exit non-zero after the
+    remaining sections and the summary still ran."""
     try:
         fn()
     except ImportError as exc:
         missing = (getattr(exc, "name", "") or "").split(".")[0]
         if missing in ("repro", "benchmarks"):
-            raise
-        _section(f"{name}: skipped (missing optional dependency: {exc})")
+            failures.append(name)
+            _section(f"{name}: FAILED ({type(exc).__name__}: {exc})")
+            traceback.print_exc()
+        else:
+            _section(f"{name}: skipped (missing optional dependency: {exc})")
+    except Exception as exc:  # noqa: BLE001 — keep later sections running
+        failures.append(name)
+        _section(f"{name}: FAILED ({type(exc).__name__}: {exc})")
+        traceback.print_exc()
 
 
 def _paper_tables() -> None:
@@ -133,8 +153,8 @@ def summarize(root: Path = ROOT) -> dict:
     """
     summary = {}
     for p in sorted(root.glob("BENCH_*.json")):
-        if p.name == "BENCH_summary.json":
-            continue
+        if p.name in ("BENCH_summary.json", "BENCH_baseline.json"):
+            continue                    # outputs of this fold, not inputs
         try:
             data = json.loads(p.read_text())
         except (OSError, ValueError):
@@ -158,39 +178,79 @@ def summarize(root: Path = ROOT) -> dict:
     return summary
 
 
-def main() -> None:
-    """Run every benchmark section (optional ones skip on missing deps),
-    then aggregate all BENCH_*.json artifacts into BENCH_summary.json."""
-    _optional("paper tables", _paper_tables)
-    _optional("roofline", _roofline)
+def _async():
+    from .async_dispatch import main as async_main
+    async_main()
 
-    # Sync vs async C2MPI dispatch overhead + substrate overlap
-    def _async():
-        from .async_dispatch import main as async_main
-        async_main()
-    _optional("async dispatch", _async)
 
-    # Serial dispatch vs execution-graph overlap (writes BENCH_graph.json)
-    def _graph():
-        from .graph_overlap import main as graph_main
-        graph_main()
-    _optional("graph overlap", _graph)
+def _graph():
+    from .graph_overlap import main as graph_main
+    graph_main()
 
-    # Serving: legacy whole-batch queue vs slot continuous batching
-    def _serve():
-        from .serve_throughput import main as serve_main
-        serve_main()
-    _optional("serve throughput", _serve)
 
-    # Autotuner: tuned vs default kernel configs (writes BENCH_tuning.json)
-    def _tuning():
-        from .tuning_gain import main as tuning_main
-        tuning_main()
-    _optional("tuning gain", _tuning)
+def _collective(smoke: bool = False):
+    from .collective_scaling import main as collective_main
+    collective_main(smoke=smoke)
 
-    _optional("model microbench", _model_microbench)
+
+def _serve():
+    from .serve_throughput import main as serve_main
+    serve_main()
+
+
+def _tuning(smoke: bool = False):
+    from .tuning_gain import main as tuning_main
+    tuning_main(smoke=smoke)
+
+
+#: name -> full-pass section runner, in execution order
+SECTIONS = {
+    "tables": _paper_tables,
+    "roofline": _roofline,
+    "async": _async,
+    "graph": _graph,
+    "collective": _collective,
+    "serve": _serve,
+    "tuning": _tuning,
+    "microbench": _model_microbench,
+}
+
+#: the tiny CI subset: best-of-N, reduced shapes, BENCH_smoke_*.json
+SMOKE_SECTIONS = {
+    "collective": lambda: _collective(smoke=True),
+    "tuning": lambda: _tuning(smoke=True),
+}
+
+
+def main(argv=None) -> int:
+    """Run the requested benchmark sections (all by default; the smoke
+    subset with ``--smoke``), then aggregate every BENCH_*.json artifact
+    into BENCH_summary.json.  Returns non-zero when any requested section
+    crashed — the summary is still written so the partial results stay
+    inspectable, but CI must not mistake them for a full pass."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced best-of-N subset for the CI regression gate")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset (names: %s)"
+                         % ",".join(SECTIONS))
+    args = ap.parse_args(argv)
+    table = SMOKE_SECTIONS if args.smoke else SECTIONS
+    if args.sections:
+        requested = [s.strip() for s in args.sections.split(",") if s.strip()]
+        unknown = [s for s in requested if s not in table]
+        if unknown:
+            ap.error(f"unknown section(s) {unknown}; have {sorted(table)}")
+        table = {name: table[name] for name in requested}
+    failures: list = []
+    for name, fn in table.items():
+        _run_section(name, fn, failures)
     summarize()
+    if failures:
+        _section(f"FAILED sections: {', '.join(failures)}")
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

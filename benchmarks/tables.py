@@ -14,7 +14,6 @@ instrumentation (Table VIII).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Dict, List, Tuple
 
 import jax

@@ -9,27 +9,35 @@ rounds (min per arm), so slow drift on a shared box cannot masquerade as
 a tuning gain.  Results go to ``BENCH_tuning.json`` and print per the
 harness CSV contract (``name,us_per_call,derived``).
 
-Run:  PYTHONPATH=src python -m benchmarks.tuning_gain
+Run:  PYTHONPATH=src python -m benchmarks.tuning_gain [--smoke]
 """
 from __future__ import annotations
 
 import json
+import sys
 import time
 from pathlib import Path
 
 import jax
 
-OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_tuning.json"
+ROOT = Path(__file__).resolve().parent.parent
 REPEATS = 5          # best-of-N per arm in the re-measure phase
 ROUNDS = 5           # alternating default/tuned rounds
 SWEEP_REPEATS = 3
 
 
-def _workloads():
+def _workloads(smoke: bool = False):
     """(alias, args) per representative bucket — shapes chosen so the
-    default tile caps (256/512/1024 preferred blocks) genuinely bind."""
+    default tile caps (256/512/1024 preferred blocks) genuinely bind.
+    The smoke set keeps the two most tuning-sensitive aliases at reduced
+    shapes (the CI bench-regression gate's stable ratio source)."""
     from repro.launch.tune import (_mk_conv, _mk_js, _mk_mmm, _mk_mvm,
                                    _mk_rmsnorm)
+    if smoke:
+        return [
+            ("MVM", _mk_mvm(1024, 512)),
+            ("RMSNORM", _mk_rmsnorm(2048, 256)),
+        ]
     return [
         ("MMM", _mk_mmm(512, 512, 512)),
         ("MVM", _mk_mvm(2048, 1024)),
@@ -49,19 +57,23 @@ def _best_of(fn, n, *, warmup=1):
     return best
 
 
-def main() -> dict:
-    """Run the sweep + re-measure; writes BENCH_tuning.json, returns it."""
+def main(smoke: bool = False) -> dict:
+    """Run the sweep + re-measure; writes BENCH_tuning.json (or
+    BENCH_smoke_tuning.json, best-of-3, for the CI gate), returns it."""
     from repro import kernels
     from repro.core.registry import GLOBAL_REGISTRY
     from repro.core.tuning import TuningDB, autotune
 
+    repeats, rounds = (3, 3) if smoke else (REPEATS, ROUNDS)
+    out_path = ROOT / ("BENCH_smoke_tuning.json" if smoke
+                       else "BENCH_tuning.json")
     kernels.register_all()
     print("# === tuned vs default kernel configs (pallas substrate, "
           "sweep-then-freeze, best-of-N) ===", flush=True)
     print("name,us_per_call,derived")
     db = TuningDB()                       # fresh, memory-only: hermetic
     entries = []
-    for alias, args in _workloads():
+    for alias, args in _workloads(smoke):
         rec = next(r for r in GLOBAL_REGISTRY.records(alias)
                    if r.platform == "pallas")
         if not rec.feasible(*args):
@@ -73,15 +85,15 @@ def main() -> dict:
             default_s = tuned_s = float("inf")
             _best_of(lambda: rec.fn(*args), 1)       # shared warm-up
             _best_of(lambda: rec.fn(*args, **cfg), 1)
-            for _ in range(ROUNDS):
+            for _ in range(rounds):
                 default_s = min(default_s, _best_of(
-                    lambda: rec.fn(*args), REPEATS, warmup=0))
+                    lambda: rec.fn(*args), repeats, warmup=0))
                 tuned_s = min(tuned_s, _best_of(
-                    lambda: rec.fn(*args, **cfg), REPEATS, warmup=0))
+                    lambda: rec.fn(*args, **cfg), repeats, warmup=0))
         else:
             # default config won the sweep: the arms would run identical
             # programs, so re-measuring could only report noise
-            default_s = tuned_s = _best_of(lambda: rec.fn(*args), REPEATS)
+            default_s = tuned_s = _best_of(lambda: rec.fn(*args), repeats)
         ratio = default_s / tuned_s if tuned_s > 0 else 1.0
         entries.append({
             "alias": alias,
@@ -97,16 +109,16 @@ def main() -> dict:
               f"default_us={default_s*1e6:.1f};gain_x={ratio:.2f};"
               f"config={cfg or 'default'}", flush=True)
     payload = {
-        "protocol": {"sweep_repeats": SWEEP_REPEATS, "repeats": REPEATS,
-                     "rounds": ROUNDS, "substrate": "pallas (pinned)"},
+        "protocol": {"sweep_repeats": SWEEP_REPEATS, "repeats": repeats,
+                     "rounds": rounds, "substrate": "pallas (pinned)"},
         "entries": entries,
         "non_default_winners": sum(e["non_default"] for e in entries),
         "best_gain_x": max((e["speedup_x"] for e in entries), default=1.0),
     }
-    OUT_PATH.write_text(json.dumps(payload, indent=1))
-    print(f"# wrote {OUT_PATH}", flush=True)
+    out_path.write_text(json.dumps(payload, indent=1))
+    print(f"# wrote {out_path}", flush=True)
     return payload
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

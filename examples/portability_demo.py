@@ -17,8 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (KernelAttributes, KernelRecord, KernelRegistry,
-                        Manifest, RuntimeAgent, VirtualizationAgent,
-                        default_manifest)
+                        RuntimeAgent, VirtualizationAgent, default_manifest)
 from repro.kernels import register_all
 
 

@@ -9,7 +9,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py --preset small --steps 60
       PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
 """
 import argparse
-import dataclasses
 import logging
 
 import jax
@@ -18,8 +17,8 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, AttnConfig, BlockSpec, Stage
 from repro.data import SyntheticLM
 from repro.models import build_model
-from repro.train import (CheckpointManager, HeartbeatJournal, StragglerPolicy,
-                         TrainHyper, Trainer)
+from repro.train import (CheckpointManager, HeartbeatJournal, TrainHyper,
+                         Trainer)
 
 
 def danube_100m() -> ArchConfig:

@@ -9,7 +9,7 @@ scan bodies, keeping the lowered HLO small at 60–88 layers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 

@@ -10,6 +10,8 @@ The paper's contribution, as a composable library:
 * :mod:`repro.core.tuning`         — shape-bucketed kernel autotuner +
   persistent TuningDB (DESIGN.md §9)
 * :mod:`repro.core.c2mpi`          — MPIX_* application interface (§IV)
+* :mod:`repro.core.collective`     — collective verbs over device groups of
+  virtualization agents (DESIGN.md §10)
 * :mod:`repro.core.graph`          — execution graphs: DAG capture, cost-model
   placement, cross-substrate overlap (DESIGN.md §8)
 * :mod:`repro.core.portability`    — performance-portability metrics (§VI)
@@ -24,11 +26,16 @@ from .tuning import (TuneEntry, TuneResult, TuningDB, autotune,
 from .agents import (ChildRank, HaloCancelledError, HaloFuture, JnpAgent,
                      PallasAgent, RuntimeAgent, ShardedAgent,
                      VirtualizationAgent, XlaAgent)
-from .c2mpi import (MPIX_Claim, MPIX_CreateBuffer, MPIX_Finalize, MPIX_Free,
-                    MPIX_GraphBegin, MPIX_GraphEnd, MPIX_Initialize,
-                    MPIX_IRecv, MPIX_ISend, MPIX_Recv, MPIX_Send,
-                    MPIX_SendFwd, MPIX_Test, MPIX_Wait, MPIX_Waitall,
-                    halo_dispatch, halo_session)
+from .c2mpi import (MPIX_Allgather, MPIX_Allreduce, MPIX_Bcast, MPIX_Claim,
+                    MPIX_CommFree, MPIX_CommSplit, MPIX_CreateBuffer,
+                    MPIX_Finalize, MPIX_Free, MPIX_Gather, MPIX_GraphBegin,
+                    MPIX_GraphEnd, MPIX_IAllgather, MPIX_IAllreduce,
+                    MPIX_IBcast, MPIX_IGather, MPIX_Initialize, MPIX_IRecv,
+                    MPIX_IReduce, MPIX_IScatter, MPIX_ISend, MPIX_Recv,
+                    MPIX_Reduce, MPIX_Scatter, MPIX_Send, MPIX_SendFwd,
+                    MPIX_Test, MPIX_Wait, MPIX_Waitall, halo_dispatch,
+                    halo_session)
+from .collective import HaloComm, REDUCE_OPS
 from .graph import (ExecutionGraph, GraphDependencyError, GraphError,
                     GraphNode, halo_graph)
 from .portability import (KernelReport, Timing, overhead_ratio,
@@ -45,11 +52,15 @@ __all__ = [
     "ChildRank", "HaloCancelledError", "HaloFuture", "JnpAgent",
     "PallasAgent", "RuntimeAgent", "ShardedAgent",
     "VirtualizationAgent", "XlaAgent",
-    "MPIX_Claim", "MPIX_CreateBuffer", "MPIX_Finalize", "MPIX_Free",
-    "MPIX_GraphBegin", "MPIX_GraphEnd",
-    "MPIX_Initialize", "MPIX_IRecv", "MPIX_ISend", "MPIX_Recv",
-    "MPIX_Send", "MPIX_SendFwd", "MPIX_Test", "MPIX_Wait", "MPIX_Waitall",
+    "MPIX_Allgather", "MPIX_Allreduce", "MPIX_Bcast", "MPIX_Claim",
+    "MPIX_CommFree", "MPIX_CommSplit", "MPIX_CreateBuffer", "MPIX_Finalize",
+    "MPIX_Free", "MPIX_Gather", "MPIX_GraphBegin", "MPIX_GraphEnd",
+    "MPIX_IAllgather", "MPIX_IAllreduce", "MPIX_IBcast", "MPIX_IGather",
+    "MPIX_Initialize", "MPIX_IRecv", "MPIX_IReduce", "MPIX_IScatter",
+    "MPIX_ISend", "MPIX_Recv", "MPIX_Reduce", "MPIX_Scatter", "MPIX_Send",
+    "MPIX_SendFwd", "MPIX_Test", "MPIX_Wait", "MPIX_Waitall",
     "halo_dispatch", "halo_session",
+    "HaloComm", "REDUCE_OPS",
     "ExecutionGraph", "GraphDependencyError", "GraphError", "GraphNode",
     "halo_graph",
     "KernelReport", "Timing", "overhead_ratio", "performance_penalty",

@@ -42,9 +42,8 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 
-from .compute_object import BufferHandle, ComputeObject, as_compute_object
+from .compute_object import BufferHandle, as_compute_object
 from .manifest import Manifest, default_manifest
 from .registry import (GLOBAL_REGISTRY, KernelRecord, KernelRegistry,
                        SelectionError)
@@ -440,6 +439,7 @@ class RuntimeAgent:
         self.scheduler = scheduler or None
         self._cr_counter = 0
         self._crs: Dict[int, ChildRank] = {}
+        self._comms: List[Any] = []                  # live HaloComm handles
         self._buffer_table: Dict[int, Any] = {}      # BufferHandle.uid -> array
         self._lock = threading.RLock()
         self.finalized = False
@@ -455,6 +455,20 @@ class RuntimeAgent:
     def detach_agent(self, platform: str) -> Optional[VirtualizationAgent]:
         with self._lock:
             return self.agents.pop(platform, None)
+
+    def comm_split(self, platforms: Optional[Sequence[str]] = None,
+                   name: Optional[str] = None):
+        """MPIX_CommSplit: create a device group (:class:`~repro.core.
+        collective.HaloComm`) over this session's virtualization agents
+        (DESIGN.md §10).  ``platforms`` lists the member substrates in rank
+        order; the default spans every available accelerator substrate.
+        The handle is tracked so :meth:`finalize` invalidates it."""
+        self._check_live()
+        from .collective import comm_split
+        comm = comm_split(self, platforms, name=name)
+        with self._lock:
+            self._comms.append(comm)
+        return comm
 
     def attach_mesh(self, mesh) -> None:
         a = self.agents.get("sharded")
@@ -549,6 +563,10 @@ class RuntimeAgent:
             crs = list(self._crs.values())
         for cr in crs:
             self.free(cr)
+        with self._lock:
+            comms, self._comms = self._comms, []
+        for comm in comms:
+            comm.free()
         for agent in list(self.agents.values()):
             agent.shutdown(cancel_pending=True, wait=True)
         with self._lock:

@@ -1,0 +1,418 @@
+"""C²MPI collective verbs over device groups of virtualization agents
+(DESIGN.md §10).
+
+HALO's C²MPI surface is deliberately MPI-shaped, but point-to-point verbs
+alone cannot express the reduce/broadcast patterns that dominate the
+paper's HPC subroutines.  This module adds the missing layer:
+
+* :class:`HaloComm` — a *device group*: an ordered list of member ranks,
+  each bound to one registered virtualization agent (substrate) of the
+  session.  ``MPIX_CommSplit`` creates one (single-process multi-substrate
+  today: xla/pallas-interpret/jnp agents on one host; the member-to-mesh
+  mapping for scattered shards goes through
+  :mod:`repro.distributed.sharding`).
+* **Collective verbs** — ``bcast`` / ``reduce`` / ``allreduce`` /
+  ``scatter`` / ``gather`` / ``allgather`` plus non-blocking ``i*``
+  variants returning :class:`~repro.core.agents.HaloFuture` s.
+
+Every collective is built from ordinary registry dispatches — ``COPY``
+stages (bcast fan-out, one per member queue), ``CONCAT`` combines
+(gather), and element-wise kernels for the reduce step (``sum`` →
+``EWADD``, ``prod`` → ``EWMM``, or any registered binary alias) — wired
+into an :class:`~repro.core.graph.ExecutionGraph`:
+
+* **eager** (no active capture): the collective records its nodes into a
+  private graph and launches it immediately; blocking verbs wait, ``i*``
+  verbs hand back the node futures.
+* **captured** (inside ``halo_graph()``): the same nodes join the ambient
+  graph as multi-parent DAG nodes; successive collectives on one comm get
+  explicit hazard edges (MPI call-order semantics) via
+  :meth:`ExecutionGraph.add_dependency`.
+
+Because member stages are plain graph nodes, the whole PR-1..4 ladder
+applies to collective compute: reduce combines are placed by the
+cost-model scheduler on the *fastest* member (``CostModelScheduler.
+rank_platforms`` seeds the static fallback), tuned tile configs merge into
+member kernels, and a member whose record fails mid-collective is
+quarantined and its shard re-placed (registry fail-safe last) — the
+collective still completes.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+
+from .agents import HaloFuture, RuntimeAgent, _active_graph
+from .graph import ExecutionGraph, GraphError, GraphNode
+from .registry import PLATFORM_PREFERENCE
+
+__all__ = ["HaloComm", "REDUCE_OPS", "comm_split"]
+
+#: reduce-op name -> registry alias of the binary combine kernel.  Any
+#: registered binary alias may also be passed directly as ``op``.
+REDUCE_OPS: Dict[str, str] = {
+    "sum": "EWADD",
+    "prod": "EWMM",
+    "max": "EWMAX",          # registered by users/tests; not a built-in
+    "min": "EWMIN",
+}
+
+NodeOrValue = Union[GraphNode, Any]
+
+
+def comm_split(session: RuntimeAgent,
+               platforms: Optional[Sequence[str]] = None,
+               name: Optional[str] = None) -> "HaloComm":
+    """Build a :class:`HaloComm` over ``session``'s registered agents.
+
+    ``platforms`` lists the member substrates in rank order (a platform may
+    appear more than once — ranks are roles, agents are resources).  The
+    default takes every *available* accelerator substrate in preference
+    order, falling back to the jnp fail-safe agent alone."""
+    if platforms is None:
+        pref = session._platform_preference() or PLATFORM_PREFERENCE
+        platforms = [p for p in pref
+                     if p != "jnp" and p in session._allowed_platforms()]
+        platforms = platforms or ["jnp"]
+    return HaloComm(session, platforms, name=name)
+
+
+class HaloComm:
+    """A C²MPI device group: ordered member ranks over virtualization agents.
+
+    The comm is a lightweight handle — it owns no buffers and no workers;
+    collectives execute on the member agents' existing queues.  One comm
+    may be used from several host threads (each collective is
+    independently wired), but MPI's call-order guarantee only holds within
+    one thread / one capture region."""
+
+    def __init__(self, session: RuntimeAgent, platforms: Sequence[str],
+                 name: Optional[str] = None):
+        if not platforms:
+            raise ValueError("a device group needs at least one member")
+        unknown = [p for p in platforms if p not in session.agents]
+        if unknown:
+            raise ValueError(
+                f"no virtualization agent registered for platform(s) "
+                f"{unknown}; have {sorted(session.agents)}")
+        unavailable = [p for p in platforms
+                       if not session.agents[p].available()]
+        if unavailable:
+            raise ValueError(
+                f"member platform(s) {unavailable} are registered but not "
+                f"available (e.g. sharded without a mesh)")
+        self.session = session
+        self.platforms: Tuple[str, ...] = tuple(platforms)
+        self.name = name or f"comm({','.join(platforms)})"
+        self.freed = False
+        self._lock = threading.Lock()
+        # per-captured-graph tail nodes for call-order hazard edges; keyed
+        # by the graph object's id, pruned when a different graph shows up
+        # (captures are thread-local and short-lived)
+        self._tails: Dict[int, List[GraphNode]] = {}
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def size(self) -> int:
+        """Number of member ranks."""
+        return len(self.platforms)
+
+    def __len__(self) -> int:
+        return self.size
+
+    def __repr__(self):
+        return f"HaloComm({self.name!r}, platforms={list(self.platforms)})"
+
+    def free(self) -> None:
+        """Release the group handle.  Idempotent; in-flight collectives
+        complete normally (members own the execution resources)."""
+        self.freed = True
+
+    # -- wiring ---------------------------------------------------------------
+    def _check_live(self) -> None:
+        if self.freed:
+            raise RuntimeError(f"{self.name} was freed")
+        self.session._check_live()
+
+    def _check_rank(self, rank: int) -> None:
+        if not 0 <= rank < self.size:
+            raise ValueError(f"rank {rank} out of range for {self.size}-"
+                             f"member group")
+
+    def _member_overrides(self, rank: int) -> Dict[str, Any]:
+        p = self.platforms[rank]
+        return {"allowed_platforms": [p], "platform_preference": [p]}
+
+    def _group_overrides(self, alias: str, args: Sequence[Any]
+                         ) -> Dict[str, Any]:
+        """Overrides for a combine node: any member platform may run it;
+        the preference order is the scheduler's fastest-first member
+        ranking (static member order when nothing is measured yet), so the
+        reduce lands on the fastest member even before per-node placement
+        estimates exist."""
+        plats = list(dict.fromkeys(self.platforms))
+        pref = plats
+        sched = self.session.scheduler
+        if sched is not None:
+            try:
+                cands = self.session.registry.candidates(
+                    alias, *args, allowed_platforms=plats,
+                    platform_preference=plats)
+                ranked = sched.rank_platforms(alias, cands, args)
+            except Exception:        # advisory ranking must never break
+                ranked = []
+            if ranked:
+                pref = ranked + [p for p in plats if p not in ranked]
+        return {"allowed_platforms": plats, "platform_preference": pref}
+
+    def _graph(self) -> Tuple[ExecutionGraph, bool]:
+        """The ambient captured graph (shared) or a fresh private one."""
+        g = _active_graph(self.session)
+        if g is not None:
+            return g, True
+        return ExecutionGraph(self.session), False
+
+    def _seal(self, g: ExecutionGraph, captured: bool,
+              roots: Sequence[GraphNode],
+              tails: Sequence[GraphNode]) -> None:
+        """Finish one collective's wiring: inside a capture, serialize it
+        after the comm's previous collective on the same graph (hazard
+        edges from the previous tails to this one's roots); eager, launch
+        the private graph immediately."""
+        if captured:
+            with self._lock:
+                stale = [k for k in self._tails if k != id(g)]
+                for k in stale:
+                    del self._tails[k]
+                for prev in self._tails.get(id(g), ()):
+                    for root in roots:
+                        g.add_dependency(prev, root)
+                self._tails[id(g)] = list(tails)
+        else:
+            g.launch()
+
+    def _node(self, g: ExecutionGraph, alias: str, args: Sequence[Any],
+              overrides: Dict[str, Any],
+              kwargs: Optional[Dict] = None) -> GraphNode:
+        return g.record_dispatch(alias, tuple(args), dict(kwargs or {}),
+                                 overrides)
+
+    @staticmethod
+    def _concrete(x: NodeOrValue, verb: str) -> Any:
+        """Collectives that must *slice* their payload host-side (scatter)
+        need a concrete array: a still-pending node's value does not exist
+        yet.  Completed futures/nodes unwrap; live ones are an error."""
+        if isinstance(x, HaloFuture):
+            if not x.done():
+                raise GraphError(
+                    f"{verb} needs a concrete payload; inside a graph "
+                    f"capture move the {verb} before the capture region "
+                    f"(bcast/gather/reduce accept node payloads)")
+            return x.result()
+        return x
+
+    def _per_rank(self, values: Sequence[NodeOrValue],
+                  verb: str) -> List[NodeOrValue]:
+        values = list(values)
+        if len(values) != self.size:
+            raise ValueError(
+                f"{verb} expects one value per member rank "
+                f"({self.size}), got {len(values)}")
+        return values
+
+    # -- non-blocking collectives ---------------------------------------------
+    def ibcast(self, x: NodeOrValue, root: int = 0) -> List[GraphNode]:
+        """Fan ``x`` (the root's value — an array or a captured node) out to
+        every member: one ``COPY`` stage per member agent queue.  Returns
+        the per-rank node futures."""
+        self._check_live()
+        self._check_rank(root)
+        g, captured = self._graph()
+        nodes = [self._node(g, "COPY", (x,), self._member_overrides(r))
+                 for r in range(self.size)]
+        self._seal(g, captured, roots=nodes, tails=nodes)
+        return nodes
+
+    def iscatter(self, x: NodeOrValue, root: int = 0, axis: int = 0,
+                 logical: str = "batch") -> List[GraphNode]:
+        """Split ``x`` along ``axis`` into ``size`` equal shards and stage
+        shard *r* onto member *r*'s agent.  With a mesh context active the
+        shards are placed on their mesh coordinates first
+        (:func:`repro.distributed.sharding.member_shard`)."""
+        self._check_live()
+        self._check_rank(root)
+        from ..distributed.sharding import member_shard
+        x = self._concrete(x, "scatter")
+        x = jax.numpy.asarray(x)
+        shards = [member_shard(x, r, self.size, axis=axis, logical=logical)
+                  for r in range(self.size)]
+        g, captured = self._graph()
+        nodes = [self._node(g, "COPY", (shards[r],),
+                            self._member_overrides(r))
+                 for r in range(self.size)]
+        self._seal(g, captured, roots=nodes, tails=nodes)
+        return nodes
+
+    def igather(self, shards: Sequence[NodeOrValue],
+                root: int = 0) -> GraphNode:
+        """Concatenate the per-rank shards (axis 0; scalars stack) at the
+        root member — one multi-parent ``CONCAT`` node pinned to the root's
+        agent.  Returns its future."""
+        self._check_live()
+        self._check_rank(root)
+        shards = self._per_rank(shards, "gather")
+        g, captured = self._graph()
+        node = self._node(g, "CONCAT", shards, self._member_overrides(root))
+        self._seal(g, captured, roots=[node], tails=[node])
+        return node
+
+    def iallgather(self, shards: Sequence[NodeOrValue],
+                   root: int = 0) -> List[GraphNode]:
+        """Gather at ``root`` then broadcast the concatenation back to every
+        member; per-rank node futures for the full array."""
+        self._check_live()
+        self._check_rank(root)
+        shards = self._per_rank(shards, "allgather")
+        g, captured = self._graph()
+        gathered = self._node(g, "CONCAT", shards,
+                              self._member_overrides(root))
+        outs = [self._node(g, "COPY", (gathered,),
+                           self._member_overrides(r))
+                for r in range(self.size)]
+        self._seal(g, captured, roots=[gathered], tails=outs)
+        return outs
+
+    def _combine_alias(self, op: str) -> str:
+        alias = REDUCE_OPS.get(op, op)
+        try:
+            self.session.registry._canonical(alias)
+        except KeyError:
+            raise ValueError(
+                f"reduce op {op!r}: no registered combine kernel "
+                f"{alias!r} (built-ins: {sorted(REDUCE_OPS)}; any "
+                f"registered binary alias is accepted)") from None
+        return alias
+
+    def _reduce_tree(self, g: ExecutionGraph, shards: List[NodeOrValue],
+                     alias: str, created: List[GraphNode]) -> NodeOrValue:
+        """Wire a pairwise combine tree over the shards; combine nodes go
+        in ``created`` (for hazard-edge bookkeeping) and carry group-wide
+        overrides so placement can pick the fastest member per node."""
+        sample = tuple(s for s in shards if not isinstance(s, HaloFuture))[:2]
+        overrides = self._group_overrides(alias, sample)
+        level = shards
+        while len(level) > 1:
+            nxt: List[NodeOrValue] = []
+            for i in range(0, len(level) - 1, 2):
+                node = self._node(g, alias, (level[i], level[i + 1]),
+                                  overrides)
+                created.append(node)
+                nxt.append(node)
+            if len(level) % 2:
+                nxt.append(level[-1])
+            level = nxt
+        return level[0]
+
+    def ireduce(self, shards: Sequence[NodeOrValue], op: str = "sum",
+                root: int = 0) -> GraphNode:
+        """Pairwise-tree reduction of the per-rank shards through the
+        registry's combine kernel for ``op``.  Each combine node may run on
+        *any* member platform — per-node placement picks the fastest
+        (estimates + backlog + transfer penalty), with the scheduler's
+        member ranking as the static fallback — so the reduce lands on the
+        fastest member rather than blindly on the root (DESIGN.md §10).
+        Returns the root node future of the tree."""
+        self._check_live()
+        shards = self._per_rank(shards, "reduce")
+        self._check_rank(root)
+        alias = self._combine_alias(op)
+        g, captured = self._graph()
+        created: List[GraphNode] = []
+        out = self._reduce_tree(g, shards, alias, created)
+        if not isinstance(out, GraphNode):       # size-1 group: stage once
+            out = self._node(g, "COPY", (out,), self._member_overrides(root))
+            created.append(out)
+        self._seal(g, captured, roots=created, tails=[out])
+        return out
+
+    def iallreduce(self, shards: Sequence[NodeOrValue],
+                   op: str = "sum") -> List[GraphNode]:
+        """Reduce then fan the result back out: per-rank node futures that
+        all resolve to the identical reduced value."""
+        self._check_live()
+        shards = self._per_rank(shards, "allreduce")
+        alias = self._combine_alias(op)
+        g, captured = self._graph()
+        created: List[GraphNode] = []
+        reduced = self._reduce_tree(g, shards, alias, created)
+        outs = [self._node(g, "COPY", (reduced,),
+                           self._member_overrides(r))
+                for r in range(self.size)]
+        created.extend(outs)
+        self._seal(g, captured, roots=created, tails=outs)
+        return outs
+
+    def imap(self, alias: str, per_rank_args: Sequence[Sequence[NodeOrValue]],
+             kwargs: Optional[Dict] = None) -> List[GraphNode]:
+        """Data-parallel member compute: dispatch ``alias`` once per rank,
+        pinned to that member's agent, with that rank's argument tuple
+        (arrays and/or node futures).  This is the SPMD body between
+        collectives — e.g. each member's Jacobi sweep over its row shard."""
+        self._check_live()
+        per_rank_args = self._per_rank(per_rank_args, "member dispatch")
+        g, captured = self._graph()
+        nodes = [self._node(g, alias, tuple(args),
+                            self._member_overrides(r), kwargs)
+                 for r, args in enumerate(per_rank_args)]
+        self._seal(g, captured, roots=nodes, tails=nodes)
+        return nodes
+
+    # -- blocking collectives --------------------------------------------------
+    def _wait_many(self, nodes: Sequence[GraphNode]) -> List[Any]:
+        return [jax.block_until_ready(n.result()) for n in nodes]
+
+    def _no_capture(self, verb: str) -> None:
+        if _active_graph(self.session) is not None:
+            raise GraphError(
+                f"blocking {verb} inside a halo_graph capture would "
+                f"deadlock; use the non-blocking i{verb} variant")
+
+    def bcast(self, x: Any, root: int = 0) -> List[Any]:
+        """Blocking :meth:`ibcast`: the per-rank copies, device-ready."""
+        self._no_capture("bcast")
+        return self._wait_many(self.ibcast(x, root))
+
+    def scatter(self, x: Any, root: int = 0, axis: int = 0,
+                logical: str = "batch") -> List[Any]:
+        """Blocking :meth:`iscatter`: the per-rank shards, device-ready."""
+        self._no_capture("scatter")
+        return self._wait_many(self.iscatter(x, root, axis, logical))
+
+    def gather(self, shards: Sequence[Any], root: int = 0) -> Any:
+        """Blocking :meth:`igather`: the concatenated array."""
+        self._no_capture("gather")
+        return jax.block_until_ready(self.igather(shards, root).result())
+
+    def allgather(self, shards: Sequence[Any], root: int = 0) -> List[Any]:
+        """Blocking :meth:`iallgather`: per-rank full arrays."""
+        self._no_capture("allgather")
+        return self._wait_many(self.iallgather(shards, root))
+
+    def reduce(self, shards: Sequence[Any], op: str = "sum",
+               root: int = 0) -> Any:
+        """Blocking :meth:`ireduce`: the reduced value."""
+        self._no_capture("reduce")
+        return jax.block_until_ready(self.ireduce(shards, op, root).result())
+
+    def allreduce(self, shards: Sequence[Any], op: str = "sum") -> List[Any]:
+        """Blocking :meth:`iallreduce`: per-rank reduced values."""
+        self._no_capture("allreduce")
+        return self._wait_many(self.iallreduce(shards, op))
+
+    def map(self, alias: str, per_rank_args: Sequence[Sequence[Any]],
+            kwargs: Optional[Dict] = None) -> List[Any]:
+        """Blocking :meth:`imap`: per-rank member-compute results."""
+        self._no_capture("map")
+        return self._wait_many(self.imap(alias, per_rank_args, kwargs))

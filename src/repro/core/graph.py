@@ -81,6 +81,10 @@ class GraphNode(HaloFuture):
         self.failsafe = failsafe
         self.parents: List["GraphNode"] = []
         self.children: List["GraphNode"] = []
+        #: completed-elsewhere dependencies: futures (or nodes of an earlier,
+        #: already-launched graph) appearing in the payload.  They gate this
+        #: node's readiness via done-callbacks instead of executor edges.
+        self._foreign_deps: List[HaloFuture] = []
         self.platform: Optional[str] = None      # substrate it actually ran on
         self.attempts: List[str] = []            # platforms tried, in order
         self._tried: List[KernelRecord] = []     # records tried (failures)
@@ -93,9 +97,10 @@ class GraphNode(HaloFuture):
                 f"platform={self.platform!r})")
 
 
-def _scan_nodes(obj: Any, found: List[GraphNode]) -> None:
-    """Collect GraphNode references anywhere in a payload structure."""
-    if isinstance(obj, GraphNode):
+def _scan_nodes(obj: Any, found: List[HaloFuture]) -> None:
+    """Collect future references (graph nodes of this or an earlier graph,
+    or plain request handles) anywhere in a payload structure."""
+    if isinstance(obj, HaloFuture):
         found.append(obj)
     elif isinstance(obj, ComputeObject):
         for v in obj.inputs.values():
@@ -109,9 +114,10 @@ def _scan_nodes(obj: Any, found: List[GraphNode]) -> None:
 
 
 def _materialize(obj: Any) -> Any:
-    """Substitute completed parents' results into a captured payload."""
-    if isinstance(obj, GraphNode):
-        return obj.result(timeout=0)             # parents completed by now
+    """Substitute completed parents'/foreign futures' results into a
+    captured payload."""
+    if isinstance(obj, HaloFuture):
+        return obj.result(timeout=0)             # dependencies completed by now
     if isinstance(obj, ComputeObject):
         return dataclasses.replace(
             obj, inputs={k: _materialize(v) for k, v in obj.inputs.items()})
@@ -137,6 +143,7 @@ class ExecutionGraph:
     def __init__(self, session: RuntimeAgent):
         self.session = session
         self.nodes: List[GraphNode] = []
+        self._ids: set = set()                   # id() of this graph's nodes
         self._buffer_writers: Dict[int, GraphNode] = {}
         self._lock = threading.Lock()
         self._launched = False
@@ -174,17 +181,39 @@ class ExecutionGraph:
         self._wire(node)
         return node
 
+    def add_dependency(self, parent: GraphNode, child: GraphNode) -> None:
+        """Explicit hazard edge: ``child`` must not start before ``parent``
+        completes, even with no data flowing between them.  This is how the
+        collective layer serializes successive collectives on one
+        :class:`~repro.core.collective.HaloComm` (MPI semantics: collectives
+        on a communicator execute in call order) — and is available to any
+        host code whose captured calls share an external resource the
+        payload scan cannot see.  Duplicate and self edges are ignored."""
+        if self._launched:
+            raise GraphError("graph already launched; begin a new capture")
+        if parent is child or any(p is parent for p in child.parents):
+            return
+        child.parents.append(parent)
+        parent.children.append(child)
+
     def _wire(self, node: GraphNode) -> None:
         if self._launched:
             raise GraphError("graph already launched; begin a new capture")
-        found: List[GraphNode] = []
+        found: List[HaloFuture] = []
         _scan_nodes(node.payload, found)
         for parent in dict.fromkeys(found):      # dedupe, keep order
             if parent is node:
                 continue
-            node.parents.append(parent)
-            parent.children.append(node)
+            if isinstance(parent, GraphNode) and id(parent) in self._ids:
+                node.parents.append(parent)
+                parent.children.append(node)
+            else:
+                # a future from outside this graph (an earlier launched
+                # graph, an MPIX_ISend request): gate on completion at
+                # launch instead of wiring an executor edge
+                node._foreign_deps.append(parent)
         self.nodes.append(node)
+        self._ids.add(id(node))
 
     # -- handle ----------------------------------------------------------
     @property
@@ -217,11 +246,29 @@ class ExecutionGraph:
                 return self
             self._launched = True
             for n in self.nodes:
-                n._pending_parents = len(n.parents)
+                n._pending_parents = len(n.parents) + len(n._foreign_deps)
         for n in self.nodes:
-            if not n.parents:
+            if not n.parents and not n._foreign_deps:
                 self._submit(n)
+        # foreign futures gate readiness through done-callbacks (fire
+        # immediately for already-completed ones); registered after the
+        # counts above so a racing completion can never double-submit
+        for n in self.nodes:
+            for dep in n._foreign_deps:
+                dep.add_done_callback(
+                    lambda _fut, node=n: self._parent_done(node))
         return self
+
+    def _parent_done(self, node: GraphNode) -> None:
+        """One foreign dependency completed; submit the node when it was
+        the last thing holding it back.  Failed/cancelled dependencies
+        surface through ``_materialize`` in ``_prepare`` (the node fails
+        with :class:`GraphDependencyError`), keeping one error path."""
+        with self._lock:
+            node._pending_parents -= 1
+            ready = node._pending_parents == 0
+        if ready:
+            self._submit(node)
 
     def _submit(self, node: GraphNode) -> None:
         placed = self._prepare(node)

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional, Sequence
+from typing import Callable, Sequence
 
 import jax
 import numpy as np

@@ -323,6 +323,36 @@ class CostModelScheduler:
                 best = (score, i)
         return candidates[best[1]] if best is not None else None
 
+    def rank_platforms(self, alias: str, candidates: Sequence[KernelRecord],
+                       args: Sequence[Any],
+                       backlog: Optional[Dict[str, float]] = None
+                       ) -> List[str]:
+        """Group-aware platform ranking for collective combines (DESIGN.md
+        §10): the member platforms ordered fastest-first by estimated
+        latency (+ optional per-platform backlog), so a device group can
+        seed a reduce node's ``platform_preference`` with the member most
+        likely to finish first.  Candidates without any estimate keep their
+        given (static-preference) order behind every estimated one — the
+        same pessimistic stance :meth:`place` takes.  Quarantined records
+        are skipped entirely."""
+        sig = abstract_signature(args)
+        best: Dict[str, float] = {}        # platform -> cheapest estimate
+        order: List[str] = []              # platforms in candidate order
+        for rec in candidates:
+            if self.is_failed(rec):
+                continue
+            if rec.platform not in order:
+                order.append(rec.platform)
+            est = self.estimate(rec, sig, args)
+            if est is None:
+                continue
+            if backlog:
+                est += backlog.get(rec.platform, 0.0)
+            if est < best.get(rec.platform, float("inf")):
+                best[rec.platform] = est
+        scored = sorted((p for p in order if p in best), key=best.__getitem__)
+        return scored + [p for p in order if p not in best]
+
     # -- persistence ---------------------------------------------------------
     def load(self, path: os.PathLike) -> None:
         """Ingest a persisted table.  Loaded keys are *not* marked warmed:

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig, InputShape
-from ..distributed.sharding import MeshContext, current_context, named_sharding
+from ..distributed.sharding import MeshContext, named_sharding
 
 
 @dataclasses.dataclass

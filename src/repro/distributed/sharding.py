@@ -126,6 +126,39 @@ def named_sharding(shape: Sequence[int], logical: Sequence[Logical],
     return NamedSharding(ctx.mesh, logical_spec(shape, logical, ctx))
 
 
+def partition_slices(length: int, parts: int) -> Tuple[Tuple[int, int], ...]:
+    """Equal ``(start, size)`` row slices of a ``length`` axis over ``parts``
+    group members (C²MPI scatter semantics, DESIGN.md §10).  Like
+    ``MPI_Scatter``, the axis must divide evenly — uneven scatter is the
+    v-variant verb this reproduction does not implement."""
+    if parts <= 0:
+        raise ValueError(f"parts must be positive, got {parts}")
+    if length % parts != 0:
+        raise ValueError(
+            f"scatter axis of size {length} does not divide evenly over "
+            f"{parts} group members (MPIX_Scatterv is not implemented)")
+    size = length // parts
+    return tuple((r * size, size) for r in range(parts))
+
+
+def member_shard(x: jax.Array, rank: int, parts: int, axis: int = 0,
+                 logical: Logical = "batch") -> jax.Array:
+    """Slice member ``rank``'s shard of ``x`` along ``axis`` and, when a
+    mesh context is active, constrain it to the logical axis the device
+    group maps onto (default ``"batch"`` — data parallelism).  Without a
+    mesh this is a plain slice, so the same collective host code runs on
+    the single-device CI box and on a real mesh unchanged."""
+    start, size = partition_slices(x.shape[axis], parts)[rank]
+    shard = jax.lax.slice_in_dim(x, start, start + size, axis=axis)
+    ctx = current_context()
+    if ctx.mesh is None:
+        return shard
+    spec: list = [None] * shard.ndim
+    spec[axis] = logical
+    return jax.device_put(
+        shard, NamedSharding(ctx.mesh, logical_spec(shard.shape, spec, ctx)))
+
+
 @dataclasses.dataclass(frozen=True)
 class ParamSpec:
     """Planning record for one parameter tensor."""

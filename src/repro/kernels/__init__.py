@@ -35,6 +35,13 @@ def _pallas_ok(*args, **kw) -> bool:
     return _floaty(*args) and small_enough_off_tpu(*args)
 
 
+def _ewise_ok(*args, **kw) -> bool:
+    """EW* pallas feasibility: tiled VPU kernels need at least one dim —
+    0-d operands (e.g. collective scalar-residual reduces) go to xla/jnp."""
+    return (all(getattr(a, "ndim", 0) >= 1 for a in args)
+            and _pallas_ok(*args, **kw))
+
+
 def _rec(alias, fn, platform, prio, *, failsafe=False, supports=None,
          cost=None, space=None, doc=""):
     hw = _TPU_ATTRS if platform == "pallas" else _ANY_ATTRS
@@ -61,7 +68,8 @@ def register_all(registry=None) -> None:
     from .matmul import mmm, mmm_ref
     from .matmul.ref import mmm_xla
     from .matmul.ops import mmm_space
-    from .ewise import ewmd, ewmd_ref, ewmm, ewmm_ref
+    from .ewise import (ewadd, ewadd_ref, ewmd, ewmd_ref, ewmm, ewmm_ref,
+                        ewsub, ewsub_ref)
     from .ewise.ops import ewise_space
     from .spmm import smmm, smmm_ref
     from .spmm.ops import smmm_space
@@ -96,6 +104,8 @@ def register_all(registry=None) -> None:
         ("MMM", mmm_ref, mmm_xla, mmm, mmm_cost, mmm_space),
         ("EWMM", ewmm_ref, ewmm_ref, ewmm, None, ewise_space),
         ("EWMD", ewmd_ref, ewmd_ref, ewmd, None, ewise_space),
+        ("EWADD", ewadd_ref, ewadd_ref, ewadd, None, ewise_space),
+        ("EWSUB", ewsub_ref, ewsub_ref, ewsub, None, ewise_space),
         ("MVM", mvm_ref, mvm_ref, mvm, None, mvm_space),
         ("VDP", vdp_ref, vdp_ref, vdp, None, None),
         ("JS", jacobi_step_ref, jacobi_step_ref, jacobi_step, None,
@@ -110,7 +120,9 @@ def register_all(registry=None) -> None:
         registry.register(_rec(alias, xla_fn, "xla", 10, cost=cost,
                                space=xla_spaces.get(alias)))
         registry.register(_rec(alias, pallas_fn, "pallas", 20,
-                               supports=_pallas_ok, cost=cost, space=space))
+                               supports=_ewise_ok if alias.startswith("EW")
+                               else _pallas_ok,
+                               cost=cost, space=space))
 
     # SMMM: the xla variant is a dense-gather einsum over the blocked-ELL
     # parts; it doubles as the jnp fail-safe (the ref.py oracle reconstructs
@@ -144,6 +156,17 @@ def register_all(registry=None) -> None:
 
     registry.register(_rec("GQA_DECODE", gqa_decode, "jnp", 0, failsafe=True))
     registry.register(_rec("GQA_DECODE", gqa_decode, "xla", 10))
+
+    # Collective data movement (DESIGN.md §10): staging records exist on
+    # every substrate so a device group can pin a bcast fan-out COPY (or a
+    # gather CONCAT) to each member agent's worker queue.
+    from .staging import concat_blocks, concat_ref, copy_ref, copy_stage
+    registry.register(_rec("COPY", copy_ref, "jnp", 0, failsafe=True))
+    registry.register(_rec("COPY", copy_stage, "xla", 10))
+    registry.register(_rec("COPY", copy_stage, "pallas", 20))
+    registry.register(_rec("CONCAT", concat_ref, "jnp", 0, failsafe=True))
+    registry.register(_rec("CONCAT", concat_blocks, "xla", 10))
+    registry.register(_rec("CONCAT", concat_blocks, "pallas", 20))
 
     if registry is GLOBAL_REGISTRY:
         _REGISTERED = True

@@ -6,7 +6,6 @@ VMEM per core).  On non-TPU backends ``pallas_call`` runs with
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence, Tuple
 
 import jax

@@ -1,2 +1,2 @@
-from .ops import ewmd, ewmm
-from .ref import ewmd_ref, ewmm_ref
+from .ops import ewadd, ewmd, ewmm, ewsub
+from .ref import ewadd_ref, ewmd_ref, ewmm_ref, ewsub_ref

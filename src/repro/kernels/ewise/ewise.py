@@ -9,7 +9,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..common import compiler_params
@@ -17,6 +16,8 @@ from ..common import compiler_params
 _OPS = {
     "mul": lambda a, b: a * b,
     "div": lambda a, b: a / b,
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
 }
 
 

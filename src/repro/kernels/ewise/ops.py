@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from ..common import (block_choices, clamp_block, interpret_default, pad_dim,
                       pick_block)
@@ -43,6 +42,24 @@ def ewmd(a, b, *, bm: int | None = None, bn: int | None = None,
 
     ``bm``/``bn`` override the default VPU tile sizes (autotuner axis)."""
     return _ewise_impl(a, b, "div", bm, bn,
+                       interpret_default() if interpret is None else interpret)
+
+
+def ewadd(a, b, *, bm: int | None = None, bn: int | None = None,
+          interpret: bool | None = None):
+    """Element-wise matrix addition (the collective reduce combine op).
+
+    ``bm``/``bn`` override the default VPU tile sizes (autotuner axis)."""
+    return _ewise_impl(a, b, "add", bm, bn,
+                       interpret_default() if interpret is None else interpret)
+
+
+def ewsub(a, b, *, bm: int | None = None, bn: int | None = None,
+          interpret: bool | None = None):
+    """Element-wise matrix subtraction.
+
+    ``bm``/``bn`` override the default VPU tile sizes (autotuner axis)."""
+    return _ewise_impl(a, b, "sub", bm, bn,
                        interpret_default() if interpret is None else interpret)
 
 

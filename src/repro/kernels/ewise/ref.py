@@ -1,4 +1,5 @@
-"""Pure-jnp oracles for EWMM / EWMD (element-wise matrix multiply/divide)."""
+"""Pure-jnp oracles for the element-wise binary aliases (EWMM / EWMD /
+EWADD / EWSUB)."""
 
 
 def ewmm_ref(a, b):
@@ -7,3 +8,11 @@ def ewmm_ref(a, b):
 
 def ewmd_ref(a, b):
     return a / b
+
+
+def ewadd_ref(a, b):
+    return a + b
+
+
+def ewsub_ref(a, b):
+    return a - b

@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from ..common import (block_choices, clamp_block, interpret_default, pad_dim,
                       pick_block)

@@ -1,0 +1,44 @@
+"""Data-movement aliases for the collective layer (DESIGN.md §10).
+
+Collectives are orchestration, not math: a broadcast stages the root's
+buffer onto every member agent's queue, a gather concatenates the member
+shards at the root.  Routing that movement through ordinary registry
+aliases (instead of private executor hooks) keeps the whole collective
+graph-capturable, schedulable, and fail-safe — the same machinery that
+re-places a failed compute kernel re-places a failed stage.
+
+* ``COPY``   — identity staging: materializes a value on the member agent
+  that executes it (the bcast fan-out unit).
+* ``CONCAT`` — variadic shard concatenation along axis 0 (the gather
+  combine; scalars stack into a vector, one element per rank).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def copy_ref(x):
+    """Identity staging oracle (COPY fail-safe)."""
+    return jnp.asarray(x)
+
+
+@jax.jit
+def copy_stage(x):
+    """Identity staging, jit-compiled: the compiled no-op pins the value to
+    the executing agent's stream without a host round trip."""
+    return jnp.asarray(x)
+
+
+def concat_ref(*parts):
+    """Gather oracle: concatenate rank shards along axis 0 (CONCAT
+    fail-safe).  0-d shards stack into a length-``size`` vector."""
+    if getattr(parts[0], "ndim", 0) == 0:
+        return jnp.stack(parts)
+    return jnp.concatenate(parts, axis=0)
+
+
+@jax.jit
+def concat_blocks(*parts):
+    """Jit-compiled gather combine (one compile per member count/shape)."""
+    return concat_ref(*parts)

@@ -40,10 +40,9 @@ from ..configs import ARCH_IDS, get_config
 from ..configs.base import SHAPES, ArchConfig, InputShape
 from ..configs.shapes import shape_applicable
 from ..data.pipeline import batch_specs
-from ..distributed.sharding import (MeshContext, ParamSpec, ShardingRules,
-                                    current_context, mesh_context,
+from ..distributed.sharding import (MeshContext, ParamSpec, mesh_context,
                                     named_sharding, sp_rules)
-from ..models.transformer import Model, build_model, cache_specs, param_specs
+from ..models.transformer import build_model, cache_specs, param_specs
 from ..optim.adamw import AdamWState
 from ..train.trainer import TrainHyper, TrainState, make_train_step
 from .mesh import make_production_mesh

@@ -31,3 +31,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     return make_mesh(shape, axes)
+
+
+def make_group_mesh(members: int, axis: str = "data"):
+    """1-D mesh for a C²MPI device group (DESIGN.md §10): ``members`` ranks
+    along one named axis, so ``distributed.sharding.member_shard`` can map
+    scattered shards onto mesh coordinates.  Requires at least ``members``
+    visible devices; on the single-device CI box use ``members=1`` (the
+    group's agents still span substrates — the mesh only places shards)."""
+    if members <= 0:
+        raise ValueError(f"members must be positive, got {members}")
+    if members > len(jax.devices()):
+        raise ValueError(
+            f"group mesh of {members} members exceeds the {len(jax.devices())}"
+            f" visible device(s); scatter shards stay unmapped without it")
+    return make_mesh((members,), (axis,))

@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config
-from ..configs.base import SHAPES
 from ..data.pipeline import SyntheticLM
 from ..distributed.sharding import mesh_context
 from ..models import build_model

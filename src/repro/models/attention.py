@@ -7,7 +7,6 @@ codegen already optimal — see kernels registry notes).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional, Tuple
 
 import jax

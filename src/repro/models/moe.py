@@ -24,7 +24,7 @@ tensor-parallel dense FFN.  Router aux loss = Switch-style load-balancing.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,17 +17,15 @@ based and degrades gracefully to single-device.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig, AttnConfig, BlockSpec, Stage
-from ..distributed.sharding import (ParamSpec, current_context, named_sharding,
-                                    shard)
+from ..distributed.sharding import ParamSpec, current_context, shard
 from .attention import attn_param_specs, gqa_forward, mla_forward
-from .layers import (dense, embed_tokens, ffn, logits_from_hidden, rms_norm,
+from .layers import (embed_tokens, ffn, logits_from_hidden, rms_norm,
                      softmax_xent)
 from .moe import moe_layer, moe_param_specs
 from .ssm import mamba_cache_specs, mamba_forward, mamba_param_specs

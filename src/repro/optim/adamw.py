@@ -5,7 +5,6 @@ optimizer state — ZeRO semantics come for free from the SPMD partitioner).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple, Optional
 
 import jax

@@ -8,7 +8,7 @@ uniform across GQA/SWA-ring, MLA-latent and Mamba conv/SSM state leaves.
 """
 from __future__ import annotations
 
-from typing import Any, List
+from typing import Any
 
 import jax
 import jax.numpy as jnp

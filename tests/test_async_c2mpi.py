@@ -48,6 +48,10 @@ def _alias_args(rng):
         "MMM": (a, b),
         "EWMM": (a, b),
         "EWMD": (a, b),
+        "EWADD": (a, b),
+        "EWSUB": (a, b),
+        "COPY": (a,),
+        "CONCAT": (a, b),
         "MVM": (a, x),
         "VDP": (x, x),
         "JS": (a + n * jnp.eye(n), jnp.zeros(n), x),

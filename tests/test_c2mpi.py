@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (GLOBAL_REGISTRY, KernelAttributes, KernelRecord,
-                        KernelRegistry, Manifest, RuntimeAgent, SelectionError,
-                        VirtualizationAgent, default_manifest)
+from repro.core import (KernelAttributes, KernelRecord, KernelRegistry,
+                        Manifest, RuntimeAgent, VirtualizationAgent,
+                        default_manifest)
 from repro.core.compute_object import (BufferHandle, ComputeObject,
                                        as_compute_object)
 from repro.kernels import register_all

@@ -1,12 +1,10 @@
 """Checkpointing: atomicity, CRC validation, GC, elastic reshard; FT hooks."""
-import json
 import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault_tolerance import HeartbeatJournal, StragglerPolicy

@@ -1,0 +1,374 @@
+"""Collective verbs over device groups (DESIGN.md §10): verb semantics,
+graph-captured vs eager parity, call-order hazard edges, member-failure
+quarantine + re-placement mid-collective, and the group-aware scheduler
+ranking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CostModelScheduler, GraphError, KernelRecord,
+                        KernelRegistry, RuntimeAgent, default_manifest,
+                        halo_graph)
+from repro.distributed.sharding import partition_slices
+from repro.kernels import register_all
+
+
+@pytest.fixture()
+def agent():
+    registry = KernelRegistry()
+    register_all(registry)
+    a = RuntimeAgent(registry=registry, manifest=default_manifest())
+    yield a
+    a.finalize()
+
+
+@pytest.fixture()
+def comm(agent):
+    return agent.comm_split(["xla", "jnp"])
+
+
+def _x(shape=(4, 6), seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# -- verb semantics -----------------------------------------------------------
+def test_bcast_copies_to_every_member(comm):
+    x = _x()
+    copies = comm.bcast(x)
+    assert len(copies) == comm.size
+    for c in copies:
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(x))
+
+
+def test_scatter_gather_roundtrip(comm):
+    x = _x((8, 3))
+    shards = comm.scatter(x)
+    assert [s.shape for s in shards] == [(4, 3), (4, 3)]
+    np.testing.assert_array_equal(np.asarray(shards[1]), np.asarray(x[4:]))
+    np.testing.assert_array_equal(np.asarray(comm.gather(shards)),
+                                  np.asarray(x))
+
+
+def test_scatter_rejects_indivisible_axis(comm):
+    with pytest.raises(ValueError, match="does not divide evenly"):
+        comm.scatter(_x((5, 2)))
+
+
+def test_partition_slices():
+    assert partition_slices(8, 2) == ((0, 4), (4, 4))
+    assert partition_slices(6, 3) == ((0, 2), (2, 2), (4, 2))
+    with pytest.raises(ValueError):
+        partition_slices(7, 2)
+    with pytest.raises(ValueError):
+        partition_slices(4, 0)
+
+
+def test_reduce_sum_and_prod(comm):
+    x = _x((4, 6))
+    shards = comm.scatter(x)
+    np.testing.assert_array_equal(
+        np.asarray(comm.reduce(shards, op="sum")),
+        np.asarray(shards[0] + shards[1]))
+    np.testing.assert_allclose(
+        np.asarray(comm.reduce(shards, op="prod")),
+        np.asarray(shards[0] * shards[1]), rtol=1e-6)
+
+
+def test_reduce_scalars_vdp_residual_pattern(comm):
+    parts = [jnp.float32(1.25), jnp.float32(2.5)]
+    assert float(comm.reduce(parts, op="sum")) == 3.75
+    # gather of scalars stacks one element per rank
+    np.testing.assert_array_equal(np.asarray(comm.gather(parts)),
+                                  np.asarray([1.25, 2.5], np.float32))
+
+
+def test_allreduce_every_member_gets_identical_value(comm):
+    shards = comm.scatter(_x((6, 2)))
+    outs = comm.allreduce(shards, op="sum")
+    assert len(outs) == comm.size
+    ref = np.asarray(shards[0] + shards[1])
+    for o in outs:
+        np.testing.assert_array_equal(np.asarray(o), ref)
+
+
+def test_allgather(comm):
+    x = _x((8,))
+    shards = comm.scatter(x)
+    for full in comm.allgather(shards):
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(x))
+
+
+def test_reduce_unknown_op_raises(comm):
+    with pytest.raises(ValueError, match="no registered combine kernel"):
+        comm.reduce([_x(), _x()], op="median")
+
+
+def test_custom_binary_alias_as_reduce_op(agent):
+    agent.registry.register(KernelRecord(
+        alias="EWMAX", fn=jnp.maximum, platform="jnp", is_failsafe=True))
+    comm = agent.comm_split(["xla", "jnp"])
+    a, b = _x(seed=1), _x(seed=2)
+    np.testing.assert_array_equal(np.asarray(comm.reduce([a, b], op="max")),
+                                  np.maximum(np.asarray(a), np.asarray(b)))
+
+
+def test_per_rank_length_validation(comm):
+    with pytest.raises(ValueError, match="one value per member rank"):
+        comm.reduce([_x()], op="sum")
+    with pytest.raises(ValueError, match="rank 3 out of range"):
+        comm.bcast(_x(), root=3)
+
+
+def test_comm_split_validation(agent):
+    with pytest.raises(ValueError, match="no virtualization agent"):
+        agent.comm_split(["gpu-of-theseus"])
+    with pytest.raises(ValueError, match="at least one member"):
+        agent.comm_split([])
+    # default group spans available non-failsafe substrates
+    comm = agent.comm_split()
+    assert comm.size >= 2 and "jnp" not in comm.platforms
+
+
+def test_freed_comm_and_finalize_invalidation(agent):
+    comm = agent.comm_split(["xla"])
+    comm.free()
+    with pytest.raises(RuntimeError, match="was freed"):
+        comm.bcast(_x())
+    comm2 = agent.comm_split(["xla"])
+    agent.finalize()
+    assert comm2.freed
+
+
+# -- member placement ---------------------------------------------------------
+def test_member_stages_pin_to_member_agents(comm):
+    """Each bcast COPY stage runs on its member's agent (fan-out on the
+    member worker queues, not wherever preference points)."""
+    submitted = []
+    for platform, va in comm.session.agents.items():
+        orig = va.submit
+
+        def spy(fn, future=None, after=None, _p=platform, _o=orig):
+            submitted.append(_p)
+            return _o(fn, future=future, after=after)
+
+        va.submit = spy
+    nodes = comm.ibcast(_x())
+    [n.result(timeout=30) for n in nodes]
+    assert [n.platform for n in nodes] == ["xla", "jnp"]
+    assert {"xla", "jnp"} <= set(submitted)
+
+
+def test_map_member_compute(comm):
+    a0, a1 = _x(seed=1), _x(seed=2)
+    outs = comm.map("EWMM", [(a0, a0), (a1, a1)])
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(a0 * a0),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(outs[1]), np.asarray(a1 * a1),
+                               rtol=1e-6)
+
+
+def test_eager_future_chaining_across_collectives(comm):
+    """i-verb futures from one (already launched) collective feed the next
+    collective's payloads: cross-graph dependencies gate via callbacks."""
+    shards = comm.scatter(_x((6, 4)))
+    doubled = comm.imap("EWADD", list(zip(shards, shards)))
+    out = comm.reduce(doubled, op="sum")
+    ref = 2 * (np.asarray(shards[0]) + np.asarray(shards[1]))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-6)
+
+
+# -- graph capture ------------------------------------------------------------
+def test_captured_bcast_reduce_diamond_matches_eager(comm):
+    """bcast → member compute → reduce as ONE captured graph: multi-parent
+    reduce nodes, parity with the eager run, per-node placements set."""
+    x = _x((4, 6))
+    copies = comm.bcast(x)
+    sq = comm.map("EWMM", [(c, c) for c in copies])
+    ref = np.asarray(comm.reduce(sq, op="sum"))
+
+    with halo_graph(session=comm.session) as g:
+        ncopies = comm.ibcast(x)
+        nsq = comm.imap("EWMM", [(c, c) for c in ncopies])
+        nred = comm.ireduce(nsq, op="sum")
+    # diamond shape: the reduce combine has one parent per member branch
+    assert [p.alias for p in nred.parents] == ["EWMM", "EWMM"]
+    assert len(g.nodes) == 5
+    out = np.asarray(nred.result(timeout=60))
+    np.testing.assert_array_equal(out, ref)
+    assert all(p is not None for p in g.placements().values())
+
+
+def test_capture_order_hazard_edges_between_collectives(comm):
+    """Two collectives on one comm in one capture serialize in call order
+    even with no data dependency (MPI call-order semantics)."""
+    with halo_graph(session=comm.session, launch=False) as g:
+        first = comm.ibcast(_x(seed=1))
+        second = comm.ibcast(_x(seed=2))
+    for node in second:
+        assert any(p in first for p in node.parents)
+    g.launch()
+    g.wait(timeout=60)
+
+
+def test_blocking_collective_inside_capture_raises(comm):
+    with halo_graph(session=comm.session, launch=False):
+        with pytest.raises(GraphError, match="would deadlock"):
+            comm.bcast(_x())
+
+
+def test_scatter_of_completed_node_unwraps(comm):
+    """A finished collective's node is a concrete value: scatter chained
+    off it must unwrap, not demand a pre-capture payload."""
+    x = _x((8,))
+    copies = comm.ibcast(x)
+    [c.result(timeout=30) for c in copies]
+    shards = comm.scatter(copies[0])
+    np.testing.assert_array_equal(np.asarray(shards[1]), np.asarray(x[4:]))
+
+
+def test_scatter_of_live_node_inside_capture_raises(comm):
+    with halo_graph(session=comm.session, launch=False):
+        nodes = comm.ibcast(_x((4, 4)))
+        with pytest.raises(GraphError, match="concrete payload"):
+            comm.iscatter(nodes[0])
+
+
+def test_captured_multi_iteration_allreduce_jacobi_parity(comm):
+    """Two captured allgather→MVM→update→allreduce iterations (the
+    collective_jacobi example structure) match the eager run bit-for-bit:
+    orchestration must not change the numbers."""
+    x = _x((8,))
+    A = [_x((4, 8), seed=11), _x((4, 8), seed=12)]   # member row blocks
+
+    shards0 = comm.scatter(x)
+
+    def one_pass(gathered, mapped, reduced):
+        cur, res = list(shards0), None
+        for _ in range(2):
+            full = gathered(cur)
+            p = mapped("MVM", list(zip(A, full)))
+            cur = mapped("EWADD", list(zip(p, cur)))
+            s = mapped("VDP", list(zip(cur, cur)))
+            res = reduced(s)
+        return cur, res
+
+    cur, res = one_pass(comm.allgather, comm.map,
+                        lambda s: comm.allreduce(s, op="sum"))
+    ref_x = np.asarray(comm.gather(cur))
+    ref_res = float(res[0])
+
+    with halo_graph(session=comm.session) as g:
+        cur, res = one_pass(comm.iallgather, comm.imap,
+                            lambda s: comm.iallreduce(s, op="sum"))
+        out = comm.igather(cur)
+    np.testing.assert_array_equal(np.asarray(out.result(timeout=60)), ref_x)
+    assert float(res[0].result(timeout=60)) == ref_res
+    assert all(p is not None for p in g.placements().values())
+
+
+# -- failure paths ------------------------------------------------------------
+class _Boom(RuntimeError):
+    pass
+
+
+def _faulty_registry():
+    """EWADD with a faulty xla record and a correct jnp fail-safe, plus a
+    per-member PART compute alias (faulty on xla too)."""
+    reg = KernelRegistry()
+    register_all(reg)
+
+    def ewadd_boom(a, b):
+        raise _Boom("xla combine died")
+
+    def part_boom(a):
+        raise _Boom("xla member compute died")
+
+    reg.deregister("EWADD", "xla")
+    reg.deregister("EWADD", "pallas")
+    reg.register(KernelRecord(alias="EWADD", fn=ewadd_boom, platform="xla",
+                              priority=50))
+    reg.register(KernelRecord(alias="PART", fn=part_boom, platform="xla",
+                              priority=50))
+    reg.register(KernelRecord(alias="PART", fn=lambda a: a * 3.0,
+                              platform="jnp", is_failsafe=True))
+    return reg
+
+
+def test_member_quarantine_mid_allreduce_bit_identical():
+    """A member whose combine record raises mid-allreduce is quarantined
+    and the combine re-places onto the fail-safe record; the collective
+    completes and the result is bit-identical to the serial sum."""
+    reg = _faulty_registry()
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest())
+    try:
+        comm = agent.comm_split(["xla", "jnp"])
+        a, b = _x(seed=3), _x(seed=4)
+        outs = comm.allreduce([a, b], op="sum")
+        serial = np.asarray(a) + np.asarray(b)           # ewadd_ref math
+        for o in outs:
+            np.testing.assert_array_equal(np.asarray(o), serial)
+        bad = next(r for r in reg.records("EWADD") if r.platform == "xla")
+        assert agent.scheduler.is_failed(bad)
+        # the quarantined record is skipped on the next collective: no
+        # further _Boom, same result
+        outs2 = comm.allreduce([a, b], op="sum")
+        np.testing.assert_array_equal(np.asarray(outs2[0]), serial)
+    finally:
+        agent.finalize()
+
+
+def test_member_compute_failure_replaces_shard():
+    """A faulty member-compute record re-places that member's shard onto
+    the fail-safe; the downstream reduce still sees every shard."""
+    reg = _faulty_registry()
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest())
+    try:
+        comm = agent.comm_split(["xla", "jnp"])
+        a, b = _x(seed=5), _x(seed=6)
+        parts = comm.imap("PART", [(a,), (b,)])
+        out = comm.reduce(parts, op="sum")
+        np.testing.assert_array_equal(np.asarray(out),
+                                      3.0 * np.asarray(a) + 3.0 * np.asarray(b))
+        assert parts[0].attempts[0] == "xla"             # tried the member…
+        assert parts[0].platform == "jnp"                # …landed on failsafe
+    finally:
+        agent.finalize()
+
+
+def test_captured_collective_with_failing_member_completes():
+    """Same quarantine path inside a graph capture."""
+    reg = _faulty_registry()
+    agent = RuntimeAgent(registry=reg, manifest=default_manifest())
+    try:
+        comm = agent.comm_split(["xla", "jnp"])
+        a, b = _x(seed=7), _x(seed=8)
+        with halo_graph(session=agent):
+            parts = comm.imap("PART", [(a,), (b,)])
+            red = comm.ireduce(parts, op="sum")
+        np.testing.assert_array_equal(
+            np.asarray(red.result(timeout=60)),
+            3.0 * np.asarray(a) + 3.0 * np.asarray(b))
+    finally:
+        agent.finalize()
+
+
+# -- group-aware scheduler ranking -------------------------------------------
+def test_rank_platforms_orders_members_by_measured_latency():
+    sched = CostModelScheduler(explore_every=0, tuning_db=False)
+    fast = KernelRecord(alias="K", fn=lambda a: a, platform="jnp")
+    slow = KernelRecord(alias="K", fn=lambda a: a, platform="xla")
+    args = (jnp.ones((4, 4)),)
+    from repro.core.scheduler import abstract_signature
+    sig = abstract_signature(args)
+    for rec, secs in [(fast, 1e-5), (slow, 1e-2)]:
+        sched.observe(rec, sig, secs)            # warm-up discard
+        sched.observe(rec, sig, secs)
+    assert sched.rank_platforms("K", [slow, fast], args) == ["jnp", "xla"]
+    # unmeasured members rank behind measured ones, keeping given order
+    mystery = KernelRecord(alias="K", fn=lambda a: a, platform="pallas")
+    assert sched.rank_platforms("K", [mystery, slow, fast], args) == \
+        ["jnp", "xla", "pallas"]
+    # quarantined members drop out entirely
+    sched.mark_failed(fast)
+    assert sched.rank_platforms("K", [slow, fast], args) == ["xla"]

@@ -12,6 +12,7 @@ import sys
 
 MODULES = [
     "repro.core.c2mpi",
+    "repro.core.collective",
     "repro.core.graph",
     "repro.core.registry",
     "repro.core.scheduler",

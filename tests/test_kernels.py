@@ -8,8 +8,7 @@ from repro.kernels.conv1d import conv1d, conv1d_ref
 from repro.kernels.ewise import ewmd, ewmd_ref, ewmm, ewmm_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.flash_attention.xla import mea_attention
-from repro.kernels.jacobi import (jacobi_solve, jacobi_solve_ref, jacobi_step,
-                                  jacobi_step_ref)
+from repro.kernels.jacobi import jacobi_solve, jacobi_step, jacobi_step_ref
 from repro.kernels.matmul import mmm, mmm_ref
 from repro.kernels.matmul.ref import mmm_xla
 from repro.kernels.moe_ffn import grouped_ffn, grouped_ffn_ref

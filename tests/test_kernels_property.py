@@ -173,6 +173,15 @@ CONFORMANCE_CASES = {
              lambda d: (_u(2, (33, 65), d), _u(3, (33, 65), d))],
     "EWMD": [lambda d: (_u(0, (8, 16), d), _u(1, (8, 16), d, 0.5, 3.0)),
              lambda d: (_u(2, (33, 65), d), _u(3, (33, 65), d, 0.5, 3.0))],
+    "EWADD": [lambda d: (_u(0, (8, 16), d), _u(1, (8, 16), d)),
+              lambda d: (_u(2, (33, 65), d), _u(3, (33, 65), d))],
+    "EWSUB": [lambda d: (_u(0, (8, 16), d), _u(1, (8, 16), d)),
+              lambda d: (_u(2, (33, 65), d), _u(3, (33, 65), d))],
+    # collective staging aliases (DESIGN.md §10)
+    "COPY": [lambda d: (_u(0, (8, 16), d),),
+             lambda d: (_u(1, (65,), d),)],
+    "CONCAT": [lambda d: (_u(0, (4, 16), d), _u(1, (8, 16), d)),
+               lambda d: (_u(2, (33,), d), _u(3, (12,), d))],
     "MVM": [lambda d: (_u(0, (16, 24), d), _u(1, (24,), d)),
             lambda d: (_u(2, (40, 56), d), _u(3, (56,), d))],
     "VDP": [lambda d: (_u(0, (64,), d), _u(1, (64,), d)),

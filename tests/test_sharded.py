@@ -5,7 +5,6 @@ first jax initialization (and only for these tests)."""
 import subprocess
 import sys
 import textwrap
-from pathlib import Path
 
 import pytest
 

@@ -239,7 +239,6 @@ def test_stale_infeasible_entry_falls_through():
 def test_dispatch_applies_tuned_config_via_spy():
     """Acceptance: a seeded TuningDB entry changes the config halo_dispatch
     uses — asserted via spy — with zero host-program changes."""
-    import repro.core.c2mpi as c2mpi
 
     seen = []
     reg = KernelRegistry()
