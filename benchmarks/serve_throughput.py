@@ -8,7 +8,11 @@ p50/p95 request latency per engine, prints the harness CSV, and writes
 ``BENCH_serve.json`` at the repo root so the serving perf trajectory is
 recorded (DESIGN.md §6).
 
-Run:  PYTHONPATH=src python -m benchmarks.serve_throughput
+Run:  PYTHONPATH=src python -m benchmarks.serve_throughput [--seed N]
+
+``--seed`` re-rolls the workload (prompts, decode budgets, arrival gaps)
+for noise studies; the default (0) is the fixed workload the committed
+baseline ratios were measured with.
 """
 from __future__ import annotations
 
@@ -69,7 +73,7 @@ def _drive(front, prompts, max_new, gaps):
             "p95_ms": round(1e3 * percentile_nearest(lat, .95), 2)}
 
 
-def main() -> None:
+def main(seed: int = 0) -> None:
     from repro.configs import get_config
     from repro.models import build_model
     from repro.serve.engine import (RequestQueue, ServeEngine, SlotEngine,
@@ -78,7 +82,7 @@ def main() -> None:
     cfg = get_config(ARCH).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    prompts, max_new, gaps = _workload(cfg.vocab_size)
+    prompts, max_new, gaps = _workload(cfg.vocab_size, seed=seed)
 
     def best_of(front, after_warmup=None, passes: int = 3):
         """Warmup pass (compiles), then best-throughput of ``passes`` timed
@@ -120,7 +124,7 @@ def main() -> None:
     out = {
         "workload": {"arch": ARCH, "requests": N_REQ, "slots": SLOTS,
                      "prompt_len": PROMPT_LEN, "max_new": list(MAX_NEW),
-                     "poisson_rate_hz": RATE_HZ},
+                     "poisson_rate_hz": RATE_HZ, "seed": seed},
         "legacy_queue": legacy,
         "slot_engine": slot,
         "slot_vs_legacy_tok_per_s": round(
@@ -135,4 +139,11 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="serving throughput: legacy queue vs slot engine")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload RNG seed (default 0 — the fixed workload "
+                         "the committed baseline ratios were measured with)")
+    main(**vars(ap.parse_args()))

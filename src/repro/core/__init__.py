@@ -23,9 +23,10 @@ from .manifest import FuncEntry, HostEntry, Manifest, default_manifest
 from .scheduler import CostModelScheduler, abstract_signature
 from .tuning import (TuneEntry, TuneResult, TuningDB, autotune,
                      config_feasible, shape_bucket, tuning_key)
-from .agents import (ChildRank, HaloCancelledError, HaloFuture, JnpAgent,
-                     PallasAgent, RuntimeAgent, ShardedAgent,
-                     VirtualizationAgent, XlaAgent)
+from .agents import (AgentDeadError, AgentState, ChildRank,
+                     HaloCancelledError, HaloFuture, HealthConfig,
+                     HealthMonitor, JnpAgent, PallasAgent, RuntimeAgent,
+                     ShardedAgent, VirtualizationAgent, XlaAgent)
 from .c2mpi import (MPIX_Allgather, MPIX_Allreduce, MPIX_Bcast, MPIX_Claim,
                     MPIX_CommFree, MPIX_CommSplit, MPIX_CreateBuffer,
                     MPIX_Finalize, MPIX_Free, MPIX_Gather, MPIX_GraphBegin,
@@ -49,7 +50,8 @@ __all__ = [
     "CostModelScheduler", "abstract_signature",
     "TuneEntry", "TuneResult", "TuningDB", "autotune", "config_feasible",
     "shape_bucket", "tuning_key",
-    "ChildRank", "HaloCancelledError", "HaloFuture", "JnpAgent",
+    "AgentDeadError", "AgentState", "ChildRank", "HaloCancelledError",
+    "HaloFuture", "HealthConfig", "HealthMonitor", "JnpAgent",
     "PallasAgent", "RuntimeAgent", "ShardedAgent",
     "VirtualizationAgent", "XlaAgent",
     "MPIX_Allgather", "MPIX_Allreduce", "MPIX_Bcast", "MPIX_Claim",

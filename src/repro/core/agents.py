@@ -36,6 +36,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import logging
+import os
 import queue
 import threading
 import time
@@ -129,21 +130,28 @@ class HaloFuture:
             except Exception:
                 log.exception("HaloFuture done-callback raised")
 
-    def set_result(self, value: Any) -> None:
+    def set_result(self, value: Any) -> bool:
+        """Complete with ``value``; first completion wins.  Returns False if
+        the request already completed (or was cancelled) — the contract that
+        lets a speculative re-execution and its straggling original race to
+        the same future safely (DESIGN.md §11)."""
         with self._cond:
-            if self._state == HaloFuture._CANCELLED:
-                return
+            if self._state in (HaloFuture._DONE, HaloFuture._CANCELLED):
+                return False
             self._result = value
             cbs = self._finish(HaloFuture._DONE)
         self._run_callbacks(cbs)
+        return True
 
-    def set_exception(self, exc: BaseException) -> None:
+    def set_exception(self, exc: BaseException) -> bool:
+        """Complete with ``exc``; first completion wins (see set_result)."""
         with self._cond:
-            if self._state == HaloFuture._CANCELLED:
-                return
+            if self._state in (HaloFuture._DONE, HaloFuture._CANCELLED):
+                return False
             self._exception = exc
             cbs = self._finish(HaloFuture._DONE)
         self._run_callbacks(cbs)
+        return True
 
     def cancel(self) -> bool:
         """Cancel if still pending (queued, not yet claimed by a worker)."""
@@ -209,6 +217,229 @@ class HaloFuture:
 
 
 # ---------------------------------------------------------------------------
+# Agent liveness (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+class AgentState:
+    """Liveness states the :class:`HealthMonitor` assigns to a target."""
+    HEALTHY = "healthy"
+    DEGRADED = "degraded"    # busy with no progress past the degraded window
+    DEAD = "dead"            # no progress past the heartbeat timeout (sticky)
+
+
+class AgentDeadError(RuntimeError):
+    """An agent was declared dead: raised on new submissions to it, and used
+    to fail or re-place work that cannot be recovered from its queue."""
+
+
+@dataclasses.dataclass
+class HealthConfig:
+    """Knobs for liveness detection and straggler speculation.
+
+    ``heartbeat_timeout`` is the full detection budget: a busy agent whose
+    worker makes no progress for that long is DEAD (DEGRADED past
+    ``degraded_fraction`` of it).  ``straggler_multiple`` arms speculative
+    re-execution of graph nodes that run past that multiple of their
+    estimated latency (never earlier than ``straggler_min_s``; 0 disables).
+    """
+
+    heartbeat_timeout: float = 30.0
+    degraded_fraction: float = 0.5
+    poll_interval: Optional[float] = None    # None -> heartbeat_timeout / 4
+    straggler_multiple: float = 4.0
+    straggler_min_s: float = 0.25
+
+    @classmethod
+    def from_env(cls, **overrides: Any) -> "HealthConfig":
+        """Build from ``HALO_HEARTBEAT_TIMEOUT`` / ``HALO_HEALTH_POLL`` /
+        ``HALO_STRAGGLER_MULTIPLE`` / ``HALO_STRAGGLER_MIN``, explicit
+        keyword overrides winning (tests strip all ``HALO_*`` vars)."""
+        def env(name: str, default):
+            raw = os.environ.get(name)
+            if raw is None or raw == "":
+                return default
+            try:
+                return float(raw)
+            except ValueError:
+                log.warning("ignoring non-numeric %s=%r", name, raw)
+                return default
+        cfg = {"heartbeat_timeout": env("HALO_HEARTBEAT_TIMEOUT", 30.0),
+               "poll_interval": env("HALO_HEALTH_POLL", None),
+               "straggler_multiple": env("HALO_STRAGGLER_MULTIPLE", 4.0),
+               "straggler_min_s": env("HALO_STRAGGLER_MIN", 0.25)}
+        cfg.update(overrides)
+        return cls(**cfg)
+
+    @property
+    def effective_poll(self) -> float:
+        if self.poll_interval:
+            return self.poll_interval
+        return max(self.heartbeat_timeout / 4.0, 1e-3)
+
+
+class HealthMonitor:
+    """Marks heartbeat targets DEGRADED/DEAD on missed beats (DESIGN.md §11).
+
+    A *target* is anything exposing ``name`` and ``heartbeat() ->
+    (progress_counter, busy, last_activity)`` — virtualization agents and
+    the serving :class:`~repro.serve.engine.StepScheduler` both qualify.  An
+    idle target is always HEALTHY; a busy one whose worker has not advanced
+    its progress counter (equivalently: refreshed ``last_activity``) within
+    the configured windows degrades, then dies.  DEAD is sticky: recovery is
+    an explicit re-registration (the agent's queue was already drained and
+    replayed by then).
+
+    The monitor doubles as the deadline service for straggler speculation:
+    :meth:`watch` registers a one-shot callback fired when its deadline
+    passes.  Sweeps happen on the background thread (:meth:`start`) or
+    synchronously via :meth:`check` — tests drive ``check`` directly for
+    determinism."""
+
+    def __init__(self, config: Optional[HealthConfig] = None):
+        self.config = config or HealthConfig.from_env()
+        self._lock = threading.Lock()
+        self._targets: Dict[str, Any] = {}
+        self._states: Dict[str, str] = {}
+        self._listeners: List[Callable[[Any, str, str], None]] = []
+        self._watches: Dict[int, Tuple[float, Callable[[], None]]] = {}
+        self._watch_uid = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- registration --------------------------------------------------------
+    def register(self, target: Any) -> None:
+        """Track ``target``; re-registering a name resets it to HEALTHY."""
+        with self._lock:
+            self._targets[target.name] = target
+            self._states[target.name] = AgentState.HEALTHY
+
+    def unregister(self, target_or_name: Any) -> None:
+        name = getattr(target_or_name, "name", target_or_name)
+        with self._lock:
+            self._targets.pop(name, None)
+            self._states.pop(name, None)
+
+    def on_transition(self, listener: Callable[[Any, str, str], None]) -> None:
+        """``listener(target, old_state, new_state)`` on every change."""
+        with self._lock:
+            self._listeners.append(listener)
+
+    def state(self, target_or_name: Any) -> str:
+        name = getattr(target_or_name, "name", target_or_name)
+        with self._lock:
+            return self._states.get(name, AgentState.HEALTHY)
+
+    # -- straggler watch service ---------------------------------------------
+    def watch(self, deadline: float, callback: Callable[[], None]) -> int:
+        """Fire ``callback`` once on the first sweep after ``deadline``
+        (``time.monotonic`` clock); returns a token for :meth:`unwatch`."""
+        with self._lock:
+            self._watch_uid += 1
+            self._watches[self._watch_uid] = (deadline, callback)
+            return self._watch_uid
+
+    def unwatch(self, token: Optional[int]) -> None:
+        if token is None:
+            return
+        with self._lock:
+            self._watches.pop(token, None)
+
+    # -- sweeping ------------------------------------------------------------
+    def _classify(self, busy: bool, stalled: float) -> str:
+        cfg = self.config
+        if not busy:
+            return AgentState.HEALTHY
+        if stalled >= cfg.heartbeat_timeout:
+            return AgentState.DEAD
+        if stalled >= cfg.heartbeat_timeout * cfg.degraded_fraction:
+            return AgentState.DEGRADED
+        return AgentState.HEALTHY
+
+    def check(self, now: Optional[float] = None) -> Dict[str, str]:
+        """One synchronous liveness sweep + expired-watch firing; returns
+        the post-sweep state map."""
+        now = time.monotonic() if now is None else now
+        transitions: List[Tuple[Any, str, str]] = []
+        with self._lock:
+            targets = list(self._targets.items())
+        for name, target in targets:
+            try:
+                _beats, busy, last = target.heartbeat()
+            except Exception:
+                log.exception("heartbeat() raised for %s", name)
+                continue
+            new = self._classify(busy, now - last)
+            with self._lock:
+                old = self._states.get(name, AgentState.HEALTHY)
+                if old == AgentState.DEAD or new == old:
+                    continue
+                self._states[name] = new
+            transitions.append((target, old, new))
+        with self._lock:
+            due = [(tok, cb) for tok, (dl, cb) in self._watches.items()
+                   if dl <= now]
+            for tok, _cb in due:
+                del self._watches[tok]
+            listeners = list(self._listeners)
+        for target, old, new in transitions:
+            for listener in listeners:
+                try:
+                    listener(target, old, new)
+                except Exception:
+                    log.exception("health-transition listener raised")
+        for _tok, cb in due:
+            try:
+                cb()
+            except Exception:
+                log.exception("straggler watch callback raised")
+        with self._lock:
+            return dict(self._states)
+
+    def mark_dead(self, target_or_name: Any) -> None:
+        """Administratively force a target DEAD (listeners fire as usual)."""
+        name = getattr(target_or_name, "name", target_or_name)
+        with self._lock:
+            target = self._targets.get(name)
+            old = self._states.get(name, AgentState.HEALTHY)
+            if target is None or old == AgentState.DEAD:
+                return
+            self._states[name] = AgentState.DEAD
+            listeners = list(self._listeners)
+        for listener in listeners:
+            try:
+                listener(target, old, AgentState.DEAD)
+            except Exception:
+                log.exception("health-transition listener raised")
+
+    # -- background sweeper --------------------------------------------------
+    def start(self) -> "HealthMonitor":
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                return self
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, name="halo-health-monitor", daemon=True)
+            self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.config.effective_poll):
+            self.check()
+
+    def stop(self) -> None:
+        with self._lock:
+            thread, self._thread = self._thread, None
+        self._stop.set()
+        if thread is not None and thread.is_alive():
+            thread.join(timeout=5.0)
+
+    def __enter__(self) -> "HealthMonitor":
+        return self.start()
+
+    def __exit__(self, *exc_info) -> None:
+        self.stop()
+
+
+# ---------------------------------------------------------------------------
 # Virtualization agents
 # ---------------------------------------------------------------------------
 class VirtualizationAgent:
@@ -229,6 +460,13 @@ class VirtualizationAgent:
         self._queue: "queue.Queue" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
         self._shutdown = False
+        # liveness (DESIGN.md §11): worker-loop progress counter + last-
+        # activity timestamp, read by the HealthMonitor via heartbeat().
+        self._beats = 0
+        self._last_beat = time.monotonic()
+        self._current: Optional[tuple] = None    # item the worker is running
+        self._dead = False
+        self._dead_reason = ""
 
     # -- asynchronous execution (worker queue) -------------------------------
     def _ensure_worker(self) -> None:
@@ -239,21 +477,31 @@ class VirtualizationAgent:
                 daemon=True)
             self._worker.start()
 
+    def _beat(self, item: Optional[tuple]) -> None:
+        """Worker progress tick: claims (item) and completions (None)."""
+        with self._lock:
+            self._beats += 1
+            self._last_beat = time.monotonic()
+            self._current = item
+
     def _worker_loop(self) -> None:
         while True:
             item = self._queue.get()
             if item is None:
                 return
-            fut, fn, after = item
+            fut, fn, after, _replay = item
             if not fut._try_start():      # cancelled while queued
                 continue
+            self._beat(item)
             t0 = time.perf_counter()
             try:
                 result = fn()
             except BaseException as exc:  # noqa: BLE001 — propagate via future
                 fut.set_exception(exc)
+                self._beat(None)
                 continue
             fut.set_result(result)        # waiters proceed before bookkeeping
+            self._beat(None)
             if after is not None:
                 try:
                     after(result, t0)
@@ -261,19 +509,67 @@ class VirtualizationAgent:
                     log.exception("post-execution hook raised")
 
     def submit(self, fn: Callable[[], Any], future: Optional[HaloFuture] = None,
-               after: Optional[Callable[[Any, float], None]] = None
-               ) -> HaloFuture:
+               after: Optional[Callable[[Any, float], None]] = None,
+               replay: Optional[Callable[[], None]] = None) -> HaloFuture:
         """Enqueue a thunk on this agent's worker; returns its future.
 
         ``after(result, start_time)`` runs on the worker after the future is
-        completed — used for latency feedback without delaying waiters."""
+        completed — used for latency feedback without delaying waiters.
+        ``replay()`` is the recovery hook: if this agent is declared DEAD
+        with the item still incomplete, the session calls it (instead of
+        blindly re-running ``fn``) so the owner can re-place the work."""
         fut = future or HaloFuture()
         with self._lock:
+            if self._dead:
+                raise AgentDeadError(
+                    f"agent {self.name} is dead ({self._dead_reason})")
             if self._shutdown:
                 raise RuntimeError(f"agent {self.name} is shut down")
             self._ensure_worker()
-            self._queue.put((fut, fn, after))
+            # the beat clock restarts when a busy period begins; refreshing
+            # it on every submit would let a steady caller mask a hung worker
+            if self._current is None and self._queue.empty():
+                self._last_beat = time.monotonic()
+            self._queue.put((fut, fn, after, replay))
         return fut
+
+    def heartbeat(self) -> Tuple[int, bool, float]:
+        """Liveness snapshot: ``(progress_counter, busy, last_activity)``.
+        ``busy`` means a request is running or queued — an idle agent is
+        healthy no matter how stale its timestamp."""
+        with self._lock:
+            busy = self._current is not None or not self._queue.empty()
+            return self._beats, busy, self._last_beat
+
+    @property
+    def dead(self) -> bool:
+        return self._dead
+
+    def mark_dead(self, reason: str = "declared dead") -> List[tuple]:
+        """Declare this agent dead: refuse new submissions, report
+        unavailable, and hand back every not-yet-completed work item — the
+        claimed in-flight one first, then the queue in FIFO order — for the
+        session to replay onto healthy members (no work is lost).  The hung
+        worker thread is left behind; if it ever finishes, its late result
+        loses the first-completion race on the future.  Idempotent."""
+        with self._lock:
+            if self._dead:
+                return []
+            self._dead = True
+            self._dead_reason = reason
+            items: List[tuple] = []
+            if self._current is not None and not self._current[0].done():
+                items.append(self._current)
+            while True:
+                try:
+                    item = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not None and not item[0].done():
+                    items.append(item)
+            # wake an idle worker so the thread exits instead of lingering
+            self._queue.put(None)
+        return items
 
     def shutdown(self, cancel_pending: bool = True, wait: bool = True) -> None:
         """Stop the worker; optionally cancel still-queued requests."""
@@ -311,7 +607,7 @@ class VirtualizationAgent:
         return record.fn(*args, **kwargs)
 
     def available(self) -> bool:
-        return True
+        return not self._dead
 
     def execute(self, record: KernelRecord, *args, **kwargs):
         args, kwargs = self._ingest(record, args, kwargs)
@@ -356,7 +652,8 @@ class PallasAgent(XlaAgent):
     platform = "pallas"
 
     def available(self) -> bool:
-        return True  # interpret fallback keeps the agent usable everywhere
+        # interpret fallback keeps the agent usable everywhere (unless dead)
+        return not self._dead
 
 
 class ShardedAgent(XlaAgent):
@@ -369,7 +666,7 @@ class ShardedAgent(XlaAgent):
         self.mesh = mesh
 
     def available(self) -> bool:
-        return self.mesh is not None
+        return self.mesh is not None and not self._dead
 
     def _device_execute(self, record: KernelRecord, args, kwargs):
         if self.mesh is None:
@@ -426,7 +723,8 @@ class RuntimeAgent:
                  manifest: Optional[Manifest] = None,
                  agents: Optional[Sequence[VirtualizationAgent]] = None,
                  mesh=None,
-                 scheduler: Optional[CostModelScheduler] = None):
+                 scheduler: Optional[CostModelScheduler] = None,
+                 health: Optional[HealthMonitor] = None):
         self.registry = registry or GLOBAL_REGISTRY
         self.manifest = manifest or default_manifest()
         if agents is None:
@@ -446,15 +744,112 @@ class RuntimeAgent:
         # T1 instrumentation: host-side dispatch overhead accounting
         self._t1_seconds = 0.0
         self._t1_calls = 0
+        # liveness (DESIGN.md §11): monitor off by default — sessions opt in
+        # via the constructor, enable_health_monitor(), or HALO_HEALTH_MONITOR
+        self.health: Optional[HealthMonitor] = None
+        if health is not None:
+            self.enable_health_monitor(monitor=health, start=False)
+        elif os.environ.get("HALO_HEALTH_MONITOR", "") not in ("", "0"):
+            self.enable_health_monitor()
 
     # -- agent interoperability (plug-and-play, §V-A5) -------------------------
     def attach_agent(self, agent: VirtualizationAgent) -> None:
         with self._lock:
             self.agents[agent.platform] = agent
+        if self.health is not None:
+            self.health.register(agent)
 
     def detach_agent(self, platform: str) -> Optional[VirtualizationAgent]:
         with self._lock:
-            return self.agents.pop(platform, None)
+            agent = self.agents.pop(platform, None)
+        if agent is not None and self.health is not None:
+            self.health.unregister(agent)
+        return agent
+
+    # -- liveness + self-healing (DESIGN.md §11) -------------------------------
+    def enable_health_monitor(self, config: Optional[HealthConfig] = None,
+                              monitor: Optional[HealthMonitor] = None,
+                              start: bool = True) -> HealthMonitor:
+        """Wire a :class:`HealthMonitor` over this session's agents: every
+        registered agent is tracked, and a DEAD transition triggers
+        :meth:`handle_dead_agent` (queue replay + comm membership repair).
+        ``start=True`` launches the background sweeper; tests usually pass
+        ``start=False`` and drive ``monitor.check()`` themselves."""
+        mon = monitor or HealthMonitor(config)
+        self.health = mon
+        with self._lock:
+            agents = list(self.agents.values())
+        for agent in agents:
+            mon.register(agent)
+        mon.on_transition(self._on_health_transition)
+        if start:
+            mon.start()
+        return mon
+
+    def _on_health_transition(self, target: Any, old: str, new: str) -> None:
+        if new != AgentState.DEAD or not isinstance(target, VirtualizationAgent):
+            return
+        if self.agents.get(target.platform) is target:
+            self.handle_dead_agent(target)
+
+    def _healthy_fallback(self, exclude: str) -> Optional[VirtualizationAgent]:
+        """An available agent to replay a dead member's work on — the jnp
+        fail-safe substrate when alive, else any other available one."""
+        with self._lock:
+            agents = dict(self.agents)
+        jnp_agent = agents.get("jnp")
+        if jnp_agent is not None and jnp_agent.platform != exclude \
+                and jnp_agent.available():
+            return jnp_agent
+        for platform, agent in agents.items():
+            if platform != exclude and agent.available():
+                return agent
+        return None
+
+    def handle_dead_agent(self, agent: VirtualizationAgent,
+                          reason: str = "heartbeat timeout") -> int:
+        """Self-healing response to a DEAD agent (DESIGN.md §11): declare it
+        dead (new submissions refused, ``available()`` False so placement
+        routes around it), re-bind every device-group rank it held onto
+        surviving members, and replay its not-yet-completed queue items onto
+        a healthy agent — via each item's ``replay`` hook when the owner
+        registered one (graph nodes re-place), else by re-running the thunk
+        on the fail-safe agent.  Returns the number of items recovered."""
+        items = agent.mark_dead(reason)
+        log.warning("agent %s declared dead (%s); replaying %d queued "
+                    "request(s)", agent.name, reason, len(items))
+        with self._lock:
+            comms = list(self._comms)
+        for comm in comms:
+            try:
+                comm.on_member_dead(agent.platform)
+            except Exception:
+                log.exception("comm %s failed to drop dead member %s",
+                              getattr(comm, "name", comm), agent.platform)
+        fallback = self._healthy_fallback(exclude=agent.platform)
+        for fut, fn, after, replay in items:
+            if replay is not None:
+                try:
+                    replay()
+                except Exception:
+                    log.exception("replay hook raised for %s", fut.alias)
+                continue
+            if fallback is None:
+                fut.set_exception(AgentDeadError(
+                    f"agent {agent.name} died and no healthy agent remains "
+                    f"to replay request (uid={fut.uid}, alias={fut.alias!r})"))
+                continue
+
+            def _replayed(fn=fn, fut=fut):
+                # the future may already be claimed by the dead worker, so
+                # run the thunk directly and race it (first result wins —
+                # for an in-flight hang the dead side never finishes anyway)
+                try:
+                    fut.set_result(fn())
+                except BaseException as exc:  # noqa: BLE001 — via future
+                    fut.set_exception(exc)
+            fallback.submit(_replayed)
+        return len(items)
 
     def comm_split(self, platforms: Optional[Sequence[str]] = None,
                    name: Optional[str] = None):
@@ -559,6 +954,8 @@ class RuntimeAgent:
 
     def finalize(self) -> None:
         """MPIX_Finalize: free all outstanding resources and stop workers."""
+        if self.health is not None:
+            self.health.stop()
         with self._lock:
             crs = list(self._crs.values())
         for cr in crs:

@@ -44,7 +44,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 
-from .agents import HaloFuture, RuntimeAgent, _active_graph
+from .agents import HaloFuture, RuntimeAgent, _active_graph, log
 from .graph import ExecutionGraph, GraphError, GraphNode
 from .registry import PLATFORM_PREFERENCE
 
@@ -92,6 +92,21 @@ class HaloComm:
                  name: Optional[str] = None):
         if not platforms:
             raise ValueError("a device group needs at least one member")
+        self._validate_platforms(session, platforms)
+        self.session = session
+        self._platforms: List[str] = list(platforms)
+        self._epoch = 0
+        self.name = name or f"comm({','.join(platforms)})"
+        self.freed = False
+        self._lock = threading.Lock()
+        # per-captured-graph tail nodes for call-order hazard edges; keyed
+        # by the graph object's id, pruned when a different graph shows up
+        # (captures are thread-local and short-lived)
+        self._tails: Dict[int, List[GraphNode]] = {}
+
+    @staticmethod
+    def _validate_platforms(session: RuntimeAgent,
+                            platforms: Sequence[str]) -> None:
         unknown = [p for p in platforms if p not in session.agents]
         if unknown:
             raise ValueError(
@@ -103,17 +118,28 @@ class HaloComm:
             raise ValueError(
                 f"member platform(s) {unavailable} are registered but not "
                 f"available (e.g. sharded without a mesh)")
-        self.session = session
-        self.platforms: Tuple[str, ...] = tuple(platforms)
-        self.name = name or f"comm({','.join(platforms)})"
-        self.freed = False
-        self._lock = threading.Lock()
-        # per-captured-graph tail nodes for call-order hazard edges; keyed
-        # by the graph object's id, pruned when a different graph shows up
-        # (captures are thread-local and short-lived)
-        self._tails: Dict[int, List[GraphNode]] = {}
 
     # -- introspection -------------------------------------------------------
+    @property
+    def platforms(self) -> Tuple[str, ...]:
+        """Per-rank member bindings, in rank order (snapshot)."""
+        with self._lock:
+            return tuple(self._platforms)
+
+    @property
+    def members(self) -> Tuple[str, ...]:
+        """Distinct member substrates, first-rank order."""
+        with self._lock:
+            return tuple(dict.fromkeys(self._platforms))
+
+    @property
+    def epoch(self) -> int:
+        """Membership-change counter: bumps on every remove/add/re-bind.
+        Host loops that carry per-rank state compare it across iterations
+        and :meth:`repartition` when it moved."""
+        with self._lock:
+            return self._epoch
+
     @property
     def size(self) -> int:
         """Number of member ranks."""
@@ -129,6 +155,115 @@ class HaloComm:
         """Release the group handle.  Idempotent; in-flight collectives
         complete normally (members own the execution resources)."""
         self.freed = True
+
+    # -- elastic membership (DESIGN.md §11) -----------------------------------
+    def _survivors(self, losing: Sequence[str]) -> List[str]:
+        """Distinct still-available member substrates after ``losing`` ones
+        leave, in first-rank order; falls back to any live session agent
+        (fail-safe first) when every member substrate is gone."""
+        out = [p for p in dict.fromkeys(self._platforms)
+               if p not in losing and self.session.agents[p].available()]
+        if out:
+            return out
+        jnp_agent = self.session.agents.get("jnp")
+        if jnp_agent is not None and jnp_agent.available() \
+                and "jnp" not in losing:
+            return ["jnp"]
+        return [p for p, a in self.session.agents.items()
+                if a.available() and p not in losing]
+
+    def remove_member(self, platform: Optional[str] = None,
+                      rank: Optional[int] = None,
+                      shrink: bool = False) -> Tuple[str, ...]:
+        """Take a substrate (every rank bound to ``platform``) or a single
+        ``rank`` out of the group.  By default the freed ranks are
+        **re-bound** round-robin onto the surviving member substrates: the
+        logical group size and shard layout are unchanged, so an in-flight
+        iterative solver keeps producing bit-identical results — survivors
+        simply absorb the dead member's roles.  With ``shrink=True`` the
+        ranks are dropped instead (size shrinks; carry per-rank state across
+        with :meth:`repartition`).  Returns the new rank→platform binding."""
+        if (platform is None) == (rank is None):
+            raise ValueError("pass exactly one of platform= or rank=")
+        with self._lock:
+            if rank is not None:
+                if not 0 <= rank < len(self._platforms):
+                    raise ValueError(
+                        f"rank {rank} out of range for "
+                        f"{len(self._platforms)}-member group")
+                affected = [rank]
+                losing = [self._platforms[rank]]
+            else:
+                affected = [r for r, p in enumerate(self._platforms)
+                            if p == platform]
+                if not affected:
+                    raise ValueError(
+                        f"platform {platform!r} holds no rank in {self.name}")
+                losing = [platform]
+            if shrink:
+                if len(affected) == len(self._platforms):
+                    raise ValueError(
+                        f"cannot shrink {self.name} to zero members")
+                self._platforms = [p for r, p in enumerate(self._platforms)
+                                   if r not in affected]
+            else:
+                survivors = self._survivors(losing)
+                if not survivors:
+                    raise RuntimeError(
+                        f"{self.name}: no live agent left to absorb "
+                        f"rank(s) {affected}")
+                for i, r in enumerate(affected):
+                    self._platforms[r] = survivors[i % len(survivors)]
+            self._epoch += 1
+            return tuple(self._platforms)
+
+    def add_member(self, platform: str,
+                   rank: Optional[int] = None) -> Tuple[str, ...]:
+        """Bring a substrate into the group: with ``rank=None`` a new rank
+        is appended (the group grows — :meth:`repartition` carried state
+        over the new size); with an existing ``rank`` that role is re-bound
+        onto ``platform`` (size unchanged — e.g. handing a fail-safe-held
+        rank back to a recovered accelerator)."""
+        self._check_live()
+        self._validate_platforms(self.session, [platform])
+        with self._lock:
+            if rank is None:
+                self._platforms.append(platform)
+            else:
+                if not 0 <= rank < len(self._platforms):
+                    raise ValueError(
+                        f"rank {rank} out of range for "
+                        f"{len(self._platforms)}-member group")
+                self._platforms[rank] = platform
+            self._epoch += 1
+            return tuple(self._platforms)
+
+    def on_member_dead(self, platform: str) -> bool:
+        """Session callback when a member agent is declared DEAD: re-bind
+        its ranks onto survivors (:meth:`remove_member` default policy) so
+        in-flight and future collectives complete without it.  No-op for
+        freed comms and non-members; returns whether a re-bind happened."""
+        if self.freed:
+            return False
+        with self._lock:
+            if platform not in self._platforms:
+                return False
+        self.remove_member(platform=platform)
+        log.warning("comm %s: member %s died; ranks re-bound -> %s",
+                    self.name, platform, list(self.platforms))
+        return True
+
+    def repartition(self, shards: Sequence[NodeOrValue],
+                    axis: int = 0) -> List[Any]:
+        """Re-split carried per-rank state over the *current* group size
+        after an elastic resize (:func:`repro.distributed.sharding.
+        repartition_shards`): pass the old layout's shards (arrays or
+        completed futures), get one shard per current rank back.  Pure data
+        movement — values are copied, never recomputed."""
+        self._check_live()
+        from ..distributed.sharding import repartition_shards
+        arrs = [self._concrete(s, "repartition") for s in shards]
+        return list(repartition_shards(arrs, self.size, axis=axis))
 
     # -- wiring ---------------------------------------------------------------
     def _check_live(self) -> None:

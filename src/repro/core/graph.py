@@ -42,8 +42,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
-from .agents import (HaloFuture, RuntimeAgent, VirtualizationAgent,
-                     _graph_capture, log)
+from .agents import (AgentDeadError, HaloFuture, RuntimeAgent,
+                     VirtualizationAgent, _graph_capture, log)
 from .compute_object import ComputeObject, as_compute_object
 from .registry import KernelRecord, SelectionError
 from .scheduler import abstract_signature
@@ -87,9 +87,26 @@ class GraphNode(HaloFuture):
         self._foreign_deps: List[HaloFuture] = []
         self.platform: Optional[str] = None      # substrate it actually ran on
         self.attempts: List[str] = []            # platforms tried, in order
+        self.speculated = False                  # a straggler backup launched
         self._tried: List[KernelRecord] = []     # records tried (failures)
         self._first_exc: Optional[BaseException] = None
         self._pending_parents = 0
+        self._winner_claimed = False
+
+    def _claim_win(self) -> bool:
+        """Claim the right to complete this node and fire its children.
+
+        With straggler speculation (DESIGN.md §11) two attempts can race to
+        the same node; exactly one may publish ``platform``, complete the
+        future, and schedule descendants.  False = some other attempt (or a
+        cancel) already owns the outcome — the caller is the loser and must
+        discard its result."""
+        with self._cond:
+            if self._winner_claimed or self._state in (HaloFuture._DONE,
+                                                       HaloFuture._CANCELLED):
+                return False
+            self._winner_claimed = True
+            return True
 
     def __repr__(self):
         return (f"GraphNode(uid={self.uid}, alias={self.alias!r}, "
@@ -381,19 +398,39 @@ class ExecutionGraph:
                 self._backlog.get(agent.platform, 0.0) + est
         node.attempts.append(rec.platform if rec is not None else "failsafe")
         internal = HaloFuture(uid=node.uid, alias=node.alias, tag=node.tag)
+        # one-element chain cell shared with the replay hook: inline child
+        # continuations rebind it, so a DEAD declaration replays whichever
+        # node of the chain the wedged worker was actually running
+        item = [(node, rec, est, args, kwargs)]
         try:
             agent.submit(
-                lambda: self._run(node, rec, agent, est, args, kwargs),
-                future=internal)
+                lambda: self._run(item, agent),
+                future=internal,
+                replay=lambda: self._replay_dead(item, agent))
         except Exception as exc:  # noqa: BLE001 — agent shut down
             with self._lock:
                 self._backlog[agent.platform] = \
                     max(0.0, self._backlog.get(agent.platform, 0.0) - est)
             self._fail_node(node, exc)
 
-    def _run(self, node: GraphNode, rec: Optional[KernelRecord],
-             agent: VirtualizationAgent, est: float,
-             args: Tuple, kwargs: Dict) -> None:
+    def _replay_dead(self, item: List[tuple],
+                     agent: VirtualizationAgent) -> None:
+        """Recovery hook (DESIGN.md §11): ``agent`` was declared DEAD with
+        this attempt still queued or in flight.  ``item`` is the chain cell
+        shared with :meth:`_run` — it names the node the wedged worker was
+        on (the original submission or an inline child continuation).
+        Re-place it through the normal quarantine ladder so it lands on a
+        healthy member — an in-flight attempt may still be hung on the dead
+        worker; the replay races it and the first completion wins."""
+        node, rec, est, args, kwargs = item[0]
+        self._backlog_sub(agent.platform, est)
+        if node.done():
+            return
+        self._retry_or_fail(node, rec, args, kwargs, AgentDeadError(
+            f"agent {agent.name} died before node {node.uid} "
+            f"({node.alias}) completed"))
+
+    def _run(self, item: List[tuple], agent: VirtualizationAgent) -> None:
         """Worker-side body of node attempts (runs on ``agent``'s worker).
 
         After a success, one ready child placed on the *same* agent
@@ -402,22 +439,33 @@ class ExecutionGraph:
         other agents are enqueued there (that's the overlap)."""
         sess = self.session
         while True:
+            node, rec, est, args, kwargs = item[0]
+            token = None
             try:
                 # first attempt claims the node (refusing a queued cancel);
-                # re-placement attempts arrive already RUNNING
+                # re-placement / dead-agent-replay attempts arrive already
+                # RUNNING; a node completed meanwhile has nothing left to do
                 if not node._try_start() and not node.running():
                     self._backlog_sub(agent.platform, est)
-                    return                       # cancelled while queued
+                    return                       # cancelled or completed
                 t0 = time.perf_counter()
+                token = self._watch_straggler(node, rec, agent, est,
+                                              args, kwargs)
                 if rec is None:
                     out = node.failsafe(*args, **kwargs)
                 else:
                     out = sess._execute_on(agent, rec, node.cr, args, kwargs)
             except Exception as exc:  # noqa: BLE001 — re-place or surface
+                self._unwatch(token)
                 self._backlog_sub(agent.platform, est)
+                if node.done():                  # lost a speculation race
+                    return
                 self._retry_or_fail(node, rec, args, kwargs, exc)
                 return
+            self._unwatch(token)
             self._backlog_sub(agent.platform, est)
+            if not node._claim_win():            # a backup finished first
+                return
             node.platform = rec.platform if rec is not None else agent.platform
             node.set_result(out)
             # sample *before* child placement/dispatch so the observed
@@ -452,15 +500,140 @@ class ExecutionGraph:
                                            c_args, c_kwargs)
             if nxt is None:
                 return
-            # inline continuation: est=0 (never queued, no backlog entry)
-            node, rec, args, kwargs = nxt
-            est = 0.0
+            # inline continuation: est=0 (never queued, no backlog entry);
+            # rebind the shared chain cell so a DEAD replay targets the
+            # child the worker is about to run, not the finished parent
+            c_node, c_rec, c_args, c_kwargs = nxt
+            item[0] = (c_node, c_rec, 0.0, c_args, c_kwargs)
 
     def _backlog_sub(self, platform: str, est: float) -> None:
         if est:
             with self._lock:
                 self._backlog[platform] = \
                     max(0.0, self._backlog.get(platform, 0.0) - est)
+
+    # -- straggler speculation (DESIGN.md §11) ----------------------------
+    def _watch_straggler(self, node: GraphNode, rec: Optional[KernelRecord],
+                         agent: VirtualizationAgent, est: float,
+                         args: Tuple, kwargs: Dict) -> Optional[int]:
+        """Arm a deadline on the session's HealthMonitor before executing:
+        if the attempt is still running past ``straggler_multiple ×``
+        its latency estimate (floored at ``straggler_min_s``), a backup
+        attempt launches on the next-ranked platform.  Returns the watch
+        token (None when no monitor is wired or speculation is off)."""
+        mon = getattr(self.session, "health", None)
+        if mon is None or rec is None or node.speculated:
+            return None
+        cfg = mon.config
+        if not cfg.straggler_multiple:
+            return None
+        budget = max(est * cfg.straggler_multiple, cfg.straggler_min_s)
+        return mon.watch(
+            time.monotonic() + budget,
+            lambda: self._speculate(node, rec, agent, args, kwargs))
+
+    def _unwatch(self, token: Optional[int]) -> None:
+        if token is not None:
+            mon = getattr(self.session, "health", None)
+            if mon is not None:
+                mon.unwatch(token)
+
+    def _backup_for(self, node: GraphNode, rec: KernelRecord, args: Tuple
+                    ) -> Optional[Tuple[KernelRecord, VirtualizationAgent]]:
+        """(record, agent) for a speculative backup attempt: the scheduler's
+        best-ranked candidate on a different platform, falling back to the
+        registry fail-safe for member-pinned nodes (their allowed set is a
+        single — straggling — platform)."""
+        sess = self.session
+        sched = sess.scheduler
+        if sched is None:
+            return None
+        allowed = node.overrides.get("allowed_platforms") \
+            or sess._allowed_platforms()
+        pref = node.overrides.get("platform_preference") \
+            or sess._platform_preference()
+        try:
+            cands = sess.registry.candidates(
+                node.alias, *args, allowed_platforms=allowed,
+                platform_preference=pref, exclude=node._tried)
+        except SelectionError:
+            cands = []
+        backup = sched.backup_candidate(node.alias, cands, args,
+                                        exclude_platforms=(rec.platform,))
+        if backup is None:
+            fs = sess.registry.failsafe(node.alias)
+            if fs is not None and fs.platform != rec.platform \
+                    and all(fs is not r for r in node._tried):
+                backup = fs
+        if backup is None:
+            return None
+        b_agent = sess._agent_for(backup)
+        if b_agent is None:
+            return None
+        return backup, b_agent
+
+    def _speculate(self, node: GraphNode, rec: KernelRecord,
+                   agent: VirtualizationAgent, args: Tuple,
+                   kwargs: Dict) -> bool:
+        """Launch one backup attempt for a straggling node.  The original
+        keeps running — first completion wins (:meth:`GraphNode._claim_win`);
+        the loser's result is discarded, and a backup still queued when the
+        original finishes is cancelled outright."""
+        if node.done() or node.speculated:
+            return False
+        backup = self._backup_for(node, rec, args)
+        if backup is None:
+            return False
+        b_rec, b_agent = backup
+        if b_agent is agent:             # would queue behind the straggler
+            return False
+        node.speculated = True
+        node.attempts.append(f"{b_rec.platform}+spec")
+        fut = HaloFuture(uid=node.uid, alias=node.alias, tag=node.tag)
+        node.add_done_callback(lambda _f: fut.cancel())
+        try:
+            b_agent.submit(
+                lambda: self._run_backup(node, b_rec, b_agent, args, kwargs),
+                future=fut)
+        except Exception:  # noqa: BLE001 — backup agent gone; keep original
+            return False
+        log.warning("graph node %d (%s): straggling on %s; speculating "
+                    "on %s", node.uid, node.alias, agent.platform,
+                    b_rec.platform)
+        return True
+
+    def _run_backup(self, node: GraphNode, rec: KernelRecord,
+                    agent: VirtualizationAgent, args: Tuple,
+                    kwargs: Dict) -> None:
+        """Worker-side body of a speculative backup attempt.  A backup that
+        fails stays silent — the original attempt still owns the node and
+        its quarantine ladder."""
+        if node.done():
+            return
+        try:
+            out = self.session._execute_on(agent, rec, node.cr, args, kwargs)
+        except Exception:  # noqa: BLE001 — speculative: never surfaces
+            log.warning("speculative attempt for node %d (%s) on %s failed; "
+                        "original attempt still owns the node", node.uid,
+                        node.alias, rec.platform, exc_info=True)
+            return
+        if node._claim_win():
+            node.platform = rec.platform
+            node.set_result(out)
+            self._fire_children(node)
+
+    def _fire_children(self, node: GraphNode) -> None:
+        """Decrement children's readiness after an out-of-band completion
+        (speculative win) and submit the ready ones — the counterpart of the
+        inline child scheduling in :meth:`_run`."""
+        ready: List[GraphNode] = []
+        with self._lock:
+            for child in node.children:
+                child._pending_parents -= 1
+                if child._pending_parents == 0:
+                    ready.append(child)
+        for child in ready:
+            self._submit(child)
 
     def _retry_or_fail(self, node: GraphNode, rec: Optional[KernelRecord],
                        args: Tuple, kwargs: Dict, exc: BaseException) -> None:
@@ -483,8 +656,9 @@ class ExecutionGraph:
         self._fail_node(node, node._first_exc)
 
     def _fail_node(self, node: GraphNode, exc: BaseException) -> None:
-        if not node.done():
-            node.set_exception(exc)
+        if not node._claim_win():
+            return          # completed elsewhere (e.g. a speculative backup)
+        node.set_exception(exc)
         self._fail_descendants(node, exc)
 
     def _fail_descendants(self, node: GraphNode, exc: BaseException) -> None:

@@ -353,6 +353,26 @@ class CostModelScheduler:
         scored = sorted((p for p in order if p in best), key=best.__getitem__)
         return scored + [p for p in order if p not in best]
 
+    def backup_candidate(self, alias: str,
+                         candidates: Sequence[KernelRecord],
+                         args: Sequence[Any],
+                         exclude_platforms: Sequence[str] = ()
+                         ) -> Optional[KernelRecord]:
+        """The record a straggling graph node should speculatively re-execute
+        on (DESIGN.md §11): the best-ranked candidate — :meth:`rank_platforms`
+        order, i.e. fastest estimated member first — on a platform other than
+        the one(s) already running the node.  Quarantined records are skipped;
+        None when no other platform can run it."""
+        pool = [c for c in candidates
+                if c.platform not in exclude_platforms and not self.is_failed(c)]
+        if not pool:
+            return None
+        for platform in self.rank_platforms(alias, pool, args):
+            for rec in pool:
+                if rec.platform == platform:
+                    return rec
+        return pool[0]
+
     # -- persistence ---------------------------------------------------------
     def load(self, path: os.PathLike) -> None:
         """Ingest a persisted table.  Loaded keys are *not* marked warmed:

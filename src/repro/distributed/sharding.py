@@ -141,6 +141,24 @@ def partition_slices(length: int, parts: int) -> Tuple[Tuple[int, int], ...]:
     return tuple((r * size, size) for r in range(parts))
 
 
+def repartition_shards(shards: Sequence[jax.Array], parts: int,
+                       axis: int = 0) -> Tuple[jax.Array, ...]:
+    """Re-split per-member shards from one group layout into ``parts`` equal
+    shards (elastic membership change, DESIGN.md §11): concatenate along
+    ``axis`` and re-slice with :func:`partition_slices`.  The re-layout is
+    pure data movement — bytes are copied, never recomputed — so carrying
+    loop state across a shrink/grow keeps the values exact; only subsequent
+    *reductions* see a different bracketing.  Raises like ``partition_slices``
+    when the combined axis does not divide evenly over ``parts``."""
+    import jax.numpy as jnp
+    arrs = [jnp.asarray(s) for s in shards]
+    if not arrs:
+        raise ValueError("repartition_shards needs at least one shard")
+    full = arrs[0] if len(arrs) == 1 else jnp.concatenate(arrs, axis=axis)
+    return tuple(jax.lax.slice_in_dim(full, start, start + size, axis=axis)
+                 for start, size in partition_slices(full.shape[axis], parts))
+
+
 def member_shard(x: jax.Array, rank: int, parts: int, axis: int = 0,
                  logical: Logical = "batch") -> jax.Array:
     """Slice member ``rank``'s shard of ``x`` along ``axis`` and, when a

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import logging
 import threading
 import time
@@ -35,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.agents import HaloFuture
+from ..core.agents import AgentDeadError, AgentState, HaloFuture
 from ..core.portability import ServeReport
 from ..models.transformer import Model
 from .kvcache import evict_slot, insert_slot, pad_caches
@@ -183,10 +184,13 @@ class StepScheduler:
     ``max_new``.  Drive the loop synchronously (``step``/``drain``) or in
     the background (``start``/``stop``, or ``with sched:``)."""
 
+    _seq = itertools.count(1)
+
     def __init__(self, engine: SlotEngine, temperature: float = 0.0,
                  seed: int = 0):
         self.engine = engine
         self.temperature = temperature
+        self.name = f"slot-engine-{next(StepScheduler._seq)}"
         self._key = jax.random.PRNGKey(seed)
         self._queue: "collections.deque[Request]" = collections.deque()
         self._lanes: List[Optional[_Lane]] = [None] * engine.slots
@@ -194,6 +198,8 @@ class StepScheduler:
         self._thread: Optional[threading.Thread] = None
         self._stop = False
         self._uid = 0
+        self._beats = 0
+        self._last_beat = time.monotonic()
         # held by callers that synchronously drive this scheduler end to end
         # (submit + drain) — enforces the single-stepper invariant when one
         # scheduler instance is shared (see ServeEngine.generate)
@@ -227,6 +233,11 @@ class StepScheduler:
             if self._stop:
                 raise RuntimeError(
                     "StepScheduler is stopped; start() it again to submit")
+            if not self._queue and not any(l is not None
+                                           for l in self._lanes):
+                # busy period starts now: the stall clock for liveness runs
+                # from here, not from whenever the last request finished
+                self._last_beat = time.monotonic()
             self._uid += 1
             fut = HaloFuture(uid=self._uid, alias="generate")
             self._queue.append(Request(self._uid, prompt, max_new,
@@ -249,6 +260,47 @@ class StepScheduler:
         with self._cond:
             return bool(self._queue) or any(l is not None
                                             for l in self._lanes)
+
+    def heartbeat(self):
+        """Liveness probe for :class:`~repro.core.agents.HealthMonitor`:
+        ``(progress counter, busy, last activity)``.  Busy means queued or
+        in-flight requests exist; the counter advances once per engine
+        iteration, so a stepping thread wedged inside a device call (or a
+        scheduler nobody is driving) stalls and gets flagged."""
+        with self._cond:
+            busy = bool(self._queue) or any(l is not None
+                                            for l in self._lanes)
+            return self._beats, busy, self._last_beat
+
+    def _beat(self) -> None:
+        with self._cond:
+            self._beats += 1
+            self._last_beat = time.monotonic()
+
+    def attach_health(self, monitor) -> "StepScheduler":
+        """Register with a :class:`~repro.core.agents.HealthMonitor`: when
+        the monitor declares this scheduler DEAD (its stepping thread
+        stopped advancing while work was pending), every queued and
+        in-flight request fails with :class:`AgentDeadError` instead of
+        leaving clients blocked on futures that will never resolve."""
+        monitor.register(self)
+        monitor.on_transition(self._on_health_transition)
+        return self
+
+    def _on_health_transition(self, target, old: str, new: str) -> None:
+        if target is not self or new != AgentState.DEAD:
+            return
+        exc = AgentDeadError(
+            f"{self.name} declared dead (engine loop stopped making "
+            f"progress); queued and in-flight requests failed")
+        log.error("%s", exc)
+        with self._cond:
+            dropped = list(self._queue)
+            self._queue.clear()
+        for r in dropped:
+            if r.future is not None:
+                r.future.set_exception(exc)
+        self._fail_active(exc)
 
     def report(self) -> ServeReport:
         return ServeReport(t1_s=self._t1, t3_s=self._t3, steps=self._steps,
@@ -287,6 +339,7 @@ class StepScheduler:
         t0 = time.perf_counter()
         dev = 0.0
         worked = False
+        self._beat()          # claim the iteration: a hang inside it stalls
 
         # (a) admission: prefill queued requests into free slots
         while True:
@@ -364,6 +417,7 @@ class StepScheduler:
 
         if worked:
             self._steps += 1
+            self._beat()
         self._t3 += dev
         self._t1 += (time.perf_counter() - t0) - dev
         return worked

@@ -1,0 +1,13 @@
+"""Test-support layer: first-class fault injection for the self-healing
+runtime (DESIGN.md §11).
+
+Importable from production code and tests alike (it ships in the package so
+downstream users can chaos-test their own deployments), but nothing in the
+runtime depends on it — the dependency arrow points strictly from tests to
+here to :mod:`repro.core`.
+"""
+from .faults import (FaultError, FaultPlan, FaultyAgent, chaos, failing,
+                     faulty_record)
+
+__all__ = ["FaultError", "FaultPlan", "FaultyAgent", "chaos", "failing",
+           "faulty_record"]

@@ -1,0 +1,224 @@
+"""Fault-injection harness for the self-healing runtime (DESIGN.md §11).
+
+Every fault-path test in the suite injects failures through this module
+instead of hand-rolling throwaway agent subclasses, so the failure modes the
+runtime claims to survive are named, reusable, and exercised identically
+everywhere:
+
+* :class:`FaultPlan` — a declarative description of one substrate's
+  misbehavior: *raise* on the Nth device call (optionally for a bounded
+  number of calls — flaky-then-recover), *hang* (straggle for ``delay_s``
+  then finish, feeding the straggler-speculation path), or *die* (wedge the
+  worker until released, feeding the heartbeat/DEAD path).  Faults can be
+  restricted to specific kernel aliases.
+* :class:`FaultyAgent` — a virtualization agent executing the plan.  Its
+  non-faulting calls delegate to the real substrate class for its platform
+  (xla calls still go through jit), so results stay bit-identical to a
+  healthy run and only the *injected* behavior differs.
+* :func:`chaos` — a context manager that swaps fault agents into a live
+  :class:`~repro.core.agents.RuntimeAgent` session and restores the
+  originals on exit: wedged calls are released, replaced agents re-attached,
+  and scheduler quarantine cleared, so one test's chaos never leaks into the
+  next.
+* :func:`failing` / :func:`faulty_record` — record-level counterparts for
+  registry-driven fault paths (a kernel whose *record* is bad, rather than
+  its agent).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Union)
+
+from ..core.agents import (JnpAgent, PallasAgent, RuntimeAgent,
+                           VirtualizationAgent, XlaAgent)
+from ..core.registry import KernelRecord
+
+__all__ = ["FaultError", "FaultPlan", "FaultyAgent", "chaos", "failing",
+           "faulty_record"]
+
+_MODES = ("raise", "hang", "die")
+
+
+class FaultError(RuntimeError):
+    """Default error type raised by injected faults — distinct from real
+    runtime errors so tests can assert the injected failure (and nothing
+    else) propagated."""
+
+
+def _default_error() -> BaseException:
+    """Factory for the default injected exception."""
+    return FaultError("injected fault: device lost")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """One substrate's scripted misbehavior.
+
+    ``mode`` selects the failure family:
+
+    * ``"raise"`` — device calls ``nth`` .. ``nth + times - 1`` (1-based;
+      ``times=None`` means every call from ``nth`` on) raise ``error()``.
+      ``times`` bounds the fault window, giving flaky-then-recover.
+    * ``"hang"`` — faulting calls straggle: block for ``delay_s`` seconds
+      (or until :meth:`FaultyAgent.release`), then run the real kernel and
+      succeed.  Exercises straggler speculation.
+    * ``"die"`` — faulting calls wedge the worker until
+      :meth:`FaultyAgent.release`, then fail.  The agent stops heartbeating
+      mid-request: exercises DEAD detection, membership re-bind and queue
+      replay.
+
+    ``aliases`` restricts faults to those kernel aliases (others execute
+    normally and do not advance the call count)."""
+    platform: str = "xla"
+    mode: str = "raise"
+    nth: int = 1
+    times: Optional[int] = None
+    delay_s: float = 0.0
+    error: Callable[[], BaseException] = _default_error
+    aliases: Optional[Sequence[str]] = None
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got {self.mode!r}")
+        if self.nth < 1:
+            raise ValueError(f"nth is 1-based and must be >= 1, got {self.nth}")
+        if self.times is not None and self.times < 1:
+            raise ValueError(f"times must be >= 1 or None, got {self.times}")
+
+    def applies(self, call_index: int) -> bool:
+        """Whether the ``call_index``-th targeted device call faults."""
+        if call_index < self.nth:
+            return False
+        return self.times is None or call_index < self.nth + self.times
+
+
+# real substrate class per platform: the non-faulting path must execute
+# exactly like a healthy agent (xla still jits) so chaos runs stay
+# bit-identical to fault-free references
+_SUBSTRATES: Dict[str, type] = {"jnp": JnpAgent, "xla": XlaAgent,
+                                "pallas": PallasAgent}
+
+
+class FaultyAgent(VirtualizationAgent):
+    """A virtualization agent that executes a :class:`FaultPlan`.
+
+    Thread-safe counters (readable from the test thread while the worker
+    runs): ``calls`` counts targeted device calls, ``failures`` counts the
+    ones that actually faulted.  ``release()`` unblocks hang/die waits —
+    :func:`chaos` calls it on exit so no test leaves a wedged worker
+    behind."""
+
+    def __init__(self, plan: Optional[FaultPlan] = None, **plan_kwargs):
+        if plan is None:
+            plan = FaultPlan(**plan_kwargs)
+        elif plan_kwargs:
+            raise ValueError("pass a FaultPlan or keyword fields, not both")
+        self.plan = plan
+        # instance attr must shadow the class attr before super().__init__
+        # reads it for the default agent name
+        self.platform = plan.platform
+        super().__init__(name=f"faulty-{plan.platform}")
+        self.calls = 0
+        self.failures = 0
+        self._fault_lock = threading.Lock()
+        self._release = threading.Event()
+        self._inner = _SUBSTRATES.get(plan.platform, VirtualizationAgent)()
+
+    def release(self) -> None:
+        """Unblock every in-flight and future hang/die wait."""
+        self._release.set()
+
+    def _device_execute(self, record: KernelRecord, args, kwargs):
+        plan = self.plan
+        targeted = plan.aliases is None or record.alias in plan.aliases
+        if targeted:
+            with self._fault_lock:
+                self.calls += 1
+                n = self.calls
+            if plan.applies(n):
+                with self._fault_lock:
+                    self.failures += 1
+                if plan.mode == "raise":
+                    raise plan.error()
+                if plan.mode == "hang":
+                    # straggle, then finish correctly on the real substrate
+                    self._release.wait(plan.delay_s if plan.delay_s > 0
+                                       else None)
+                    return self._inner._device_execute(record, args, kwargs)
+                # "die": wedge mid-request until released, then fail —
+                # the stalled heartbeat is the point
+                self._release.wait()
+                raise plan.error()
+        return self._inner._device_execute(record, args, kwargs)
+
+
+@contextlib.contextmanager
+def chaos(session: RuntimeAgent, *plans: Union[FaultPlan, Dict[str, Any]],
+          clear_quarantine: bool = True
+          ) -> Iterator[Union[FaultyAgent, List[FaultyAgent]]]:
+    """Swap :class:`FaultyAgent` s into ``session`` for the block's duration.
+
+    Each plan (a :class:`FaultPlan` or a dict of its fields) replaces the
+    session agent on its platform.  Yields the single agent, or the list
+    when several plans are given.  On exit — success or test failure —
+    wedged calls are released, the original agents are re-attached (or the
+    platform detached if it had none), the fault agents' workers shut down,
+    and (by default) the scheduler's quarantine set is cleared so record
+    failures provoked here do not bias placement in later tests."""
+    if not plans:
+        raise ValueError("chaos() needs at least one FaultPlan")
+    agents = [FaultyAgent(p if isinstance(p, FaultPlan) else FaultPlan(**p))
+              for p in plans]
+    seen = [a.platform for a in agents]
+    if len(set(seen)) != len(seen):
+        raise ValueError(f"one plan per platform, got {seen}")
+    originals: Dict[str, Optional[VirtualizationAgent]] = {}
+    for fa in agents:
+        originals[fa.platform] = session.agents.get(fa.platform)
+        session.attach_agent(fa)
+    try:
+        yield agents[0] if len(agents) == 1 else agents
+    finally:
+        for fa in agents:
+            fa.release()
+        for fa in agents:
+            orig = originals.get(fa.platform)
+            if session.agents.get(fa.platform) is fa:
+                if orig is not None:
+                    session.attach_agent(orig)
+                else:
+                    session.detach_agent(fa.platform)
+            fa.shutdown(cancel_pending=True, wait=False)
+        sched = getattr(session, "scheduler", None)
+        if clear_quarantine and sched is not None:
+            sched.clear_failures()
+
+
+def failing(message: str = "injected fault",
+            exc_type: type = FaultError,
+            calls: Optional[list] = None) -> Callable[..., Any]:
+    """A kernel function that always raises ``exc_type(message)``.
+
+    Pass ``calls`` (any list) to record each invocation's positional args —
+    tests assert on attempt counts without a bespoke closure every time."""
+    def _boom(*args, **kwargs):
+        if calls is not None:
+            calls.append(args)
+        raise exc_type(message)
+    return _boom
+
+
+def faulty_record(alias: str, platform: str = "xla", priority: int = 50,
+                  message: Optional[str] = None,
+                  exc_type: type = FaultError,
+                  is_failsafe: bool = False) -> KernelRecord:
+    """A registry record whose kernel always raises — the record-level
+    counterpart of :class:`FaultyAgent`, for paths where the *record* is bad
+    (quarantine, re-placement, fail-safe ladders) rather than the agent."""
+    message = message or f"injected fault: {alias} on {platform} died"
+    return KernelRecord(alias=alias, fn=failing(message, exc_type),
+                        platform=platform, priority=priority,
+                        is_failsafe=is_failsafe)

@@ -1,3 +1,5 @@
+import os
+
 import jax
 import pytest
 
@@ -13,11 +15,12 @@ def rng():
 
 
 @pytest.fixture(autouse=True)
-def _isolated_autotune_cache(monkeypatch):
-    """Keep tests hermetic: a developer's HALO_AUTOTUNE_CACHE / HALO_TUNING_DB
-    must not leak persisted latency tables or tuned tile configs into
-    CostModelScheduler.default() instances (RuntimeAgent builds one per
-    session), which would make record selection depend on module-external
-    state."""
-    monkeypatch.delenv("HALO_AUTOTUNE_CACHE", raising=False)
-    monkeypatch.delenv("HALO_TUNING_DB", raising=False)
+def _no_ambient_halo_env(monkeypatch):
+    """Keep tests hermetic: strip every ``HALO_*`` knob from the ambient
+    environment.  A developer's HALO_AUTOTUNE_CACHE / HALO_TUNING_DB must
+    not leak persisted latency tables into CostModelScheduler.default()
+    instances, and a shell with HALO_HEALTH_MONITOR / HALO_HEARTBEAT_TIMEOUT
+    set must not silently change agent liveness behaviour under test.
+    Tests that exercise a knob set it explicitly via monkeypatch.setenv."""
+    for var in [v for v in os.environ if v.startswith("HALO_")]:
+        monkeypatch.delenv(var, raising=False)

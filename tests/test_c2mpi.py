@@ -11,6 +11,7 @@ from repro.core import (KernelAttributes, KernelRecord, KernelRegistry,
 from repro.core.compute_object import (BufferHandle, ComputeObject,
                                        as_compute_object)
 from repro.kernels import register_all
+from repro.testing.faults import FaultyAgent
 
 
 @pytest.fixture()
@@ -90,24 +91,10 @@ def test_failsafe_registry_fallback(agent, rng):
     assert rec.platform == "jnp" and rec.is_failsafe
 
 
-class _FaultyAgent(VirtualizationAgent):
-    """Substrate whose device stage always raises — simulates a lost or
-    misbehaving accelerator behind a healthy-looking agent."""
-    platform = "xla"
-
-    def __init__(self):
-        super().__init__(name="faulty-xla")
-        self.failures = 0
-
-    def _device_execute(self, record, args, kwargs):
-        self.failures += 1
-        raise RuntimeError("device lost")
-
-
 def test_execution_failure_falls_back_to_failsafe_record(agent, rng):
     """An agent raising in _device_execute re-places the request onto the
     registry fail-safe record: host code still gets the right answer."""
-    faulty = _FaultyAgent()
+    faulty = FaultyAgent(platform="xla", mode="raise")
     agent.attach_agent(faulty)            # replaces the real xla agent
     a = jax.random.normal(rng, (16, 16))
     cr = agent.claim("MMM", overrides={
@@ -122,7 +109,7 @@ def test_execution_failure_falls_back_to_failsafe_record(agent, rng):
 def test_execution_failure_quarantines_record_in_scheduler(agent, rng):
     """After one failure the scheduler stops selecting the failing record:
     later sends never touch the faulty substrate again."""
-    faulty = _FaultyAgent()
+    faulty = FaultyAgent(platform="xla", mode="raise")
     agent.attach_agent(faulty)
     a = jax.random.normal(rng, (16, 16))
     overrides = {"allowed_platforms": ["xla", "jnp"],
@@ -162,7 +149,7 @@ def test_execution_failure_error_surfaces_sync_and_async(agent):
 def test_execution_failure_engages_claim_callback_last(agent, rng):
     """Claim-level fail-safe callback engages only after every registered
     record (including the registry fail-safe) failed."""
-    faulty = _FaultyAgent()
+    faulty = FaultyAgent(platform="xla", mode="raise")
     agent.attach_agent(faulty)
 
     def bad_ref(x):

@@ -1,0 +1,212 @@
+"""Chaos suite (DESIGN.md §11): whole-system fault injection through
+:mod:`repro.testing.faults`.
+
+The headline claims under test: a device group survives a member agent
+dying *mid-solve* with bit-identical results (eager and captured paths —
+survivors absorb the dead member's ranks, so the shard layout and therefore
+the numerics never change), and a straggling attempt is speculatively
+re-executed on the next-ranked substrate with exact result parity.  Every
+wait is bounded; no test sleeps longer than a few hundred milliseconds at a
+time."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (HealthConfig, KernelRegistry, RuntimeAgent,
+                        default_manifest, halo_graph)
+from repro.kernels import register_all
+from repro.testing.faults import FaultPlan, chaos
+
+N = 32
+ITERS = 4
+GROUP = ("xla", "jnp")          # bit-reproducible member pair on CPU
+
+
+def _session():
+    registry = KernelRegistry()
+    register_all(registry)
+    return RuntimeAgent(registry=registry, manifest=default_manifest())
+
+
+def _problem(n=N):
+    a = (jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
+         + n * jnp.eye(n, dtype=jnp.float32))          # diagonally dominant
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+    return a, b, jnp.diagonal(a)
+
+
+def _wait_until(cond, timeout=5.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while not cond():
+        assert time.monotonic() < deadline, f"{what} not reached in time"
+        time.sleep(0.005)
+
+
+def _eager_jacobi(comm, a, b, d, iters=ITERS):
+    """Blocking-verb Jacobi (examples/collective_jacobi.py, shrunk)."""
+    A, B, D = comm.scatter(a), comm.scatter(b), comm.scatter(d)
+    X = comm.scatter(jnp.zeros_like(b))
+    res = 0.0
+    for _ in range(iters):
+        xs = comm.allgather(X)
+        P = comm.map("MVM", list(zip(A, xs)))
+        T = comm.map("EWSUB", list(zip(B, P)))
+        U = comm.map("EWMM", list(zip(D, X)))
+        V = comm.map("EWADD", list(zip(T, U)))
+        Xn = comm.map("EWMD", list(zip(V, D)))
+        E = comm.map("EWSUB", list(zip(Xn, X)))
+        S = comm.map("VDP", list(zip(E, E)))
+        res = float(comm.allreduce(S, op="sum")[0])
+        X = Xn
+    return np.asarray(comm.gather(X)), res
+
+
+def _captured_jacobi(comm, a, b, d, iters=ITERS):
+    """The same loop with each iteration captured as one execution graph."""
+    A, B, D = comm.scatter(a), comm.scatter(b), comm.scatter(d)
+    X = comm.scatter(jnp.zeros_like(b))
+    res = 0.0
+    for _ in range(iters):
+        with halo_graph(session=comm.session):
+            xs = comm.iallgather(X)
+            P = comm.imap("MVM", list(zip(A, xs)))
+            T = comm.imap("EWSUB", list(zip(B, P)))
+            U = comm.imap("EWMM", list(zip(D, X)))
+            V = comm.imap("EWADD", list(zip(T, U)))
+            Xn = comm.imap("EWMD", list(zip(V, D)))
+            E = comm.imap("EWSUB", list(zip(Xn, X)))
+            S = comm.imap("VDP", list(zip(E, E)))
+            R = comm.iallreduce(S, op="sum")
+        X = [n.result(timeout=60) for n in Xn]
+        res = float(R[0].result(timeout=60))
+    return np.asarray(comm.gather(X)), res
+
+
+def _chaos_jacobi(run, nth):
+    """Fault-free reference vs a run where the xla member dies mid-solve on
+    its ``nth`` device call; returns everything the asserts need."""
+    a, b, d = _problem()
+    ref_sess = _session()
+    try:
+        x_ref, res_ref = run(ref_sess.comm_split(list(GROUP)), a, b, d)
+    finally:
+        ref_sess.finalize()
+
+    sess = _session()
+    try:
+        sess.enable_health_monitor(
+            config=HealthConfig(heartbeat_timeout=0.25, poll_interval=0.02,
+                                straggler_multiple=0.0), start=True)
+        comm = sess.comm_split(list(GROUP))
+        with chaos(sess, FaultPlan(platform="xla", mode="die", nth=nth)) as fa:
+            x, res = run(comm, a, b, d)
+        return x, res, x_ref, res_ref, comm, fa
+    finally:
+        sess.finalize()
+
+
+def test_jacobi_survives_member_death_eager():
+    x, res, x_ref, res_ref, comm, fa = _chaos_jacobi(_eager_jacobi, nth=12)
+    assert fa.failures >= 1                    # the wedge actually happened
+    assert "xla" not in comm.platforms         # ranks re-bound onto survivors
+    assert comm.size == len(GROUP)             # logical size unchanged
+    assert comm.epoch >= 1
+    np.testing.assert_array_equal(x, x_ref)    # bit-identical solve
+    np.testing.assert_allclose(res, res_ref, rtol=1e-5)
+
+
+def test_jacobi_survives_member_death_captured():
+    x, res, x_ref, res_ref, comm, fa = _chaos_jacobi(_captured_jacobi, nth=15)
+    assert fa.failures >= 1
+    assert "xla" not in comm.platforms
+    assert comm.size == len(GROUP)
+    np.testing.assert_array_equal(x, x_ref)
+    np.testing.assert_allclose(res, res_ref, rtol=1e-5)
+
+
+def test_straggler_speculation_result_parity():
+    """A hung (not failed) attempt is speculatively re-executed on the
+    next-ranked substrate; the backup's result is bit-identical to a plain
+    dispatch on that substrate, and the straggler's late result is
+    discarded (first completion wins)."""
+    a = jax.random.normal(jax.random.PRNGKey(2), (16, 16))
+    ref_sess = _session()
+    try:
+        cr = ref_sess.claim("MMM", overrides={
+            "allowed_platforms": ["jnp"], "platform_preference": ["jnp"]})
+        ref_sess.send((a, a), cr)
+        ref = np.asarray(ref_sess.recv(cr))
+    finally:
+        ref_sess.finalize()
+
+    sess = _session()
+    try:
+        sess.enable_health_monitor(
+            config=HealthConfig(heartbeat_timeout=60.0, straggler_multiple=1.0,
+                                straggler_min_s=0.05), start=False)
+        with chaos(sess, FaultPlan(platform="xla", mode="hang",
+                                   delay_s=60.0)) as fa:
+            cr = sess.claim("MMM", overrides={
+                "allowed_platforms": ["xla", "jnp"],
+                "platform_preference": ["xla", "jnp"]})
+            with halo_graph(session=sess):
+                node = sess.isend((a, a), cr)
+            _wait_until(lambda: fa.failures >= 1, what="straggler wedged")
+            time.sleep(0.06)                   # past the speculation floor
+            sess.health.check()
+            out = np.asarray(node.result(timeout=30))
+        assert node.attempts[0] == "xla"
+        assert any(p.endswith("+spec") for p in node.attempts)
+        assert node.platform == "jnp"          # the backup won the race
+        np.testing.assert_array_equal(out, ref)
+    finally:
+        sess.finalize()
+
+
+def test_chaos_context_restores_session():
+    """chaos() leaves no residue: original agents back in place, quarantine
+    cleared, and the session fully usable afterwards."""
+    sess = _session()
+    try:
+        original = sess.agents["xla"]
+        with chaos(sess, FaultPlan(platform="xla", mode="raise")) as fa:
+            assert sess.agents["xla"] is fa
+            cr = sess.claim("MMM", overrides={
+                "allowed_platforms": ["xla", "jnp"],
+                "platform_preference": ["xla", "jnp"]})
+            sess.send((jnp.eye(4), jnp.eye(4)), cr)
+            np.testing.assert_allclose(np.asarray(sess.recv(cr)), np.eye(4),
+                                       rtol=1e-5)
+            assert fa.failures == 1
+        assert sess.agents["xla"] is original
+        xla_recs = [r for r in sess.registry.records("MMM")
+                    if r.platform == "xla"]
+        assert all(not sess.scheduler.is_failed(r) for r in xla_recs)
+        cr2 = sess.claim("MMM", overrides={
+            "allowed_platforms": ["xla"], "platform_preference": ["xla"]})
+        sess.send((jnp.eye(4), jnp.eye(4)), cr2)   # healthy xla again
+        np.testing.assert_allclose(np.asarray(sess.recv(cr2)), np.eye(4),
+                                   rtol=1e-5)
+    finally:
+        sess.finalize()
+
+
+def test_flaky_member_recovers_without_membership_change():
+    """A raise-then-recover member (bounded fault window) is quarantined at
+    the record level but never declared DEAD: the comm keeps its binding."""
+    sess = _session()
+    try:
+        comm = sess.comm_split(list(GROUP))
+        with chaos(sess, FaultPlan(platform="xla", mode="raise", nth=1,
+                                   times=1)) as fa:
+            a, b = jnp.arange(4.0), jnp.ones(4)
+            outs = comm.allreduce([a, b], op="sum")
+            np.testing.assert_array_equal(np.asarray(outs[0]),
+                                          np.asarray(a) + np.asarray(b))
+            assert fa.failures == 1
+        assert comm.platforms == GROUP          # membership untouched
+        assert comm.epoch == 0
+    finally:
+        sess.finalize()

@@ -12,6 +12,7 @@ from repro.core import (CostModelScheduler, GraphError, KernelRecord,
                         halo_graph)
 from repro.distributed.sharding import partition_slices
 from repro.kernels import register_all
+from repro.testing.faults import faulty_record
 
 
 @pytest.fixture()
@@ -148,9 +149,9 @@ def test_member_stages_pin_to_member_agents(comm):
     for platform, va in comm.session.agents.items():
         orig = va.submit
 
-        def spy(fn, future=None, after=None, _p=platform, _o=orig):
+        def spy(fn, future=None, _p=platform, _o=orig, **kw):
             submitted.append(_p)
-            return _o(fn, future=future, after=after)
+            return _o(fn, future=future, **kw)
 
         va.submit = spy
     nodes = comm.ibcast(_x())
@@ -268,28 +269,17 @@ def test_captured_multi_iteration_allreduce_jacobi_parity(comm):
 
 
 # -- failure paths ------------------------------------------------------------
-class _Boom(RuntimeError):
-    pass
-
-
 def _faulty_registry():
     """EWADD with a faulty xla record and a correct jnp fail-safe, plus a
     per-member PART compute alias (faulty on xla too)."""
     reg = KernelRegistry()
     register_all(reg)
-
-    def ewadd_boom(a, b):
-        raise _Boom("xla combine died")
-
-    def part_boom(a):
-        raise _Boom("xla member compute died")
-
     reg.deregister("EWADD", "xla")
     reg.deregister("EWADD", "pallas")
-    reg.register(KernelRecord(alias="EWADD", fn=ewadd_boom, platform="xla",
-                              priority=50))
-    reg.register(KernelRecord(alias="PART", fn=part_boom, platform="xla",
-                              priority=50))
+    reg.register(faulty_record("EWADD", platform="xla",
+                               message="xla combine died"))
+    reg.register(faulty_record("PART", platform="xla",
+                               message="xla member compute died"))
     reg.register(KernelRecord(alias="PART", fn=lambda a: a * 3.0,
                               platform="jnp", is_failsafe=True))
     return reg

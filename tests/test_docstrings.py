@@ -17,6 +17,7 @@ MODULES = [
     "repro.core.registry",
     "repro.core.scheduler",
     "repro.core.tuning",
+    "repro.testing.faults",
 ]
 
 

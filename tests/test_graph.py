@@ -14,6 +14,7 @@ from repro.core import (CostModelScheduler, GraphDependencyError, GraphError,
                         RuntimeAgent, default_manifest, halo_graph)
 from repro.core.graph import GraphNode
 from repro.kernels import register_all
+from repro.testing.faults import failing, faulty_record
 
 
 @pytest.fixture()
@@ -77,9 +78,9 @@ def test_independent_branches_run_on_distinct_agents(agent):
     for platform, va in agent.agents.items():
         orig = va.submit
 
-        def spy(fn, future=None, after=None, _p=platform, _o=orig):
+        def spy(fn, future=None, _p=platform, _o=orig, **kw):
             submitted.append(_p)
-            return _o(fn, future=future, after=after)
+            return _o(fn, future=future, **kw)
 
         va.submit = spy
     with halo_graph(session=agent) as g:
@@ -128,21 +129,11 @@ def test_transfer_penalty_keeps_chains_on_one_agent():
 def test_node_failure_replaces_onto_next_record():
     """A node whose record raises re-places onto the next feasible record;
     the failing record is quarantined; downstream nodes still complete."""
-    calls = []
-
-    def bad(a):
-        calls.append("xla")
-        raise RuntimeError("substrate lost")
-
-    def good(a):
-        calls.append("jnp")
-        return a + 1.0
-
     reg = KernelRegistry()
-    xla_rec = reg.register(KernelRecord(alias="K", fn=bad, platform="xla",
-                                        priority=10))
-    reg.register(KernelRecord(alias="K", fn=good, platform="jnp",
-                              is_failsafe=True))
+    xla_rec = reg.register(faulty_record("K", platform="xla", priority=10,
+                                         message="substrate lost"))
+    reg.register(KernelRecord(alias="K", fn=lambda a: a + 1.0,
+                              platform="jnp", is_failsafe=True))
     sched = CostModelScheduler()
     agent = RuntimeAgent(registry=reg, manifest=default_manifest(),
                          scheduler=sched)
@@ -161,17 +152,12 @@ def test_node_failure_replaces_onto_next_record():
 def test_replacement_exhaustion_surfaces_original_error():
     """When every re-placement also fails, the *first* attempt's error is
     what surfaces (later errors are symptoms of an already-degraded node)."""
-    def bad_xla(a):
-        raise RuntimeError("device lost")
-
-    def bad_jnp(a):
-        raise TypeError("oracle also broken")
-
     reg = KernelRegistry()
-    reg.register(KernelRecord(alias="K", fn=bad_xla, platform="xla",
-                              priority=10))
-    reg.register(KernelRecord(alias="K", fn=bad_jnp, platform="jnp",
-                              is_failsafe=True))
+    reg.register(faulty_record("K", platform="xla", priority=10,
+                               message="device lost"))
+    reg.register(faulty_record("K", platform="jnp", is_failsafe=True,
+                               exc_type=TypeError,
+                               message="oracle also broken"))
     agent = RuntimeAgent(registry=reg, manifest=default_manifest())
     with halo_graph(session=agent) as g:
         node = agent.isend((jnp.zeros(2),), agent.claim("K"))
@@ -202,12 +188,10 @@ def test_per_node_platform_preference_respected():
 
 
 def test_node_failure_without_fallback_cascades_to_descendants():
-    def boom(a):
-        raise ValueError("kernel exploded")
-
     reg = KernelRegistry()
-    reg.register(KernelRecord(alias="BOOM", fn=boom, platform="jnp",
-                              is_failsafe=True))
+    reg.register(KernelRecord(alias="BOOM",
+                              fn=failing("kernel exploded", ValueError),
+                              platform="jnp", is_failsafe=True))
     agent = RuntimeAgent(registry=reg, manifest=default_manifest())
     cr1, cr2 = agent.claim("BOOM"), agent.claim("BOOM")
     with halo_graph(session=agent) as g:

@@ -1,0 +1,207 @@
+"""Agent liveness (DESIGN.md §11): heartbeat detection, DEAD-agent queue
+replay, health-config knobs, and serving-scheduler lane failure.
+
+Every test drives ``HealthMonitor.check(now=...)`` synchronously with an
+injected clock, so state transitions are deterministic and nothing sleeps
+for more than a few milliseconds at a time."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AgentDeadError, AgentState, HealthConfig,
+                        HealthMonitor, KernelRegistry, RuntimeAgent,
+                        default_manifest)
+from repro.kernels import register_all
+from repro.serve.engine import Request, StepScheduler, _Lane
+from repro.testing.faults import FaultPlan, chaos
+
+
+@pytest.fixture()
+def session():
+    registry = KernelRegistry()
+    register_all(registry)
+    s = RuntimeAgent(registry=registry, manifest=default_manifest())
+    yield s
+    s.finalize()
+
+
+def _wait_until(cond, timeout=5.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while not cond():
+        assert time.monotonic() < deadline, f"{what} not reached in time"
+        time.sleep(0.005)
+
+
+# -- config knobs -------------------------------------------------------------
+def test_health_config_from_env(monkeypatch):
+    monkeypatch.setenv("HALO_HEARTBEAT_TIMEOUT", "2.5")
+    monkeypatch.setenv("HALO_HEALTH_POLL", "0.5")
+    monkeypatch.setenv("HALO_STRAGGLER_MULTIPLE", "3")
+    monkeypatch.setenv("HALO_STRAGGLER_MIN", "0.125")
+    cfg = HealthConfig.from_env()
+    assert cfg.heartbeat_timeout == 2.5
+    assert cfg.poll_interval == 0.5 and cfg.effective_poll == 0.5
+    assert cfg.straggler_multiple == 3.0
+    assert cfg.straggler_min_s == 0.125
+    # explicit keyword overrides beat the environment
+    assert HealthConfig.from_env(heartbeat_timeout=9.0).heartbeat_timeout == 9.0
+    # junk values fall back to defaults instead of crashing startup
+    monkeypatch.setenv("HALO_HEARTBEAT_TIMEOUT", "banana")
+    assert HealthConfig.from_env().heartbeat_timeout == 30.0
+
+
+def test_effective_poll_defaults_to_quarter_timeout():
+    assert HealthConfig(heartbeat_timeout=8.0).effective_poll == 2.0
+    assert HealthConfig(heartbeat_timeout=8.0,
+                        poll_interval=0.1).effective_poll == 0.1
+
+
+def test_env_auto_enables_monitor(monkeypatch):
+    monkeypatch.setenv("HALO_HEALTH_MONITOR", "1")
+    registry = KernelRegistry()
+    register_all(registry)
+    s = RuntimeAgent(registry=registry, manifest=default_manifest())
+    try:
+        assert s.health is not None
+    finally:
+        s.finalize()
+
+
+# -- heartbeat classification -------------------------------------------------
+def test_idle_agents_stay_healthy(session):
+    mon = session.enable_health_monitor(
+        config=HealthConfig(heartbeat_timeout=0.2), start=False)
+    # far-future sweep: idle targets never degrade, however stale their clock
+    states = mon.check(now=time.monotonic() + 1e6)
+    assert set(states.values()) == {AgentState.HEALTHY}
+
+
+def test_completed_work_advances_heartbeat(session):
+    jnp_agent = session.agents["jnp"]
+    beats0, _, _ = jnp_agent.heartbeat()
+    cr = session.claim("MMM", overrides={"allowed_platforms": ["jnp"],
+                                         "platform_preference": ["jnp"]})
+    session.send((jnp.eye(4), jnp.eye(4)), cr)
+    session.recv(cr)
+    beats1, busy, _ = jnp_agent.heartbeat()
+    assert beats1 > beats0
+    _wait_until(lambda: not jnp_agent.heartbeat()[1], what="agent idle")
+
+
+def test_hung_worker_degrades_then_dies_and_replays(session):
+    """The full tentpole arc, clock-driven: a wedged worker is DEGRADED at
+    half the timeout, DEAD at the timeout, and its in-flight request is
+    replayed onto the fail-safe agent with the correct result."""
+    mon = session.enable_health_monitor(
+        config=HealthConfig(heartbeat_timeout=0.2, degraded_fraction=0.5),
+        start=False)
+    a = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+    with chaos(session, FaultPlan(platform="xla", mode="die")) as faulty:
+        cr = session.claim("MMM", overrides={
+            "allowed_platforms": ["xla", "jnp"],
+            "platform_preference": ["xla", "jnp"]})
+        fut = session.isend((a, a), cr, mailbox=False)
+        _wait_until(lambda: faulty.failures >= 1, what="worker wedged")
+        _, busy, last = faulty.heartbeat()
+        assert busy
+        assert mon.check(now=last + 0.05)[faulty.name] == AgentState.HEALTHY
+        assert mon.check(now=last + 0.11)[faulty.name] == AgentState.DEGRADED
+        assert mon.check(now=last + 0.21)[faulty.name] == AgentState.DEAD
+        # DEAD is sticky and the transition already healed the session:
+        assert faulty.dead and not faulty.available()
+        with pytest.raises(AgentDeadError):
+            faulty.submit(lambda: None)
+        out = fut.result(timeout=30)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a) @
+                                   np.asarray(a), rtol=1e-4, atol=1e-4)
+
+
+def test_dead_agent_replays_whole_queue(session):
+    """In-flight AND still-queued requests of a dead agent all complete on
+    the fail-safe substrate."""
+    mats = [jax.random.normal(jax.random.PRNGKey(i), (12, 12))
+            for i in range(3)]
+    with chaos(session, FaultPlan(platform="xla", mode="die")) as faulty:
+        cr = session.claim("MMM", overrides={
+            "allowed_platforms": ["xla", "jnp"],
+            "platform_preference": ["xla", "jnp"]})
+        futs = [session.isend((m, m), cr, mailbox=False) for m in mats]
+        _wait_until(lambda: faulty.failures >= 1, what="worker wedged")
+        replayed = session.handle_dead_agent(faulty, reason="test kill")
+        assert replayed == 3
+        for m, f in zip(mats, futs):
+            np.testing.assert_allclose(np.asarray(f.result(timeout=30)),
+                                       np.asarray(m) @ np.asarray(m),
+                                       rtol=1e-4, atol=1e-4)
+        assert faulty.dead
+        # idempotent: a second declaration finds nothing left to recover
+        assert session.handle_dead_agent(faulty) == 0
+
+
+def test_reregistration_resets_dead_state(session):
+    mon = session.enable_health_monitor(
+        config=HealthConfig(heartbeat_timeout=0.2), start=False)
+    agent = session.agents["jnp"]
+    mon.mark_dead(agent)
+    assert mon.state(agent) == AgentState.DEAD
+    mon.register(agent)           # explicit recovery path
+    assert mon.state(agent) == AgentState.HEALTHY
+
+
+def test_watch_fires_once_and_unwatch_cancels():
+    mon = HealthMonitor(HealthConfig(heartbeat_timeout=1.0))
+    fired = []
+    now = time.monotonic()
+    tok1 = mon.watch(now + 0.05, lambda: fired.append(1))
+    tok2 = mon.watch(now + 0.05, lambda: fired.append(2))
+    mon.unwatch(tok2)
+    mon.check(now=now)            # before the deadline: nothing fires
+    assert fired == []
+    mon.check(now=now + 0.1)
+    mon.check(now=now + 0.2)      # one-shot: no refire
+    assert fired == [1]
+    assert tok1 != tok2
+
+
+# -- serving lane failure -----------------------------------------------------
+class _StubEngine:
+    """Engine stand-in: the scheduler only reads slots/max_len until a step
+    actually runs, which these tests never do (the point is the hang)."""
+    slots = 2
+    max_len = 64
+
+
+def test_slot_scheduler_heartbeat_and_dead_failure():
+    """A serving scheduler nobody is stepping (or whose stepper is wedged in
+    a device call) goes DEAD, and every queued request and occupied lane
+    fails with AgentDeadError instead of blocking its client forever."""
+    sched = StepScheduler(_StubEngine())
+    mon = HealthMonitor(HealthConfig(heartbeat_timeout=0.2))
+    sched.attach_health(mon)
+    queued = sched.submit([1, 2, 3], max_new=4)
+    from repro.core import HaloFuture
+    lane_fut = HaloFuture(uid=99, alias="generate")
+    lane_req = Request(99, [1, 2], 8, future=lane_fut)
+    with sched._cond:
+        sched._lanes[0] = _Lane(lane_req, pos=2, last_tok=1, tokens=[1])
+    beats, busy, last = sched.heartbeat()
+    assert busy
+    assert mon.check(now=last + 0.05)[sched.name] == AgentState.HEALTHY
+    assert mon.check(now=last + 0.3)[sched.name] == AgentState.DEAD
+    with pytest.raises(AgentDeadError):
+        queued.result(timeout=5)
+    with pytest.raises(AgentDeadError):
+        lane_fut.result(timeout=5)
+    assert sched.pending() == 0 and sched.active() == 0
+
+
+def test_slot_scheduler_step_advances_beat():
+    sched = StepScheduler(_StubEngine())
+    beats0, busy, _ = sched.heartbeat()
+    assert not busy
+    assert sched.step() is False        # idle step: no work, still beats
+    beats1, _, _ = sched.heartbeat()
+    assert beats1 > beats0
