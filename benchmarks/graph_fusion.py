@@ -1,0 +1,243 @@
+"""Graph fusion + compiled replay vs serial/unfused dispatch (DESIGN.md §12).
+
+Two steady-state chain workloads — the shapes the fusion pass exists for:
+
+* **decode** — an L-layer decode step, each layer MVM → EWADD → RMSNORM on a
+  ``(D,)`` activation: one 3·L-node linear chain per step;
+* **jacobi** — a ``SWEEPS``-deep Jacobi iteration on an ``(N, N)`` system:
+  one JS node per sweep, chained through ``x``.
+
+Each workload is driven three ways:
+
+* **serial** — blocking send/recv per node (the pre-graph host program);
+* **graph**  — a fresh ``halo_graph`` capture + launch per step (DESIGN.md
+  §8: overlap, but re-capture + re-placement every iteration);
+* **fused replay** — ``compile()`` once (fusion pass + placement plan),
+  then ``CompiledGraph.replay()`` per step: no re-capture, no re-scoring,
+  one fused dispatch per chain.
+
+An autotune sweep feeds the scheduler's table first, then the table is
+frozen (sweep-then-freeze) so placement never oscillates mid-measurement.
+Wall times are best-of-``REPEATS``; capture+compile is timed once and
+reported amortized over ``STEADY`` replays.  Results (and the
+``*_vs_*_x`` ratios the CI gate tracks) go to ``BENCH_fusion.json`` —
+``BENCH_smoke_fusion.json`` with ``--smoke``.
+
+Run:  PYTHONPATH=src python -m benchmarks.graph_fusion [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _params(smoke: bool) -> dict:
+    return {
+        "d": 128 if smoke else 256,       # decode activation width
+        "layers": 4 if smoke else 8,      # decode depth (3 nodes per layer)
+        "n": 128 if smoke else 256,       # jacobi system size
+        "sweeps": 12 if smoke else 24,    # jacobi chain depth
+        "repeats": 5 if smoke else 7,
+        # steady-state loop length amortizing one capture+compile (a decode
+        # loop runs one replay per generated token)
+        "steady": 256 if smoke else 1024,
+    }
+
+
+def _workload(key, p) -> dict:
+    kw, kb, ka, kv = jax.random.split(key, 4)
+    d, n = p["d"], p["n"]
+    return {
+        "W": [jax.random.normal(jax.random.fold_in(kw, i), (d, d),
+                                jnp.float32) / np.sqrt(d)
+              for i in range(p["layers"])],
+        "bias": [0.1 * jax.random.normal(jax.random.fold_in(kb, i), (d,),
+                                         jnp.float32)
+                 for i in range(p["layers"])],
+        "gamma": jnp.ones((d,), jnp.float32),
+        "x": jax.random.normal(kv, (d,), jnp.float32),
+        "A": (jax.random.normal(ka, (n, n), jnp.float32) + n * jnp.eye(n)),
+        "b": jax.random.normal(kv, (n,), jnp.float32),
+        "x0": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def _decode_nodes(p, w, send):
+    x = w["x"]
+    for i in range(p["layers"]):
+        x = send("MVM", (w["W"][i], x))
+        x = send("EWADD", (x, w["bias"][i]))
+        x = send("RMSNORM", (x, w["gamma"]))
+    return x
+
+
+def _jacobi_nodes(p, w, send):
+    x = w["x0"]
+    for _ in range(p["sweeps"]):
+        x = send("JS", (w["A"], x, w["b"]))
+    return x
+
+
+_CHAINS = {"decode": _decode_nodes, "jacobi": _jacobi_nodes}
+
+
+def _serial_pass(session, cr, p, w, which):
+    return _CHAINS[which](
+        p, w, lambda al, payload:
+        session.isend(payload, cr[al], mailbox=False).result(120))
+
+
+def _graph_pass(session, cr, p, w, which):
+    from repro.core import halo_graph
+    with halo_graph(session=session) as g:
+        _CHAINS[which](p, w, lambda al, payload:
+                       session.isend(payload, cr[al]))
+    return g.wait(timeout=300)[-1]
+
+
+def _capture(session, cr, p, w, which):
+    from repro.core import halo_graph
+    with halo_graph(session=session, launch=False) as g:
+        _CHAINS[which](p, w, lambda al, payload:
+                       session.isend(payload, cr[al]))
+    return g
+
+
+def _best_of(fn, repeats):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _autotune_sweep(session, p, w, keep=2) -> None:
+    """Sweep-then-freeze, part 1: time every feasible member record per
+    workload signature so placement (and the fused records' sum-of-parts
+    estimates) score measured-vs-measured from the first timed pass."""
+    from repro.core import abstract_signature
+    jobs = {
+        "MVM": (w["W"][0], w["x"]),
+        "EWADD": (w["x"], w["bias"][0]),
+        "RMSNORM": (w["x"], w["gamma"]),
+        "JS": (w["A"], w["x0"], w["b"]),
+    }
+    sched = session.scheduler
+    for alias, args in jobs.items():
+        sig = abstract_signature(args)
+        for rec in session.registry.records(alias):
+            agent = session.agents.get(rec.platform)
+            if agent is None or not agent.available() \
+                    or not rec.feasible(*args):
+                continue
+            for _ in range(keep + 1):
+                t0 = time.perf_counter()
+                out = agent.execute(rec, *args)
+                jax.block_until_ready(out)
+                if sched is not None:
+                    sched.observe(rec, sig, time.perf_counter() - t0)
+
+
+def _bench_chain(session, cr, p, w, which) -> dict:
+    serial_ref = np.asarray(jax.block_until_ready(
+        _serial_pass(session, cr, p, w, which)))
+
+    # capture + fusion pass + placement plan, timed once (the cost replay
+    # amortizes); warm replay, then check parity.  The serial reference
+    # places each member freely (post-sweep it may mix substrates), so this
+    # is a cross-substrate allclose — the bit-exactness guarantee (fused ==
+    # serial *on the same substrate*) is pinned down in tests/test_fusion.py
+    t0 = time.perf_counter()
+    cg = _capture(session, cr, p, w, which).compile()
+    capture_s = time.perf_counter() - t0
+    out = cg.replay(timeout=300)[-1]
+    np.testing.assert_allclose(np.asarray(out), serial_ref,
+                               rtol=1e-4, atol=1e-4)
+    _graph_pass(session, cr, p, w, which)        # warm the unfused path too
+
+    serial_s = _best_of(lambda: _serial_pass(session, cr, p, w, which),
+                        p["repeats"])
+    graph_s = _best_of(lambda: _graph_pass(session, cr, p, w, which),
+                       p["repeats"])
+    replay_s = _best_of(lambda: cg.replay(timeout=300)[-1], p["repeats"])
+
+    st = cg.stats
+    amort_pct = capture_s / max(p["steady"] * replay_s, 1e-9) * 100.0
+    amort_5pct_steps = int(np.ceil(capture_s / max(0.05 * replay_s, 1e-9)))
+    return {
+        "captured_nodes": st["captured_nodes"],
+        "fused_nodes": st["fused_nodes"],
+        "intermediates_eliminated": st["intermediates_eliminated"],
+        "serial_s": round(serial_s, 6),
+        "graph_s": round(graph_s, 6),
+        "fused_replay_s": round(replay_s, 6),
+        "capture_compile_s": round(capture_s, 6),
+        "capture_amort_pct": round(amort_pct, 2),
+        "amort_5pct_steps": amort_5pct_steps,
+        "steady_replays": p["steady"],
+        "steady_scored_placements": st["placements_scored_last"],
+        "steady_pinned_placements": st["placements_pinned_last"],
+        "fused_replay_vs_serial_x": round(serial_s / max(replay_s, 1e-9), 3),
+        "fused_replay_vs_graph_x": round(graph_s / max(replay_s, 1e-9), 3),
+    }
+
+
+def main(smoke: bool = False) -> None:
+    from repro.core import MPIX_Initialize, halo_session
+
+    MPIX_Initialize()
+    session = halo_session()
+    p = _params(smoke)
+    w = _workload(jax.random.PRNGKey(0), p)
+    cr = {al: session.claim(al) for al in ("MVM", "EWADD", "RMSNORM", "JS")}
+
+    _autotune_sweep(session, p, w)
+    if session.scheduler is not None:
+        # sweep-then-freeze, part 2: no mid-measurement re-sampling — a
+        # latency observed under load would oscillate placement
+        session.scheduler.sample_every = 10 ** 9
+        session.scheduler.min_samples = 0
+
+    results = {"smoke": smoke, **p}
+    for which in ("decode", "jacobi"):
+        results[which] = _bench_chain(session, cr, p, w, which)
+
+    out_path = ROOT / ("BENCH_smoke_fusion.json" if smoke
+                       else "BENCH_fusion.json")
+    out_path.write_text(json.dumps(results, indent=1))
+
+    print("# === graph fusion: serial vs unfused graph vs fused replay ===")
+    print("name,us_per_call,derived")
+    for which in ("decode", "jacobi"):
+        r = results[which]
+        nodes = r["captured_nodes"]
+        print(f"serial/{which},{r['serial_s'] / nodes * 1e6:.1f},"
+              f"nodes={nodes}")
+        print(f"graph/{which},{r['graph_s'] / nodes * 1e6:.1f},"
+              f"fused_replay_vs_graph_x={r['fused_replay_vs_graph_x']}")
+        print(f"fused_replay/{which},{r['fused_replay_s'] / nodes * 1e6:.1f},"
+              f"fused_replay_vs_serial_x={r['fused_replay_vs_serial_x']}")
+        print(f"# {which}: {nodes} node(s) -> "
+              f"{nodes - r['intermediates_eliminated']} "
+              f"({r['fused_nodes']} fused chain(s)), steady-state scored "
+              f"placements = {r['steady_scored_placements']}, "
+              f"capture amortized to {r['capture_amort_pct']}% of "
+              f"{r['steady_replays']} replays")
+    print(f"# wrote {out_path.name}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes/repeats; writes BENCH_smoke_fusion")
+    main(smoke=ap.parse_args().smoke)

@@ -146,10 +146,16 @@ def _collect_ratios(obj, path: str, out: dict) -> None:
             out[path] = float(obj)
 
 
-def summarize(root: Path = ROOT) -> dict:
+def summarize(root: Path = ROOT, crashed=(), smoke: bool = False) -> dict:
     """Fold every BENCH_*.json into BENCH_summary.json (best ratio each).
 
     Unreadable artifacts are recorded, not fatal; returns the summary dict.
+
+    ``crashed`` names sections that raised this run.  Each gets a stub
+    entry with **empty** ratios — overwriting whatever a *stale* artifact
+    from an earlier run folded in — so ``check_regression`` reports its
+    baseline keys as *missing* instead of silently gating last week's
+    numbers (``smoke`` selects the ``BENCH_smoke_*`` stem).
     """
     summary = {}
     for p in sorted(root.glob("BENCH_*.json")):
@@ -169,6 +175,10 @@ def summarize(root: Path = ROOT) -> dict:
             "best_ratio_field": best[0] if best else None,
             "ratios": ratios,
         }
+    for name in crashed:
+        stem = f"BENCH_smoke_{name}" if smoke else f"BENCH_{name}"
+        summary[stem] = {"file": f"{stem}.json", "error": "crashed",
+                         "ratios": {}}
     out = root / "BENCH_summary.json"
     out.write_text(json.dumps(summary, indent=1, sort_keys=True))
     _section(f"summary: wrote {out}")
@@ -203,6 +213,11 @@ def _tuning(smoke: bool = False):
     tuning_main(smoke=smoke)
 
 
+def _fusion(smoke: bool = False):
+    from .graph_fusion import main as fusion_main
+    fusion_main(smoke=smoke)
+
+
 #: name -> full-pass section runner, in execution order
 SECTIONS = {
     "tables": _paper_tables,
@@ -212,6 +227,7 @@ SECTIONS = {
     "collective": _collective,
     "serve": _serve,
     "tuning": _tuning,
+    "fusion": _fusion,
     "microbench": _model_microbench,
 }
 
@@ -219,6 +235,7 @@ SECTIONS = {
 SMOKE_SECTIONS = {
     "collective": lambda: _collective(smoke=True),
     "tuning": lambda: _tuning(smoke=True),
+    "fusion": lambda: _fusion(smoke=True),
 }
 
 
@@ -245,7 +262,7 @@ def main(argv=None) -> int:
     failures: list = []
     for name, fn in table.items():
         _run_section(name, fn, failures)
-    summarize()
+    summarize(crashed=failures, smoke=args.smoke)
     if failures:
         _section(f"FAILED sections: {', '.join(failures)}")
         return 1

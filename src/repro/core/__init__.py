@@ -14,6 +14,8 @@ The paper's contribution, as a composable library:
   virtualization agents (DESIGN.md §10)
 * :mod:`repro.core.graph`          — execution graphs: DAG capture, cost-model
   placement, cross-substrate overlap (DESIGN.md §8)
+* :mod:`repro.core.fusion`         — graph-level kernel fusion + replayable
+  compiled graphs (DESIGN.md §12)
 * :mod:`repro.core.portability`    — performance-portability metrics (§VI)
 """
 from .compute_object import BufferHandle, ComputeObject, as_compute_object
@@ -39,6 +41,8 @@ from .c2mpi import (MPIX_Allgather, MPIX_Allreduce, MPIX_Bcast, MPIX_Claim,
 from .collective import HaloComm, REDUCE_OPS
 from .graph import (ExecutionGraph, GraphDependencyError, GraphError,
                     GraphNode, halo_graph)
+from .fusion import (CompiledGraph, FusionRule, MemberSpec, compile_graph,
+                     find_chains, fusion_rule, register_fusible)
 from .portability import (KernelReport, Timing, overhead_ratio,
                           performance_penalty, portability_score, time_fn)
 
@@ -65,6 +69,8 @@ __all__ = [
     "HaloComm", "REDUCE_OPS",
     "ExecutionGraph", "GraphDependencyError", "GraphError", "GraphNode",
     "halo_graph",
+    "CompiledGraph", "FusionRule", "MemberSpec", "compile_graph",
+    "find_chains", "fusion_rule", "register_fusible",
     "KernelReport", "Timing", "overhead_ratio", "performance_penalty",
     "portability_score", "time_fn",
 ]

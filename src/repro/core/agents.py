@@ -739,6 +739,10 @@ class RuntimeAgent:
         self._crs: Dict[int, ChildRank] = {}
         self._comms: List[Any] = []                  # live HaloComm handles
         self._buffer_table: Dict[int, Any] = {}      # BufferHandle.uid -> array
+        #: CompiledGraph LRU (DESIGN.md §12): cache key -> frozen replayable
+        #: graph; bounded by HALO_GRAPH_CACHE inside fusion.compile_graph
+        self._compiled_graphs: "collections.OrderedDict[str, Any]" = \
+            collections.OrderedDict()
         self._lock = threading.RLock()
         self.finalized = False
         # T1 instrumentation: host-side dispatch overhead accounting
@@ -968,6 +972,7 @@ class RuntimeAgent:
             agent.shutdown(cancel_pending=True, wait=True)
         with self._lock:
             self._buffer_table.clear()
+            self._compiled_graphs.clear()
             self.finalized = True
         if self.scheduler is not None:
             self.scheduler.save()

@@ -321,7 +321,16 @@ class HaloComm:
                 stale = [k for k in self._tails if k != id(g)]
                 for k in stale:
                     del self._tails[k]
-                for prev in self._tails.get(id(g), ()):
+                prevs = self._tails.get(id(g), ())
+                # id() values recycle: a fresh capture can land on the
+                # address of a dead graph whose entry survived the sweep
+                # above, and wiring its tails would give this graph
+                # parents that already completed elsewhere and will never
+                # decrement — a permanent hang.  Only tails recorded in
+                # *this* graph are real hazard sources.
+                if any(not g.owns(p) for p in prevs):
+                    prevs = ()
+                for prev in prevs:
                     for root in roots:
                         g.add_dependency(prev, root)
                 self._tails[id(g)] = list(tails)

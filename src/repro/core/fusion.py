@@ -1,0 +1,928 @@
+"""Graph-level kernel fusion + replayable compiled graphs (DESIGN.md §12).
+
+The execution graph (DESIGN.md §8) removed the one-kernel-at-a-time dispatch
+wall, but steady-state chain-heavy workloads (decode loops, Jacobi sweeps)
+still pay per-node overhead three times over: every captured node is placed,
+queued, and completed individually, and every chain intermediate round-trips
+through a node payload.  This module is the capture-time optimization pass
+that closes the gap, in the compose-don't-interpret style ORCHA
+(arXiv:2507.09337) argues a performance-portability runtime needs:
+
+* **Fusion** — :func:`find_chains` walks a captured, unlaunched DAG for
+  same-agent linear chains of fusible nodes (element-wise ops, rmsnorm,
+  copies, ewise→matmul epilogues — :func:`register_fusible` declares the
+  per-alias predicates) and collapses each into one synthetic ``FUSED:*``
+  :class:`~repro.core.registry.KernelRecord`: a generated Pallas chain
+  kernel for pure element-wise chains, and a jitted XLA composition
+  otherwise.  Fused records estimate as the sum of their members until
+  measured, and inherit the member tiling spaces (DESIGN.md §9).
+* **Buffer planning** — chain intermediates never become node payloads (the
+  fused kernel keeps them in registers / fused HLO); single-consumer inputs
+  produced inside the same graph are planned for donation (applied off-CPU
+  when ``HALO_FUSION_DONATE=1``).
+* **Replay** — :func:`compile_graph` freezes the optimized DAG into a
+  :class:`CompiledGraph` keyed by (topology hash, shapes, dtypes, placement
+  epoch), cached per session (``HALO_GRAPH_CACHE`` entries).  ``replay()``
+  re-instantiates nodes from templates — no re-capture, no payload
+  re-scanning, and placement pinned to the plan — so steady-state loops
+  amortize capture + compile to a fraction of a step.
+
+Failure semantics (DESIGN.md §11/§12): a fused node whose records all fail
+or quarantine — or that is straggler-speculated with no other fused record
+available — *decomposes* back into its member nodes and replays the chain
+unfused, bit-identical to never having fused.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import logging
+import os
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .agents import HaloFuture, RuntimeAgent
+from .compute_object import ComputeObject, as_compute_object
+from .registry import KernelAttributes, KernelRecord, SelectionError
+from .scheduler import abstract_signature
+
+log = logging.getLogger("repro.halo.fusion")
+
+__all__ = [
+    "CHAIN",
+    "CompiledGraph",
+    "FusionRule",
+    "MemberSpec",
+    "NodeTemplate",
+    "compile_graph",
+    "find_chains",
+    "fusion_rule",
+    "register_fusible",
+]
+
+#: argmap sentinel: "the previous chain member's output".
+CHAIN = "chain"
+
+#: payload length cap for fusible nodes (defensive bound, far above reality).
+_MAX_PAYLOAD = 64
+
+
+# ---------------------------------------------------------------------------
+# Fusibility predicates (per-alias rules)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FusionRule:
+    """Per-alias fusibility declaration (see CONTRIBUTING.md).
+
+    ``ewise_op`` names the element-wise op (``mul/div/add/sub``) a member
+    contributes to a generated Pallas chain kernel; ``unary`` marks 1-arg
+    pass-through members (COPY).  Members with neither still fuse via the
+    jitted XLA composition.  ``terminal`` members (matmul epilogues) may
+    only *end* a chain — nothing fuses after them."""
+
+    alias: str
+    ewise_op: Optional[str] = None
+    unary: bool = False
+    terminal: bool = False
+
+
+#: alias -> FusionRule; populated by :func:`register_fusible` (kernels
+#: declare their rules in ``kernels.register_all``).
+FUSION_RULES: Dict[str, FusionRule] = {}
+
+
+def register_fusible(alias: str, *, ewise_op: Optional[str] = None,
+                     unary: bool = False, terminal: bool = False
+                     ) -> FusionRule:
+    """Declare ``alias`` fusible into same-agent linear chains.
+
+    Kernels without a rule are never fused.  Returns the installed
+    :class:`FusionRule` (re-registering an alias replaces its rule)."""
+    rule = FusionRule(alias, ewise_op=ewise_op, unary=unary,
+                      terminal=terminal)
+    FUSION_RULES[alias] = rule
+    return rule
+
+
+def fusion_rule(alias: str) -> Optional[FusionRule]:
+    """The :class:`FusionRule` registered for ``alias``, or None."""
+    return FUSION_RULES.get(alias)
+
+
+@dataclasses.dataclass
+class MemberSpec:
+    """One chain member inside a fused node: enough to re-dispatch it.
+
+    ``argmap`` maps the member's positional args onto the fused node's
+    payload — an integer indexes the fused payload; :data:`CHAIN` is the
+    previous member's output.  The decompose-on-failure path (DESIGN.md
+    §12) rebuilds the member :class:`~repro.core.graph.GraphNode` chain
+    from exactly this."""
+
+    alias: str
+    argmap: Tuple[Any, ...]
+    kwargs: Dict[str, Any]
+    uid: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Abstract shape propagation over a captured DAG
+# ---------------------------------------------------------------------------
+class _Unknown(Exception):
+    """A payload leaf's abstract value is unavailable (unfusible node)."""
+
+
+def _abstractify(obj: Any, table: Dict[int, Any]) -> Any:
+    if isinstance(obj, HaloFuture):
+        val = table.get(id(obj))
+        if val is None:
+            raise _Unknown
+        return val
+    if isinstance(obj, ComputeObject):
+        return dataclasses.replace(
+            obj, inputs={k: _abstractify(v, table)
+                         for k, v in obj.inputs.items()})
+    if isinstance(obj, dict):
+        return {k: _abstractify(v, table) for k, v in obj.items()}
+    if isinstance(obj, (tuple, list)):
+        return type(obj)(_abstractify(v, table) for v in obj)
+    if hasattr(obj, "shape") and hasattr(obj, "dtype"):
+        return jax.ShapeDtypeStruct(tuple(obj.shape), obj.dtype)
+    return obj
+
+
+def _abstract_args(node, table: Dict[int, Any]) -> Tuple[Tuple, Dict]:
+    """Mirror of ``ExecutionGraph._node_args`` over abstract values."""
+    payload = _abstractify(node.payload, table)
+    if node.cr is not None:
+        co = as_compute_object(payload)
+        args = tuple(co.inputs[k] for k in sorted(co.inputs))
+        kwargs = dict(node.kwargs)
+        kwargs.update(co.meta)
+        return args, kwargs
+    return tuple(payload), dict(node.kwargs)
+
+
+def _abstract_outputs(g) -> Dict[int, Any]:
+    """id(node) -> abstract output (ShapeDtypeStruct) for every node whose
+    output shape the fail-safe oracle can derive; None when it cannot
+    (multi-output, unknown inputs, eval error) — such nodes never fuse."""
+    table: Dict[int, Any] = {}
+    registry = g.session.registry
+    for node in g.nodes:
+        out = None
+        fs = registry.failsafe(node.alias)
+        if fs is not None:
+            try:
+                args, kwargs = _abstract_args(node, table)
+                res = jax.eval_shape(functools.partial(fs.fn, **kwargs),
+                                     *args)
+                if isinstance(res, jax.ShapeDtypeStruct):
+                    out = res
+            except Exception:  # noqa: BLE001 — advisory; node stays unfused
+                out = None
+        table[id(node)] = out
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Chain detection
+# ---------------------------------------------------------------------------
+def _fusible_node(node, table: Dict[int, Any]) -> bool:
+    if FUSION_RULES.get(node.alias) is None:
+        return False
+    if node._foreign_deps:
+        return False
+    if node.cr is not None and (node.cr.buffers or node.cr.pipeline):
+        return False                     # stateful / pipeline CRs never fuse
+    p = node.payload
+    if not isinstance(p, (tuple, list)) or not p or len(p) > _MAX_PAYLOAD:
+        return False
+    for leaf in p:
+        if isinstance(leaf, (dict, ComputeObject, tuple, list)):
+            return False                 # nested payloads keep node as-is
+    return isinstance(table.get(id(node)), jax.ShapeDtypeStruct)
+
+
+def find_chains(g, table: Dict[int, Any]) -> List[List[Any]]:
+    """Maximal same-agent linear chains of fusible nodes, in capture order.
+
+    A chain extends parent→child only when the link is exclusive (parent's
+    sole consumer, child's sole producer), the child actually consumes the
+    parent's output, both share overrides (same placement constraints), and
+    the parent's rule is not ``terminal``.  Chains of length < 2 are not
+    chains."""
+    chains: List[List[Any]] = []
+    in_chain: set = set()
+    for node in g.nodes:
+        if id(node) in in_chain or not _fusible_node(node, table):
+            continue
+        chain = [node]
+        cur = node
+        while True:
+            if FUSION_RULES[cur.alias].terminal:
+                break
+            if len(cur.children) != 1:
+                break
+            child = cur.children[0]
+            if id(child) in in_chain or not _fusible_node(child, table):
+                break
+            if len(child.parents) != 1 or child.parents[0] is not cur:
+                break
+            if not any(leaf is cur for leaf in child.payload):
+                break                    # pure hazard edge: order, not data
+            if child.overrides != node.overrides:
+                break
+            chain.append(child)
+            cur = child
+        if len(chain) >= 2:
+            chains.append(chain)
+            in_chain.update(id(n) for n in chain)
+    return chains
+
+
+# ---------------------------------------------------------------------------
+# Synthetic fused records
+# ---------------------------------------------------------------------------
+def _member_record(registry, alias: str, platform: str) -> KernelRecord:
+    """Best member record for composition: the highest-priority record on
+    ``platform``, else the fail-safe oracle."""
+    best = None
+    for rec in registry.records(alias):
+        if rec.platform == platform and \
+                (best is None or rec.priority > best.priority):
+            best = rec
+    best = best or registry.failsafe(alias)
+    if best is None:
+        raise SelectionError(f"no implementation for chain member {alias!r}")
+    return best
+
+
+def _prepared_impl(rec: KernelRecord) -> Callable:
+    """One executable per member, mirroring the agent execution contract
+    (``XlaAgent._device_execute``): tunable records are internally jitted
+    and called directly, jnp fail-safes run eagerly, everything else gets
+    its own ``jax.jit`` — so the bit-exact composition loop produces
+    exactly what serial member execution would."""
+    if rec.platform == "jnp" or rec.tuning_space is not None:
+        return rec.fn
+    return jax.jit(rec.fn)
+
+
+def _single_config_space(*args, **kw) -> List[Dict[str, Any]]:
+    # loop-mode fused records expose no tile axis of their own (members
+    # keep theirs); a one-entry space opts them out of the agents' outer
+    # jit (DESIGN.md §9 tunable-record contract) without giving the
+    # autotuner anything to sweep
+    return [{}]
+
+
+def _sum_of_parts_cost(session: RuntimeAgent,
+                       members: Sequence[MemberSpec]) -> Callable:
+    """Analytic cost model for a fused record until it has measurements:
+    the sum of the members' best estimates, chained through the fail-safe
+    oracles' ``eval_shape`` (DESIGN.md §9 precedence applies per member)."""
+    registry = session.registry
+    member_recs = {m.alias: registry.records(m.alias) for m in members}
+    cache: Dict[Any, float] = {}
+
+    def cost(*args) -> float:
+        sched = session.scheduler
+        if sched is None:
+            raise RuntimeError("sum-of-parts estimate needs a scheduler")
+        key = abstract_signature(args)
+        if key in cache:
+            return cache[key]
+        total, known = 0.0, False
+        acc = None
+        for m in members:
+            m_args = tuple(acc if s == CHAIN else args[s] for s in m.argmap)
+            m_abs = tuple(
+                jax.ShapeDtypeStruct(tuple(a.shape), a.dtype)
+                if hasattr(a, "shape") and hasattr(a, "dtype") else a
+                for a in m_args)
+            sig = abstract_signature(m_abs)
+            ests = [e for e in (sched.estimate(r, sig, m_abs)
+                                for r in member_recs[m.alias]
+                                if not sched.is_failed(r)) if e is not None]
+            if ests:
+                total += min(ests)
+                known = True
+            fs = registry.failsafe(m.alias)
+            acc = jax.eval_shape(functools.partial(fs.fn, **m.kwargs),
+                                 *m_abs)
+        if not known:
+            raise ValueError("no member estimates yet")
+        cache[key] = total
+        return total
+
+    return cost
+
+
+def _chain_supports(n_inputs: int) -> Callable:
+    import jax.numpy as jnp
+
+    from ..kernels.common import small_enough_off_tpu
+
+    def supports(*args, **kw) -> bool:
+        if len(args) != n_inputs:
+            return False
+        shape = getattr(args[0], "shape", None)
+        dt = getattr(args[0], "dtype", None)
+        if not shape or dt not in (jnp.float32, jnp.bfloat16, jnp.float16):
+            return False
+        for a in args:
+            if getattr(a, "shape", None) != shape \
+                    or getattr(a, "dtype", None) != dt:
+                return False
+        return small_enough_off_tpu(*args)
+
+    return supports
+
+
+def _fused_alias(members: Sequence[MemberSpec],
+                 donate: Sequence[int]) -> str:
+    desc = "+".join(m.alias for m in members)
+    spec = repr([(m.alias, m.argmap, sorted(m.kwargs.items()))
+                 for m in members]) + repr(sorted(donate))
+    return f"FUSED:{desc}@{hashlib.sha1(spec.encode()).hexdigest()[:8]}"
+
+
+def _ensure_fused_records(session: RuntimeAgent, alias: str,
+                          members: Sequence[MemberSpec], n_inputs: int,
+                          ew_steps: Optional[Tuple],
+                          donate: Sequence[int]) -> List[KernelRecord]:
+    """Register (idempotently) the synthetic records for one fused alias.
+
+    Default (bit-exact) mode composes the members as a call loop over
+    per-member executables — bit-identical to serial member execution —
+    on both the xla and (for pure element-wise chains whose members all
+    have pallas records) the pallas substrate.  ``HALO_FUSION_CONTRACT=1``
+    trades that guarantee for speed: the xla record becomes a single-jit
+    whole-chain program (with buffer donation per the plan when
+    ``HALO_FUSION_DONATE=1``), and pure element-wise chains additionally
+    get the generated Pallas chain kernel (one VPU pass, member tiling
+    space inherited).  No jnp fail-safe is registered on purpose — an
+    exhausted fused node decomposes back to its members instead, which
+    *is* the fail-safe."""
+    registry = session.registry
+    existing = registry.records(alias)
+    if existing:
+        return existing
+    from ..kernels.fused import ewise_chain, ewise_chain_space, make_composed
+
+    contract = os.environ.get("HALO_FUSION_CONTRACT", "0") not in ("", "0")
+    cost = _sum_of_parts_cost(session, members)
+    argmaps = [tuple("acc" if s == CHAIN else s for s in m.argmap)
+               for m in members]
+    kwargs_list = [dict(m.kwargs) for m in members]
+    xla_recs = [_member_record(registry, m.alias, "xla") for m in members]
+    if contract:
+        donate_on = os.environ.get("HALO_FUSION_DONATE", "0") \
+            not in ("", "0")
+        composed = make_composed([r.fn for r in xla_recs], argmaps,
+                                 kwargs_list,
+                                 donate=tuple(donate) if donate_on else (),
+                                 contract=True)
+        xla_doc = (f"single-jit XLA composition of {len(members)} chained "
+                   f"kernels (HALO_FUSION_CONTRACT)")
+    else:
+        composed = make_composed([_prepared_impl(r) for r in xla_recs],
+                                 argmaps, kwargs_list)
+        xla_doc = (f"bit-exact composition loop over {len(members)} "
+                   f"chained xla kernels")
+    # tuning_space opts fused records out of the agents' outer jit: the
+    # composition manages its own executables (§9 tunable-record contract)
+    out = [registry.register(KernelRecord(
+        alias=alias, fn=composed, platform="xla",
+        attrs=KernelAttributes(sw_fid=f"fid:{alias.lower()}"),
+        priority=10, cost_model=cost, tuning_space=_single_config_space,
+        doc=xla_doc))]
+    if ew_steps is not None:
+        pl_fn = None
+        space = _single_config_space
+        if contract:
+            pl_fn = functools.partial(ewise_chain, steps=tuple(ew_steps))
+            space = ewise_chain_space
+            pl_doc = (f"generated Pallas VPU chain of {len(members)} "
+                      f"ewise ops (HALO_FUSION_CONTRACT)")
+        else:
+            pl_recs = [_member_record(registry, m.alias, "pallas")
+                       for m in members]
+            if all(r.platform == "pallas" for r in pl_recs):
+                pl_fn = make_composed([_prepared_impl(r) for r in pl_recs],
+                                      argmaps, kwargs_list)
+                pl_doc = (f"bit-exact composition loop over {len(members)} "
+                          f"chained pallas kernels")
+        if pl_fn is not None:
+            out.append(registry.register(KernelRecord(
+                alias=alias, fn=pl_fn, platform="pallas",
+                attrs=KernelAttributes(sw_fid=f"fid:{alias.lower()}:pl",
+                                       vid="google", pid="tpu-v5e"),
+                priority=20, supports=_chain_supports(n_inputs),
+                cost_model=cost if jax.default_backend() == "tpu" else None,
+                tuning_space=space, doc=pl_doc)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compiled graphs: templates + replay
+# ---------------------------------------------------------------------------
+class _SlotRef:
+    """Payload placeholder: the i-th compiled-graph input array."""
+
+    __slots__ = ("i",)
+
+    def __init__(self, i: int):
+        self.i = i
+
+
+class _NodeRef:
+    """Payload placeholder: the i-th template's output node."""
+
+    __slots__ = ("i",)
+
+    def __init__(self, i: int):
+        self.i = i
+
+
+@dataclasses.dataclass
+class NodeTemplate:
+    """Frozen recipe for one replayed node: payload with slot/node refs in
+    place of arrays/parents, explicit parent edges (no payload re-scan),
+    the planned placement, and — for fused nodes — the member specs the
+    decompose-on-failure path needs."""
+
+    alias: str
+    payload: Any
+    kwargs: Dict[str, Any]
+    overrides: Dict[str, Any]
+    cr: Any
+    tag: int
+    failsafe: Optional[Callable]
+    parents: Tuple[int, ...]
+    members: Optional[List[MemberSpec]] = None
+    pinned: Optional[KernelRecord] = None
+    abstract_args: Optional[Tuple] = None
+
+
+def _collect_inputs(g) -> Tuple[List[Any], Dict[int, int]]:
+    """Distinct array leaves across all payloads, in first-appearance
+    (capture) order — the compiled graph's input slots."""
+    slots: List[Any] = []
+    index: Dict[int, int] = {}
+
+    def visit(obj: Any) -> None:
+        if isinstance(obj, HaloFuture):
+            return
+        if isinstance(obj, ComputeObject):
+            for k in sorted(obj.inputs):
+                visit(obj.inputs[k])
+        elif isinstance(obj, dict):
+            for k in sorted(obj):
+                visit(obj[k])
+        elif isinstance(obj, (tuple, list)):
+            for v in obj:
+                visit(v)
+        elif hasattr(obj, "shape") and hasattr(obj, "dtype"):
+            if id(obj) not in index:
+                index[id(obj)] = len(slots)
+                slots.append(obj)
+
+    for n in g.nodes:
+        visit(n.payload)
+    return slots, index
+
+
+def _templatize(obj: Any, node_idx: Dict[int, int],
+                slot_idx: Dict[int, int]) -> Any:
+    if isinstance(obj, HaloFuture):
+        return _NodeRef(node_idx[id(obj)])
+    if isinstance(obj, ComputeObject):
+        return dataclasses.replace(
+            obj, inputs={k: _templatize(v, node_idx, slot_idx)
+                         for k, v in obj.inputs.items()})
+    if isinstance(obj, dict):
+        return {k: _templatize(v, node_idx, slot_idx) for k, v in obj.items()}
+    if isinstance(obj, (tuple, list)):
+        return type(obj)(_templatize(v, node_idx, slot_idx) for v in obj)
+    if hasattr(obj, "shape") and hasattr(obj, "dtype"):
+        return _SlotRef(slot_idx[id(obj)])
+    return obj
+
+
+def _resolve(obj: Any, nodes: List[Any], arrays: List[Any]) -> Any:
+    if isinstance(obj, _NodeRef):
+        return nodes[obj.i]
+    if isinstance(obj, _SlotRef):
+        return arrays[obj.i]
+    if isinstance(obj, ComputeObject):
+        return dataclasses.replace(
+            obj, inputs={k: _resolve(v, nodes, arrays)
+                         for k, v in obj.inputs.items()})
+    if isinstance(obj, dict):
+        return {k: _resolve(v, nodes, arrays) for k, v in obj.items()}
+    if isinstance(obj, (tuple, list)):
+        return type(obj)(_resolve(v, nodes, arrays) for v in obj)
+    return obj
+
+
+def _payload_sig(obj: Any, slot_idx: Dict[int, int]) -> str:
+    if isinstance(obj, HaloFuture):
+        return f"n{obj.uid}"
+    if isinstance(obj, ComputeObject):
+        inner = ",".join(f"{k}:{_payload_sig(v, slot_idx)}"
+                         for k, v in sorted(obj.inputs.items()))
+        return f"co({inner})"
+    if isinstance(obj, dict):
+        inner = ",".join(f"{k}:{_payload_sig(v, slot_idx)}"
+                         for k, v in sorted(obj.items()))
+        return f"d({inner})"
+    if isinstance(obj, (tuple, list)):
+        return "t(" + ",".join(_payload_sig(v, slot_idx) for v in obj) + ")"
+    if hasattr(obj, "shape") and hasattr(obj, "dtype"):
+        return f"a{slot_idx[id(obj)]}:{tuple(obj.shape)}:{obj.dtype}"
+    return f"s{obj!r}"
+
+
+def _graph_key(g, fuse: bool, slot_idx: Dict[int, int]) -> str:
+    """Cache key: topology + shapes/dtypes + kwargs/overrides + placement
+    epoch.  A quarantine change (``CostModelScheduler.epoch``) invalidates
+    every compiled plan so stale pinned placements are never replayed."""
+    sched = g.session.scheduler
+    h = hashlib.sha1()
+    h.update(f"fuse={int(fuse)};epoch={sched.epoch if sched else 0}"
+             .encode())
+    for node in g.nodes:
+        # stateless CRs key by presence only — re-claiming the same alias
+        # between steps must still hit the cache; stateful CRs (internal
+        # buffers) key by identity, their state is part of the program
+        cr = node.cr
+        cr_sig = cr.uid if cr is not None and cr.buffers \
+            else int(cr is not None)
+        h.update((
+            f"|{node.alias}|{node.tag}"
+            f"|{sorted((k, repr(v)) for k, v in node.overrides.items())}"
+            f"|{sorted((k, repr(v)) for k, v in node.kwargs.items())}"
+            f"|{cr_sig}|{id(node.failsafe) if node.failsafe else 0}"
+            f"|{[p.uid for p in node.parents]}"
+            f"|{_payload_sig(node.payload, slot_idx)}").encode())
+    return h.hexdigest()
+
+
+def _abstract_bytes(args: Sequence[Any]) -> int:
+    total = 0
+    for a in args:
+        shape = getattr(a, "shape", None)
+        dt = getattr(a, "dtype", None)
+        if shape is None or dt is None:
+            continue
+        total += int(np.prod(shape, dtype=np.int64)) * np.dtype(str(dt)).itemsize
+    return total
+
+
+class CompiledGraph:
+    """An optimized, frozen execution graph that replays without
+    re-capture, re-placement, or re-wiring (DESIGN.md §12).
+
+    Obtained via ``ExecutionGraph.compile()`` (or :func:`compile_graph`).
+    ``replay(updates={slot: array})`` runs one steady-state iteration:
+    nodes are re-instantiated from templates with explicit edges, and
+    placement uses the pinned plan (re-scored only when a pinned record
+    has been quarantined since planning)."""
+
+    def __init__(self, session: RuntimeAgent, key: str,
+                 templates: List[NodeTemplate], inputs: List[Any],
+                 output_idxs: List[int], stats: Dict[str, Any]):
+        self.session = session
+        self.key = key
+        self.templates = templates
+        self.output_idxs = output_idxs
+        self.stats = stats
+        self._inputs = list(inputs)
+        self._lock = threading.Lock()
+
+    # -- inputs -----------------------------------------------------------
+    def slot_of(self, arr: Any) -> Optional[int]:
+        """Input-slot index of a capture-time array (by identity), for
+        building ``replay(updates=...)`` dicts; None if not an input."""
+        for i, a in enumerate(self._inputs):
+            if a is arr:
+                return i
+        return None
+
+    def _rebind_inputs(self, slots: List[Any]) -> None:
+        from .graph import GraphError
+        if len(slots) != len(self._inputs):
+            raise GraphError(
+                f"compiled-graph cache collision: {len(slots)} input "
+                f"slot(s) vs {len(self._inputs)} expected")
+        self._inputs = list(slots)
+
+    def _updated_inputs(self, updates: Optional[Dict[int, Any]]) -> List[Any]:
+        from .graph import GraphError
+        with self._lock:
+            arrays = list(self._inputs)
+        if not updates:
+            return arrays
+        for i, v in updates.items():
+            if not 0 <= int(i) < len(arrays):
+                raise GraphError(f"no input slot {i}")
+            old = arrays[int(i)]
+            if tuple(getattr(v, "shape", ())) != tuple(old.shape) \
+                    or getattr(v, "dtype", None) != old.dtype:
+                raise GraphError(
+                    f"input slot {i} expects {old.dtype}{tuple(old.shape)}; "
+                    f"got {getattr(v, 'dtype', None)}"
+                    f"{tuple(getattr(v, 'shape', ()))} — recompile instead")
+            arrays[int(i)] = v
+        return arrays
+
+    # -- replay -----------------------------------------------------------
+    def replay_async(self, updates: Optional[Dict[int, Any]] = None):
+        """Instantiate + launch one iteration; returns the live
+        :class:`~repro.core.graph.ExecutionGraph` (non-blocking)."""
+        from .graph import ExecutionGraph, GraphNode
+        arrays = self._updated_inputs(updates)
+        g = ExecutionGraph(self.session)
+        nodes: List[GraphNode] = []
+        for idx, t in enumerate(self.templates):
+            node = GraphNode(idx + 1, t.alias,
+                             _resolve(t.payload, nodes, arrays),
+                             t.kwargs, cr=t.cr, overrides=t.overrides,
+                             failsafe=t.failsafe, tag=t.tag)
+            node.pinned = t.pinned
+            node.fused_members = t.members
+            for p in t.parents:
+                node.parents.append(nodes[p])
+                nodes[p].children.append(node)
+            g.nodes.append(node)
+            g._ids.add(id(node))
+            nodes.append(node)
+        with self._lock:
+            self.stats["replays"] += 1
+        g.launch()
+        return g
+
+    def replay(self, updates: Optional[Dict[int, Any]] = None,
+               timeout: Optional[float] = None) -> List[Any]:
+        """One blocking steady-state iteration: launch from templates and
+        wait; returns the output nodes' results in capture order."""
+        g = self.replay_async(updates)
+        out = g.wait(timeout)
+        with self._lock:
+            self.stats["placements_pinned_last"] = \
+                g.stats["placements_pinned"]
+            self.stats["placements_scored_last"] = \
+                g.stats["placements_scored"]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The optimization pass
+# ---------------------------------------------------------------------------
+def _chain_members(chain: List[Any]) -> Tuple[List[MemberSpec], List[Any]]:
+    """(member specs, fused payload) for one chain: dedupe non-chain args
+    by identity into one payload tuple; argmaps index it (or CHAIN)."""
+    payload: List[Any] = []
+    index: Dict[int, int] = {}
+    members: List[MemberSpec] = []
+    for i, node in enumerate(chain):
+        argmap: List[Any] = []
+        for leaf in node.payload:
+            if i > 0 and leaf is chain[i - 1]:
+                argmap.append(CHAIN)
+                continue
+            idx = index.get(id(leaf))
+            if idx is None:
+                idx = len(payload)
+                index[id(leaf)] = idx
+                payload.append(leaf)
+            argmap.append(idx)
+        members.append(MemberSpec(node.alias, tuple(argmap),
+                                  dict(node.kwargs), uid=node.uid))
+    return members, payload
+
+
+def _ewise_steps(chain: List[Any], members: List[MemberSpec],
+                 payload: List[Any], table: Dict[int, Any]
+                 ) -> Optional[Tuple]:
+    """Static step tuple for the Pallas chain kernel, or None when the
+    chain is not purely element-wise (mixed chains use the XLA
+    composition only)."""
+    out = table[id(chain[-1])]
+    shape, dtype = tuple(out.shape), out.dtype
+    if len(shape) < 1:
+        return None
+    for entry in payload:
+        a = table.get(id(entry)) if isinstance(entry, HaloFuture) else entry
+        if tuple(getattr(a, "shape", ())) != shape \
+                or getattr(a, "dtype", None) != dtype:
+            return None
+    steps: List[Tuple[str, Any, Any]] = []
+    for m in members:
+        rule = FUSION_RULES[m.alias]
+        if m.kwargs:
+            return None                  # tile kwargs belong to the chain fn
+        specs = tuple("acc" if s == CHAIN else s for s in m.argmap)
+        if rule.unary and len(specs) == 1:
+            steps.append(("copy", specs[0], None))
+        elif rule.ewise_op is not None and len(specs) == 2:
+            steps.append((rule.ewise_op, specs[0], specs[1]))
+        else:
+            return None
+    return tuple(steps)
+
+
+def _plan_placement(session: RuntimeAgent,
+                    templates: List[NodeTemplate]) -> Tuple[int, int]:
+    """Pin one record per template, mirroring the ready-time placement
+    scoring (estimate + backlog + transfer penalty) over abstract args.
+    Returns (pinned, unplanned) counts."""
+    sched = session.scheduler
+    backlog: Dict[str, float] = {}
+    platform_of: Dict[int, str] = {}
+    pinned = 0
+    for idx, t in enumerate(templates):
+        if t.abstract_args is None:
+            continue
+        args = t.abstract_args
+        allowed = t.overrides.get("allowed_platforms") \
+            or session._allowed_platforms()
+        pref = t.overrides.get("platform_preference") \
+            or session._platform_preference()
+        try:
+            cands = session.registry.candidates(
+                t.alias, *args, allowed_platforms=allowed,
+                platform_preference=pref)
+        except SelectionError:
+            cands = []
+        if sched is not None:
+            cands = [c for c in cands if not sched.is_failed(c)]
+        if not cands:
+            continue
+        parent_platforms = [platform_of[p] for p in t.parents
+                            if p in platform_of]
+        sig = abstract_signature(args)
+        rec: Optional[KernelRecord] = None
+        est = 0.0
+        if sched is not None and len(cands) == 1:
+            rec = cands[0]
+            est = sched.estimate(rec, sig, args) or 0.0
+        elif sched is not None:
+            rec = sched.place(t.alias, cands, args,
+                              parent_platforms=parent_platforms,
+                              payload_bytes=_abstract_bytes(args),
+                              backlog=dict(backlog))
+            if rec is not None:
+                est = sched.estimate(rec, sig, args) or 0.0
+        if rec is None:
+            for p in parent_platforms:
+                rec = next((c for c in cands if c.platform == p), None)
+                if rec is not None:
+                    break
+            rec = rec or cands[0]
+        t.pinned = rec
+        platform_of[idx] = rec.platform
+        backlog[rec.platform] = backlog.get(rec.platform, 0.0) + est
+        pinned += 1
+    return pinned, len(templates) - pinned
+
+
+def compile_graph(g, fuse: Optional[bool] = None) -> CompiledGraph:
+    """Run the capture-time optimization pass over an unlaunched captured
+    graph and freeze it into a session-cached :class:`CompiledGraph`.
+
+    ``fuse=None`` follows ``HALO_FUSION`` (default on; ``0`` disables the
+    fusion pass but keeps replay caching).  Raises
+    :class:`~repro.core.graph.GraphError` for launched graphs and graphs
+    gated on foreign futures (their readiness is external state a frozen
+    replay cannot reproduce)."""
+    from .graph import GraphError
+    session = g.session
+    if g._launched:
+        raise GraphError("graph already launched; capture with "
+                         "halo_graph(launch=False) to compile it")
+    for node in g.nodes:
+        if node._foreign_deps:
+            raise GraphError(
+                f"node {node.uid} ({node.alias}) depends on a future from "
+                f"outside this graph; compiled replay requires a closed DAG")
+    if fuse is None:
+        fuse = os.environ.get("HALO_FUSION", "1") != "0"
+
+    slots, slot_idx = _collect_inputs(g)
+    key = _graph_key(g, fuse, slot_idx)
+    cache = getattr(session, "_compiled_graphs", None)
+    if cache is None:
+        cache = session._compiled_graphs = OrderedDict()
+    hit = cache.get(key)
+    if hit is not None:
+        cache.move_to_end(key)
+        hit._rebind_inputs(slots)
+        with hit._lock:
+            hit.stats["cache_hits"] += 1
+        return hit
+
+    table = _abstract_outputs(g)
+    chains = find_chains(g, table) if fuse else []
+    chain_pos: Dict[int, int] = {}       # id(node) -> chain index
+    chain_ids: set = set()
+    for ci, chain in enumerate(chains):
+        for n in chain:
+            chain_pos[id(n)] = ci
+            chain_ids.add(id(n))
+
+    templates: List[NodeTemplate] = []
+    node_idx: Dict[int, int] = {}        # id(node) -> template index
+    terminal_uids: List[Tuple[int, int]] = []
+    planned_donations = 0
+    fused_aliases: List[str] = []
+    for node in g.nodes:
+        ci = chain_pos.get(id(node))
+        if ci is not None:
+            chain = chains[ci]
+            if node is not chain[0]:
+                continue                 # chain members fold into the head
+            members, payload = _chain_members(chain)
+            ew_steps = _ewise_steps(chain, members, payload, table)
+            donate = [i for i, e in enumerate(payload)
+                      if isinstance(e, HaloFuture)
+                      and all(id(c) in chain_ids for c in e.children)]
+            planned_donations += len(donate)
+            alias = _fused_alias(members, donate)
+            _ensure_fused_records(session, alias, members, len(payload),
+                                  ew_steps, donate)
+            fused_aliases.append(alias)
+            tail = chain[-1]
+            t = NodeTemplate(
+                alias=alias,
+                payload=tuple(_templatize(e, node_idx, slot_idx)
+                              for e in payload),
+                kwargs={}, overrides=dict(node.overrides), cr=None,
+                tag=node.tag, failsafe=None,
+                parents=tuple(dict.fromkeys(
+                    node_idx[id(p)] for p in node.parents)),
+                members=members)
+            try:
+                t.abstract_args = tuple(_abstractify(e, table)
+                                        for e in payload)
+            except _Unknown:
+                t.abstract_args = None
+            idx = len(templates)
+            templates.append(t)
+            for n in chain:
+                node_idx[id(n)] = idx    # consumers of the tail hit the head
+            if not tail.children:
+                terminal_uids.append((tail.uid, idx))
+            continue
+        t = NodeTemplate(
+            alias=node.alias,
+            payload=_templatize(node.payload, node_idx, slot_idx),
+            kwargs=dict(node.kwargs), overrides=dict(node.overrides),
+            cr=node.cr, tag=node.tag, failsafe=node.failsafe,
+            parents=tuple(dict.fromkeys(
+                node_idx[id(p)] for p in node.parents)))
+        try:
+            t.abstract_args = _abstract_args(node, table)[0]
+        except _Unknown:
+            t.abstract_args = None
+        idx = len(templates)
+        templates.append(t)
+        node_idx[id(node)] = idx
+        if not node.children:
+            terminal_uids.append((node.uid, idx))
+
+    pinned, unplanned = _plan_placement(session, templates)
+    stats = {
+        "captured_nodes": len(g.nodes),
+        "nodes": len(templates),
+        "fused_nodes": len(chains),
+        "intermediates_eliminated": sum(len(c) - 1 for c in chains),
+        "planned_donations": planned_donations,
+        "fused_aliases": fused_aliases,
+        "pinned_placements": pinned,
+        "unplanned_placements": unplanned,
+        "replays": 0,
+        "cache_hits": 0,
+        "placements_pinned_last": 0,
+        "placements_scored_last": 0,
+    }
+    cg = CompiledGraph(session, key, templates, slots,
+                       [idx for _, idx in sorted(terminal_uids)], stats)
+    log.info("compiled graph %s: %d node(s) -> %d (fused %d chain(s), "
+             "%d intermediate(s) eliminated)", key[:8], len(g.nodes),
+             len(templates), len(chains), stats["intermediates_eliminated"])
+    cache[key] = cg
+    try:
+        max_entries = int(os.environ.get("HALO_GRAPH_CACHE", "16") or 16)
+    except ValueError:
+        max_entries = 16
+    while len(cache) > max(1, max_entries):
+        cache.popitem(last=False)
+    return cg

@@ -88,6 +88,16 @@ class GraphNode(HaloFuture):
         self.platform: Optional[str] = None      # substrate it actually ran on
         self.attempts: List[str] = []            # platforms tried, in order
         self.speculated = False                  # a straggler backup launched
+        #: record pre-placed by a CompiledGraph plan (DESIGN.md §12); used
+        #: as a fast path in _place while it stays healthy and untried
+        self.pinned: Optional[KernelRecord] = None
+        #: MemberSpec list when this node is a fused chain — the
+        #: decompose-on-failure path replays these unfused (DESIGN.md §12)
+        self.fused_members: Optional[List] = None
+        #: decomposed chain members are shadow nodes: they execute like any
+        #: node but are hidden from ``outputs`` (the fused node they serve
+        #: is the visible one)
+        self._shadow = False
         self._tried: List[KernelRecord] = []     # records tried (failures)
         self._first_exc: Optional[BaseException] = None
         self._pending_parents = 0
@@ -157,6 +167,9 @@ class ExecutionGraph:
     per-node futures.  All executor state transitions run under one lock;
     kernel execution itself runs on the virtualization agents' workers."""
 
+    #: placement-candidate cache entry cap (oldest entries evicted beyond it)
+    _CAND_CACHE_MAX = 256
+
     def __init__(self, session: RuntimeAgent):
         self.session = session
         self.nodes: List[GraphNode] = []
@@ -168,8 +181,15 @@ class ExecutionGraph:
         self._backlog: Dict[str, float] = {}
         #: (alias, sig, allowed, tried) -> feasible candidate list; chains
         #: re-place the same signature repeatedly, and the registry filter
-        #: (supports predicates + sort) dominates placement cost otherwise
+        #: (supports predicates + sort) dominates placement cost otherwise.
+        #: Bounded at _CAND_CACHE_MAX; flushed whenever the scheduler's
+        #: quarantine epoch moves (a record failed / was cleared mid-graph).
         self._cand_cache: Dict[Any, List[KernelRecord]] = {}
+        sched = session.scheduler if session is not None else None
+        self._cand_epoch = sched.epoch if sched is not None else 0
+        #: placement counters (compiled-replay instrumentation, §12)
+        self.stats: Dict[str, int] = {"placements_pinned": 0,
+                                      "placements_scored": 0}
 
     # -- capture ---------------------------------------------------------
     def record_isend(self, cr, payload, tag: int = 0,
@@ -213,6 +233,13 @@ class ExecutionGraph:
         child.parents.append(parent)
         parent.children.append(child)
 
+    def owns(self, node: "GraphNode") -> bool:
+        """True when ``node`` was recorded in this graph (identity, not
+        equality).  The collective layer uses this to reject hazard-edge
+        sources from a dead capture whose ``id()`` was recycled — a parent
+        outside this graph never decrements its child and hangs it."""
+        return id(node) in self._ids
+
     def _wire(self, node: GraphNode) -> None:
         if self._launched:
             raise GraphError("graph already launched; begin a new capture")
@@ -235,8 +262,19 @@ class ExecutionGraph:
     # -- handle ----------------------------------------------------------
     @property
     def outputs(self) -> List[GraphNode]:
-        """Terminal nodes (no consumers) — the graph's result frontier."""
-        return [n for n in self.nodes if not n.children]
+        """Terminal nodes (no consumers) — the graph's result frontier.
+        Shadow nodes (decomposed fused-chain members, §12) are excluded:
+        their fused node is the visible output."""
+        return [n for n in self.nodes if not n.children and not n._shadow]
+
+    def compile(self, fuse: Optional[bool] = None):
+        """Freeze this captured (unlaunched) graph into a replayable,
+        session-cached :class:`~repro.core.fusion.CompiledGraph`, running
+        the §12 fusion pass on the way (``fuse=None`` follows the
+        ``HALO_FUSION`` env flag).  Capture with ``halo_graph(launch=False)``
+        to get a compilable graph."""
+        from .fusion import compile_graph
+        return compile_graph(self, fuse=fuse)
 
     def placements(self) -> Dict[int, Optional[str]]:
         return {n.uid: n.platform for n in self.nodes}
@@ -306,6 +344,8 @@ class ExecutionGraph:
         try:
             rec, agent, est = self._place(node, args)
         except Exception as exc:  # noqa: BLE001 — SelectionError et al.
+            if node.fused_members and self._decompose_fused(node, args, exc):
+                return None                      # members run instead (§12)
             self._fail_node(node, exc)
             return None
         return rec, agent, est, args, kwargs
@@ -330,12 +370,32 @@ class ExecutionGraph:
         overrides = node.overrides
         sched = sess.scheduler
         sig = abstract_signature(args)
+        # compiled-replay fast path (§12): honour the plan's pinned record
+        # while it is still healthy, untried, and its agent is up
+        pinned = node.pinned
+        if pinned is not None and all(pinned is not r for r in node._tried) \
+                and (sched is None or not sched.is_failed(pinned)) \
+                and pinned.feasible(*args):
+            agent = sess._agent_for(pinned)
+            if agent is not None:
+                est = sched.estimate(pinned, sig, args) or 0.0 \
+                    if sched is not None else 0.0
+                self.stats["placements_pinned"] += 1
+                return pinned, agent, est
+        self.stats["placements_scored"] += 1
         allowed_ov = overrides.get("allowed_platforms")
         pref_ov = overrides.get("platform_preference")
         key = (node.alias, sig, tuple(allowed_ov) if allowed_ov else None,
                tuple(pref_ov) if pref_ov else None,
                tuple(id(r) for r in node._tried))
         with self._lock:
+            if sched is not None:
+                epoch = sched.epoch
+                if epoch != self._cand_epoch:
+                    # quarantine state moved mid-graph: every cached
+                    # candidate list may now over- or under-offer records
+                    self._cand_cache.clear()
+                    self._cand_epoch = epoch
             cands = self._cand_cache.get(key)
         if cands is None:
             allowed = allowed_ov or sess._allowed_platforms()
@@ -347,6 +407,8 @@ class ExecutionGraph:
             except SelectionError:
                 cands = []
             with self._lock:
+                while len(self._cand_cache) >= self._CAND_CACHE_MAX:
+                    self._cand_cache.pop(next(iter(self._cand_cache)))
                 self._cand_cache[key] = cands
         if sched is not None and cands:
             # filter at use time, not cache time: a record quarantined after
@@ -583,6 +645,13 @@ class ExecutionGraph:
             return False
         backup = self._backup_for(node, rec, args)
         if backup is None:
+            if node.fused_members:
+                # no second fused record to race — decompose instead: the
+                # member chain is the natural backup (§12), and the
+                # straggling fused attempt still races it to _claim_win
+                node.speculated = True
+                return self._decompose_fused(node, args, None,
+                                             speculative=True)
             return False
         b_rec, b_agent = backup
         if b_agent is agent:             # would queue behind the straggler
@@ -653,7 +722,67 @@ class ExecutionGraph:
             else:
                 self._dispatch_attempt(node, rec2, agent2, est2, args, kwargs)
                 return
+        if node.fused_members and self._decompose_fused(node, args, exc):
+            return                               # members run instead (§12)
         self._fail_node(node, node._first_exc)
+
+    def _decompose_fused(self, node: GraphNode, args: Tuple,
+                         exc: Optional[BaseException],
+                         speculative: bool = False) -> bool:
+        """§12 failure fallback: replay a failed (or straggling) fused node
+        as its member chain — bit-identical to never having fused, because
+        the members *are* the original captured kernels with the original
+        arguments.  Members are appended as shadow nodes (hidden from
+        ``outputs``); the tail's completion completes the fused node and
+        fires its children."""
+        members = node.fused_members
+        if not members or node.done():
+            return False
+        node.attempts.append("decomposed+spec" if speculative
+                             else "decomposed")
+        log.warning("graph node %d (%s): decomposing into %d member "
+                    "node(s)%s", node.uid, node.alias, len(members),
+                    " (speculative)" if speculative else "")
+        sub: List[GraphNode] = []
+        with self._lock:
+            base = len(self.nodes)
+            prev: Optional[GraphNode] = None
+            for j, m in enumerate(members):
+                # "chain" in an argmap means the previous member's output
+                payload = tuple(prev if s == "chain" else args[s]
+                                for s in m.argmap)
+                child = GraphNode(base + j + 1, m.alias, payload,
+                                  dict(m.kwargs), overrides=node.overrides)
+                child._shadow = True
+                if prev is not None:
+                    child.parents.append(prev)
+                    prev.children.append(child)
+                    child._pending_parents = 1
+                self.nodes.append(child)
+                self._ids.add(id(child))
+                sub.append(child)
+                prev = child
+        tail = sub[-1]
+
+        def _finish(fut: HaloFuture) -> None:
+            if fut.cancelled():
+                self._fail_node(node, node._first_exc or exc
+                                or GraphError(
+                                    f"decomposed chain for node {node.uid} "
+                                    f"({node.alias}) was cancelled"))
+                return
+            tail_exc = fut.exception(timeout=0)
+            if tail_exc is not None:
+                self._fail_node(node, node._first_exc or exc or tail_exc)
+                return
+            if node._claim_win():
+                node.platform = tail.platform
+                node.set_result(fut.result(timeout=0))
+                self._fire_children(node)
+
+        tail.add_done_callback(_finish)
+        self._submit(sub[0])
+        return True
 
     def _fail_node(self, node: GraphNode, exc: BaseException) -> None:
         if not node._claim_win():

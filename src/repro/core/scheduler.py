@@ -115,6 +115,7 @@ class CostModelScheduler:
         self._attempts: Dict[str, int] = {}    # wants_sample() call counts
         self._chooses: Dict[str, int] = {}     # choose() call counts per key
         self._failed: Dict[str, int] = {}      # record key -> failure count
+        self._epoch = 0                        # bumps on quarantine changes
         self._since_save = 0
         if explore_every is not None:
             self.explore_every = explore_every or None
@@ -183,6 +184,15 @@ class CostModelScheduler:
             return n % self.sample_every == 0
 
     # -- failure quarantine ---------------------------------------------------
+    @property
+    def epoch(self) -> int:
+        """Monotonic quarantine-state version.  Bumps whenever
+        :meth:`mark_failed` / :meth:`clear_failures` changes the failed set,
+        so holders of derived state (per-graph candidate caches, compiled
+        graphs with pinned placements) can detect staleness cheaply."""
+        with self._lock:
+            return self._epoch
+
     def mark_failed(self, record: KernelRecord) -> None:
         """Quarantine a record whose execution raised: selection skips it
         until :meth:`clear_failures`.  Failures are per-process (never
@@ -190,6 +200,7 @@ class CostModelScheduler:
         with self._lock:
             key = _record_key(record)
             self._failed[key] = self._failed.get(key, 0) + 1
+            self._epoch += 1
 
     def is_failed(self, record: KernelRecord) -> bool:
         with self._lock:
@@ -197,6 +208,8 @@ class CostModelScheduler:
 
     def clear_failures(self) -> None:
         with self._lock:
+            if self._failed:
+                self._epoch += 1
             self._failed.clear()
 
     # -- selection -----------------------------------------------------------

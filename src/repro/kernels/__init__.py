@@ -168,5 +168,22 @@ def register_all(registry=None) -> None:
     registry.register(_rec("CONCAT", concat_blocks, "xla", 10))
     registry.register(_rec("CONCAT", concat_blocks, "pallas", 20))
 
+    # Fusibility rules (DESIGN.md §12): which aliases the graph fusion pass
+    # may collapse into same-agent linear chains.  EW* members carry the
+    # element-wise op a generated Pallas chain kernel applies; COPY is a
+    # unary pass-through; RMSNORM/MVM/JS fuse via the jitted XLA
+    # composition; MMM may only terminate a chain (ewise → matmul
+    # epilogues).  Rules are global (alias semantics, not registry state).
+    from ..core.fusion import register_fusible
+    register_fusible("EWMM", ewise_op="mul")
+    register_fusible("EWMD", ewise_op="div")
+    register_fusible("EWADD", ewise_op="add")
+    register_fusible("EWSUB", ewise_op="sub")
+    register_fusible("COPY", unary=True)
+    register_fusible("RMSNORM")
+    register_fusible("MVM")
+    register_fusible("JS")
+    register_fusible("MMM", terminal=True)
+
     if registry is GLOBAL_REGISTRY:
         _REGISTERED = True

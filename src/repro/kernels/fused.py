@@ -1,0 +1,151 @@
+"""Generated fused-chain kernels for the graph fusion pass (DESIGN.md §12).
+
+The fusion pass (:mod:`repro.core.fusion`) collapses a same-agent linear
+chain of captured nodes into one synthetic ``FUSED:*`` kernel record.  Two
+generators live here:
+
+* :func:`ewise_chain` — a single Pallas kernel for chains whose members are
+  all element-wise (EWMM/EWMD/EWADD/EWSUB) or unary copies: one VPU pass
+  applies the whole op sequence per (bm, bn) tile, so intermediates live in
+  vector registers instead of round-tripping through HBM and node payloads.
+* :func:`make_composed` — a jitted XLA composition closing over the member
+  implementations for mixed chains (ewise → RMSNORM / MVM / matmul
+  epilogues): XLA fuses the producer-consumer sequence into one program.
+
+Both take a static ``steps``/``argmaps`` description produced by the fusion
+pass; the kernel itself stays shape-generic so one synthetic record serves
+every shape bucket (its tuning space is inherited from the member kernels).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (clamp_block, compiler_params, interpret_default,
+                     pick_block, round_up)
+from .ewise.ewise import _OPS
+from .ewise.ops import ewise_space
+
+__all__ = ["ewise_chain", "ewise_chain_space", "make_composed"]
+
+#: sentinel spec meaning "the previous step's result" in a chain step.
+ACC = "acc"
+
+
+def _chain_kernel(*refs, steps: Tuple[Tuple[str, Any, Any], ...]):
+    in_refs, o_ref = refs[:-1], refs[-1]
+
+    def read(spec, acc):
+        return acc if spec == ACC else in_refs[spec][...]
+
+    acc = None
+    for op, a_spec, b_spec in steps:
+        if op == "copy":
+            acc = read(a_spec, acc)
+        else:
+            acc = _OPS[op](read(a_spec, acc), read(b_spec, acc))
+    o_ref[...] = acc
+
+
+def _chain_pallas(*arrays, steps, bm: int, bn: int,
+                  interpret: bool) -> jax.Array:
+    m, n = arrays[0].shape
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_chain_kernel, steps=steps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))] * len(arrays),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), arrays[0].dtype),
+        compiler_params=compiler_params(("parallel", "parallel")),
+        interpret=interpret,
+    )(*arrays)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("steps", "bm", "bn", "interpret"))
+def _chain_impl(*arrays, steps, bm, bn, interpret):
+    shape = arrays[0].shape
+    flat = [a.reshape(-1, shape[-1]) if a.ndim != 2 else a for a in arrays]
+    m, n = flat[0].shape
+    bm = pick_block(m, 512, 8) if bm is None else clamp_block(bm, m, 8)
+    bn = pick_block(n, 1024, 128) if bn is None else clamp_block(bn, n, 128)
+    # pad every operand with ones: the dead region is cropped, and ones keep
+    # any division step in the chain finite there
+    mp, npad = round_up(m, bm), round_up(n, bn)
+    padded = [jnp.pad(a, [(0, mp - m), (0, npad - n)], constant_values=1)
+              for a in flat]
+    out = _chain_pallas(*padded, steps=steps, bm=bm, bn=bn,
+                        interpret=interpret)
+    return out[:m, :n].reshape(shape)
+
+
+def ewise_chain(*arrays, steps: Tuple[Tuple[str, Any, Any], ...],
+                bm: Optional[int] = None, bn: Optional[int] = None,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Apply a fused element-wise op chain in one Pallas VPU pass.
+
+    ``steps`` is a static tuple of ``(op, a_spec, b_spec)`` triples: ``op``
+    is one of ``mul/div/add/sub/copy``; a spec is an integer index into
+    ``arrays`` or the sentinel ``"acc"`` (the previous step's result; the
+    ``copy`` op ignores ``b_spec``).  All operands must share one shape and
+    dtype.  ``bm``/``bn`` override the default VPU tile sizes (autotuner
+    axis, inherited from the member ``ewise_space``)."""
+    return _chain_impl(
+        *arrays, steps=steps, bm=bm, bn=bn,
+        interpret=interpret_default() if interpret is None else interpret)
+
+
+def ewise_chain_space(*args, **kw) -> List[Dict[str, Any]]:
+    """Tuning space for fused ewise chains: the member kernels' (bm, bn)
+    VPU tile candidates (fused records inherit member tiling spaces)."""
+    return ewise_space(args[0], args[0])
+
+
+def make_composed(fns: Sequence[Callable], argmaps: Sequence[Tuple],
+                  kwargs_list: Sequence[Dict[str, Any]],
+                  donate: Sequence[int] = (),
+                  contract: bool = False) -> Callable:
+    """Build one composition of chain-member implementations.
+
+    ``fns[i]`` is called with ``argmaps[i]`` resolved against the fused
+    node's positional args (an integer indexes them; ``"acc"`` is the
+    previous member's output) plus the member's captured ``kwargs_list[i]``.
+
+    Two modes (DESIGN.md §12):
+
+    * ``contract=False`` (default) — a plain call loop: each ``fns[i]``
+      must already be its *own* executable (the caller jits per member,
+      mirroring the agent execution contract).  Member boundaries stay
+      compilation boundaries, so XLA cannot contract ops across them
+      (e.g. fuse one member's ``mul`` with the next member's ``add`` into
+      an fma) — the composition is bit-identical to serial member
+      execution, which is what the decompose-on-failure guarantee and the
+      differential conformance tests require.  The fused node still pays
+      dispatch/placement/queueing once instead of once per member.
+    * ``contract=True`` (``HALO_FUSION_CONTRACT=1``) — the whole chain is
+      traced into a single ``jax.jit`` program, letting XLA fuse across
+      members (fastest; results may differ from serial execution by an
+      ulp where fma contraction applies — an ``optimization_barrier``
+      between members does *not* prevent it on XLA CPU).  ``donate``
+      lists positional args safe to donate (single-consumer intermediates
+      produced inside the same replayed graph) — applied only off-CPU,
+      where XLA honours donation."""
+    def composed(*arrays):
+        acc = None
+        for fn, argmap, kw in zip(fns, argmaps, kwargs_list):
+            call = tuple(acc if spec == ACC else arrays[spec]
+                         for spec in argmap)
+            acc = fn(*call, **kw)
+        return acc
+
+    if not contract:
+        return composed
+    donate = tuple(donate)
+    if donate and jax.default_backend() != "cpu":
+        return jax.jit(composed, donate_argnums=donate)
+    return jax.jit(composed)

@@ -1,0 +1,57 @@
+"""benchmarks.run summary folding: a crashed section must stub its
+artifact entry (empty ratios) so the regression gate reports its baseline
+keys as *missing* instead of silently gating a stale artifact."""
+import json
+
+from benchmarks.check_regression import main as gate_main
+from benchmarks.run import summarize
+
+
+def _write(root, name, payload):
+    (root / name).write_text(json.dumps(payload))
+
+
+def test_summarize_folds_ratios(tmp_path):
+    _write(tmp_path, "BENCH_thing.json", {"speedup_x": 2.0, "t_s": 1.0})
+    s = summarize(root=tmp_path)
+    ent = s["BENCH_thing"]
+    assert ent["ratios"] == {"speedup_x": 2.0}
+    assert ent["best_ratio"] == 2.0
+    assert json.loads((tmp_path / "BENCH_summary.json").read_text()) == s
+
+
+def test_crashed_section_stub_overwrites_stale_artifact(tmp_path):
+    # last week's artifact would fold fine and let the gate pass on stale
+    # numbers; the crash stub must overwrite the folded entry
+    _write(tmp_path, "BENCH_smoke_fusion.json",
+           {"decode": {"fused_replay_vs_serial_x": 2.0}})
+    s = summarize(root=tmp_path, crashed=["fusion"], smoke=True)
+    ent = s["BENCH_smoke_fusion"]
+    assert ent == {"file": "BENCH_smoke_fusion.json", "error": "crashed",
+                   "ratios": {}}
+
+
+def test_crashed_section_without_artifact_still_stubbed(tmp_path):
+    s = summarize(root=tmp_path, crashed=["graph"])
+    assert s["BENCH_graph"]["error"] == "crashed"
+    assert s["BENCH_graph"]["ratios"] == {}
+
+
+def test_gate_reports_crashed_section_as_missing(tmp_path, capsys):
+    _write(tmp_path, "BENCH_smoke_fusion.json",
+           {"decode": {"fused_replay_vs_serial_x": 2.0}})
+    _write(tmp_path, "BENCH_smoke_tuning.json", {"best_gain_x": 4.0})
+    _write(tmp_path, "BENCH_baseline.json", {
+        "tolerance": 0.25, "min_ratio": 1.05, "ratios": {
+            "BENCH_smoke_fusion.decode.fused_replay_vs_serial_x": 1.8,
+            "BENCH_smoke_tuning.best_gain_x": 3.5,
+        }})
+    summarize(root=tmp_path, crashed=["fusion"], smoke=True)
+    rc = gate_main(["--baseline", str(tmp_path / "BENCH_baseline.json"),
+                    "--summary", str(tmp_path / "BENCH_summary.json")])
+    out = capsys.readouterr().out
+    # tuning still gates (non-vacuous pass); the fusion key is *warned* as
+    # missing, not silently passed off the stale artifact on disk
+    assert rc == 0
+    assert "missing" in out
+    assert "BENCH_smoke_fusion.decode.fused_replay_vs_serial_x" in out

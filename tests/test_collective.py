@@ -212,6 +212,25 @@ def test_capture_order_hazard_edges_between_collectives(comm):
     g.wait(timeout=60)
 
 
+def test_recycled_graph_id_does_not_wire_stale_hazard_edges(comm):
+    """A fresh capture can reuse the ``id()`` of a dead graph whose tails
+    entry survived the stale sweep; wiring those completed foreign nodes
+    as hazard parents would hang the new graph's roots forever (they
+    never decrement).  The seal must reject tails it does not own."""
+    with halo_graph(session=comm.session) as g1:
+        stale = comm.ibcast(_x(seed=1))
+    jax.block_until_ready([n.result(timeout=60) for n in stale])
+    with halo_graph(session=comm.session) as g2:
+        # simulate id(g2) == id(g1): the dead graph's tails keyed as ours
+        comm._tails = {id(g2): list(stale)}
+        out = comm.ibcast(_x(seed=2))
+    for node in out:
+        assert all(g2.owns(p) for p in node.parents)
+    np.testing.assert_array_equal(
+        np.asarray(out[0].result(timeout=60)), np.asarray(_x(seed=2)))
+    del g1
+
+
 def test_blocking_collective_inside_capture_raises(comm):
     with halo_graph(session=comm.session, launch=False):
         with pytest.raises(GraphError, match="would deadlock"):

@@ -1,0 +1,422 @@
+"""Graph-level kernel fusion + compiled replay (DESIGN.md §12): chain
+detection, differential conformance (fused vs. unfused serial dispatch is
+*bit-identical* in the default composition mode, across dtypes and pinned
+substrates), decompose-on-failure under fault injection, straggler-triggered
+decomposition, replay caching with quarantine-epoch invalidation, and the
+steady-state no-re-placement guarantee."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CostModelScheduler, GraphError, HealthConfig,
+                        KernelRecord, KernelRegistry, RuntimeAgent,
+                        abstract_signature, default_manifest, halo_graph)
+from repro.kernels import register_all
+from repro.testing.faults import FaultPlan, chaos
+
+
+@pytest.fixture()
+def sess():
+    registry = KernelRegistry()
+    register_all(registry)
+    s = RuntimeAgent(registry=registry, manifest=default_manifest())
+    yield s
+    s.finalize()
+
+
+def _wait_until(pred, timeout=10.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.005)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+# chain specs: (alias, argspec) where an int indexes the shared inputs list
+# and "prev" splices the previous member's output
+MIXED4 = [("EWMM", (0, 1)), ("EWADD", ("prev", 2)),
+          ("EWSUB", ("prev", 1)), ("RMSNORM", ("prev", 3))]
+EW3 = [("EWMM", (0, 1)), ("EWADD", ("prev", 2)), ("EWSUB", ("prev", 1))]
+
+
+def _inputs(rng, dtype=jnp.float32, m=16, n=128):
+    k0, k1, k2 = jax.random.split(rng, 3)
+    a = jax.random.normal(k0, (m, n), jnp.float32).astype(dtype)
+    b = (jax.random.normal(k1, (m, n), jnp.float32) + 3.0).astype(dtype)
+    c = jax.random.normal(k2, (m, n), jnp.float32).astype(dtype)
+    gamma = jnp.ones((n,), dtype)
+    return [a, b, c, gamma]
+
+
+def _ov(pin):
+    if pin is None:
+        return None
+    return {"allowed_platforms": [pin], "platform_preference": [pin]}
+
+
+def _serial(sess, chain, inputs, pin=None):
+    """Unfused reference: one blocking dispatch per member."""
+    acc = None
+    for alias, spec in chain:
+        cr = sess.claim(alias, overrides=_ov(pin))
+        payload = tuple(acc if s == "prev" else inputs[s] for s in spec)
+        acc = sess.isend(payload, cr, mailbox=False).result(60)
+    return jax.block_until_ready(acc)
+
+
+def _capture(sess, chain, inputs, pin=None):
+    crs = [sess.claim(alias, overrides=_ov(pin)) for alias, _ in chain]
+    with halo_graph(session=sess, launch=False) as g:
+        acc = None
+        for (alias, spec), cr in zip(chain, crs):
+            payload = tuple(acc if s == "prev" else inputs[s] for s in spec)
+            acc = sess.isend(payload, cr)
+    return g
+
+
+def _fused(sess, chain, inputs, pin=None, fuse=None):
+    cg = _capture(sess, chain, inputs, pin).compile(fuse=fuse)
+    gr = cg.replay_async()
+    out = gr.wait(timeout=60)
+    return cg, gr, jax.block_until_ready(out[-1])
+
+
+def _bitwise(x, y):
+    assert x.dtype == y.dtype and x.shape == y.shape
+    assert bool(jnp.array_equal(x, y)), \
+        f"max |diff| = {jnp.max(jnp.abs(x - y))}"
+
+
+# ---------------------------------------------------------------------------
+# Chain detection + synthetic records
+# ---------------------------------------------------------------------------
+def test_chain_detection_and_stats(sess, rng):
+    """A 3-deep chain plus an independent node compile to 2 templates; the
+    fused record is registered without a jnp fail-safe (decompose *is* the
+    fail-safe) and opts out of the agents' outer jit."""
+    a, b, c, _ = _inputs(rng)
+    w = jnp.eye(16, dtype=jnp.float32)
+    chain = [("EWMM", (0, 1)), ("EWADD", ("prev", 2)), ("EWSUB", ("prev", 1))]
+    crs = [sess.claim(al, overrides=None) for al, _ in chain]
+    cr_mmm = sess.claim("MMM")
+    with halo_graph(session=sess, launch=False) as g:
+        acc = None
+        for (al, spec), cr in zip(chain, crs):
+            acc = sess.isend(tuple(acc if s == "prev" else [a, b, c][s]
+                                   for s in spec), cr)
+        sess.isend((w, w), cr_mmm)               # independent of the chain
+    cg = g.compile()
+    st = cg.stats
+    assert st["captured_nodes"] == 4 and st["nodes"] == 2
+    assert st["fused_nodes"] == 1
+    assert st["intermediates_eliminated"] == 2
+    assert st["pinned_placements"] + st["unplanned_placements"] == 2
+    (alias,) = st["fused_aliases"]
+    assert alias.startswith("FUSED:EWMM+EWADD+EWSUB@")
+    recs = sess.registry.records(alias)
+    assert recs and sess.registry.failsafe(alias) is None
+    for rec in recs:
+        assert rec.tuning_space is not None      # agents must not re-jit
+    xla_rec = next(r for r in recs if r.platform == "xla")
+    assert xla_rec.cost_model is not None        # sum-of-parts estimate
+
+
+def test_terminal_rule_ends_chain(sess, rng):
+    """MMM may terminate a chain (ewise → matmul epilogue) but nothing
+    fuses after it; results stay bit-identical to serial dispatch."""
+    a, b, c, _ = _inputs(rng, m=32, n=32)
+    chain = [("EWMM", (0, 1)), ("MMM", ("prev", 1)), ("EWADD", ("prev", 2))]
+    ref = _serial(sess, chain, [a, b, c])
+    cg, gr, out = _fused(sess, chain, [a, b, c])
+    assert cg.stats["fused_nodes"] == 1
+    assert cg.stats["intermediates_eliminated"] == 1
+    assert cg.stats["fused_aliases"][0].startswith("FUSED:EWMM+MMM@")
+    assert cg.stats["nodes"] == 2                # EWADD rides outside
+    _bitwise(ref, out)
+
+
+def test_consumers_of_fused_tail_rewire_to_fused_node(sess, rng):
+    """Nodes consuming the chain tail (which no longer exists as a node)
+    read the fused node's output instead; both diamond outputs match the
+    serial reference bitwise."""
+    a, b, c, _ = _inputs(rng)
+    crs = {al: sess.claim(al) for al in ("EWMM", "EWADD", "EWSUB")}
+
+    def run_serial():
+        t = sess.isend((a, b), crs["EWMM"], mailbox=False).result(60)
+        u = sess.isend((t, c), crs["EWADD"], mailbox=False).result(60)
+        left = sess.isend((u, b), crs["EWMM"], mailbox=False).result(60)
+        right = sess.isend((u, c), crs["EWSUB"], mailbox=False).result(60)
+        return left, right
+
+    ref_l, ref_r = run_serial()
+    with halo_graph(session=sess, launch=False) as g:
+        t = sess.isend((a, b), crs["EWMM"])
+        u = sess.isend((t, c), crs["EWADD"])
+        sess.isend((u, b), crs["EWMM"])
+        sess.isend((u, c), crs["EWSUB"])
+    cg = g.compile()
+    assert cg.stats["fused_nodes"] == 1 and cg.stats["nodes"] == 3
+    out_l, out_r = cg.replay(timeout=60)
+    _bitwise(ref_l, out_l)
+    _bitwise(ref_r, out_r)
+
+
+# ---------------------------------------------------------------------------
+# Differential conformance: fused must be bit-identical to unfused serial
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("pin", [None, "xla"])
+def test_fused_chain_bitwise_vs_serial(sess, rng, dtype, pin):
+    """Default-mode fusion (composition loop over per-member executables)
+    is bit-identical to one-kernel-at-a-time dispatch."""
+    inputs = _inputs(rng, dtype)
+    ref = _serial(sess, MIXED4, inputs, pin=pin)
+    cg, gr, out = _fused(sess, MIXED4, inputs, pin=pin)
+    assert cg.stats["fused_nodes"] == 1 and cg.stats["nodes"] == 1
+    assert "decomposed" not in gr.nodes[0].attempts
+    _bitwise(ref, out)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_pure_ewise_chain_on_pallas_bitwise(sess, rng, dtype):
+    """A pure element-wise chain pinned to pallas runs the fused pallas
+    composition (loop over member pallas kernels) — still bit-identical."""
+    inputs = _inputs(rng, dtype)
+    ref = _serial(sess, EW3, inputs, pin="pallas")
+    cg, gr, out = _fused(sess, EW3, inputs, pin="pallas")
+    node = gr.nodes[0]
+    assert "decomposed" not in node.attempts
+    assert node.platform == "pallas"
+    _bitwise(ref, out)
+
+
+def test_js_chain_bitwise(sess, rng):
+    """Jacobi sweeps chain through x: mixed-arity members fuse via the XLA
+    composition and match three serial sweeps bitwise."""
+    k0, k1 = jax.random.split(rng)
+    n = 64
+    a = jax.random.normal(k0, (n, n)) + n * jnp.eye(n)   # diag-dominant
+    b = jax.random.normal(k1, (n,))
+    x0 = jnp.zeros((n,))
+
+    def run(isend):
+        x = x0
+        for _ in range(3):
+            x = isend(x)
+        return x
+
+    cr = sess.claim("JS")
+    ref = jax.block_until_ready(run(
+        lambda x: sess.isend((a, x, b), cr, mailbox=False).result(60)))
+    with halo_graph(session=sess, launch=False) as g:
+        run(lambda x: sess.isend((a, x, b), cr))
+    cg = g.compile()
+    assert cg.stats["fused_nodes"] == 1
+    assert cg.stats["fused_aliases"][0].startswith("FUSED:JS+JS+JS@")
+    (out,) = cg.replay(timeout=60)
+    _bitwise(ref, jax.block_until_ready(out))
+
+
+@pytest.mark.parametrize("pin", ["pallas", "jnp"])
+def test_mixed_chain_pinned_off_xla_decomposes_bitwise(sess, rng, pin):
+    """A mixed chain pinned to a substrate with no fused record decomposes
+    back into member nodes at replay — and still matches serial bitwise."""
+    inputs = _inputs(rng)
+    ref = _serial(sess, MIXED4, inputs, pin=pin)
+    cg, gr, out = _fused(sess, MIXED4, inputs, pin=pin)
+    assert cg.stats["fused_nodes"] == 1
+    node = gr.nodes[0]
+    assert "decomposed" in node.attempts
+    assert node.platform == pin                  # tail member's substrate
+    # shadow member nodes are hidden from the output frontier
+    assert gr.outputs == [node]
+    _bitwise(ref, out)
+
+
+# ---------------------------------------------------------------------------
+# Failure + straggler semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_fail_then_decompose_bitwise(sess, rng, dtype):
+    """A fused record whose execution raises quarantines and decomposes;
+    the member-chain result is bit-identical to never having fused."""
+    inputs = _inputs(rng, dtype)
+    ref = _serial(sess, MIXED4, inputs)
+    cg = _capture(sess, MIXED4, inputs).compile()
+    (alias,) = cg.stats["fused_aliases"]
+    with chaos(sess, FaultPlan(platform="xla", mode="raise",
+                               aliases=[alias])) as fa:
+        gr = cg.replay_async()
+        out = jax.block_until_ready(gr.wait(timeout=60)[-1])
+        assert fa.failures >= 1
+    node = gr.nodes[0]
+    assert "decomposed" in node.attempts
+    assert sess.registry.records(alias)          # record stays registered…
+    _bitwise(ref, out)                           # …and the fallback matches
+
+
+def test_straggler_fused_node_decomposes(sess, rng):
+    """A straggling fused attempt with no second fused record speculates by
+    decomposing: the member chain races the straggler, first win counts."""
+    inputs = _inputs(rng)
+    ref = _serial(sess, MIXED4, inputs)
+    sess.enable_health_monitor(
+        config=HealthConfig(heartbeat_timeout=60.0, straggler_multiple=1.0,
+                            straggler_min_s=0.05), start=False)
+    cg = _capture(sess, MIXED4, inputs).compile()
+    (alias,) = cg.stats["fused_aliases"]
+    with chaos(sess, FaultPlan(platform="xla", mode="hang", delay_s=60.0,
+                               aliases=[alias])) as fa:
+        gr = cg.replay_async()
+        _wait_until(lambda: fa.failures >= 1, what="fused attempt wedged")
+        time.sleep(0.06)                         # past the speculation floor
+        sess.health.check()
+        node = gr.nodes[0]
+        assert "decomposed+spec" in node.attempts
+        fa.release()                             # unwedge the xla worker
+        out = jax.block_until_ready(gr.wait(timeout=60)[-1])
+    _bitwise(ref, out)
+
+
+# ---------------------------------------------------------------------------
+# CompiledGraph cache + replay
+# ---------------------------------------------------------------------------
+def test_replay_cache_hit_and_epoch_invalidation(sess, rng):
+    """Re-compiling an identical capture returns the cached CompiledGraph;
+    a quarantine change (scheduler epoch bump) forces a fresh plan."""
+    inputs = _inputs(rng)
+    cg1 = _capture(sess, EW3, inputs).compile()
+    cg2 = _capture(sess, EW3, inputs).compile()
+    assert cg2 is cg1
+    assert cg1.stats["cache_hits"] == 1
+    rec = sess.registry.records("MMM")[0]
+    sess.scheduler.mark_failed(rec)              # epoch moves → stale plans
+    cg3 = _capture(sess, EW3, inputs).compile()
+    assert cg3 is not cg1
+    sess.scheduler.clear_failures()
+
+
+def test_compiled_graph_cache_is_bounded(monkeypatch, sess, rng):
+    monkeypatch.setenv("HALO_GRAPH_CACHE", "2")
+    for m in (8, 16, 24):
+        _capture(sess, EW3, _inputs(rng, m=m)).compile()
+    assert len(sess._compiled_graphs) == 2
+
+
+def test_replay_updates_and_validation(sess, rng):
+    """replay(updates=) swaps input slots by index; shape/dtype mismatches
+    and unknown slots are rejected (recompile instead of silent garbage)."""
+    inputs = _inputs(rng)
+    cg, _, out = _fused(sess, EW3, inputs)
+    slot = cg.slot_of(inputs[0])
+    assert slot is not None
+    a2 = inputs[0] * 2.0
+    ref2 = _serial(sess, EW3, [a2] + inputs[1:])
+    (out2,) = cg.replay(updates={slot: a2}, timeout=60)
+    _bitwise(ref2, jax.block_until_ready(out2))
+    with pytest.raises(GraphError):
+        cg.replay(updates={slot: jnp.zeros((2, 2))})
+    with pytest.raises(GraphError):
+        cg.replay(updates={99: a2})
+
+
+def test_steady_state_replay_is_fully_pinned(sess, rng):
+    """After compile, replays place every node through the pinned fast
+    path — no re-capture, no re-scoring, no re-wiring in steady state."""
+    inputs = _inputs(rng)
+    cg = _capture(sess, MIXED4, inputs).compile()
+    for _ in range(3):
+        cg.replay(timeout=60)
+    assert cg.stats["replays"] == 3
+    assert cg.stats["placements_scored_last"] == 0
+    assert cg.stats["placements_pinned_last"] == cg.stats["nodes"]
+
+
+def test_halo_fusion_env_disables_fusion(monkeypatch, sess, rng):
+    """HALO_FUSION=0 keeps replay caching but skips the fusion pass; the
+    unfused compiled graph still matches serial bitwise."""
+    monkeypatch.setenv("HALO_FUSION", "0")
+    inputs = _inputs(rng)
+    ref = _serial(sess, MIXED4, inputs)
+    cg, gr, out = _fused(sess, MIXED4, inputs)
+    assert cg.stats["fused_nodes"] == 0
+    assert cg.stats["nodes"] == cg.stats["captured_nodes"] == 4
+    _bitwise(ref, out)
+
+
+def test_contract_mode_registers_single_jit_records(monkeypatch, sess, rng):
+    """HALO_FUSION_CONTRACT=1 trades bit-exactness for a single-jit chain
+    program (+ generated Pallas chain kernel for pure-ewise chains); the
+    result stays numerically close to serial."""
+    monkeypatch.setenv("HALO_FUSION_CONTRACT", "1")
+    inputs = _inputs(rng)
+    ref = _serial(sess, EW3, inputs)
+    cg, gr, out = _fused(sess, EW3, inputs)
+    (alias,) = cg.stats["fused_aliases"]
+    platforms = {r.platform for r in sess.registry.records(alias)}
+    assert platforms == {"xla", "pallas"}        # chain kernel registered
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(out, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_compile_rejects_launched_and_foreign_graphs(sess, rng):
+    a, b, _, _ = _inputs(rng)
+    cr = sess.claim("EWMM")
+    with halo_graph(session=sess) as g:          # launched on exit
+        sess.isend((a, b), cr)
+    g.wait(timeout=60)
+    with pytest.raises(GraphError, match="already launched"):
+        g.compile()
+    fut = sess.isend((a, b), cr, mailbox=False)
+    fut.result(60)
+    with halo_graph(session=sess, launch=False) as g2:
+        sess.isend((fut, b), cr)                 # gated on a foreign future
+    with pytest.raises(GraphError, match="outside this graph"):
+        g2.compile()
+
+
+# ---------------------------------------------------------------------------
+# Cost + scheduler plumbing
+# ---------------------------------------------------------------------------
+def test_sum_of_parts_cost_model(sess, rng):
+    """A fused record estimates as the sum of its members' best estimates
+    until measured — and refuses to guess before any member is known."""
+    inputs = _inputs(rng)
+    cg = _capture(sess, EW3, inputs).compile()
+    (alias,) = cg.stats["fused_aliases"]
+    rec = next(r for r in sess.registry.records(alias) if r.platform == "xla")
+    abstract = tuple(jax.ShapeDtypeStruct(x.shape, x.dtype)
+                     for x in inputs[:3])
+    with pytest.raises(ValueError):
+        rec.cost_model(*abstract)                # no member estimates yet
+    sched = sess.scheduler
+    sig = abstract_signature(abstract[:2])
+    per_member = {"EWMM": 3e-4, "EWADD": 2e-4, "EWSUB": 1e-4}
+    for al, seconds in per_member.items():
+        mrec = next(r for r in sess.registry.records(al)
+                    if r.platform == "xla")
+        sched.observe(mrec, sig, seconds)        # warmup sample (discarded)
+        sched.observe(mrec, sig, seconds)
+    assert rec.cost_model(*abstract) == pytest.approx(sum(
+        per_member.values()), rel=1e-6)
+
+
+def test_scheduler_epoch_tracks_quarantine_changes():
+    sched = CostModelScheduler()
+    rec = KernelRecord(alias="K", fn=lambda a: a, platform="xla")
+    e0 = sched.epoch
+    sched.mark_failed(rec)
+    assert sched.epoch == e0 + 1
+    sched.clear_failures()
+    assert sched.epoch == e0 + 2
+    sched.clear_failures()                       # nothing quarantined: no-op
+    assert sched.epoch == e0 + 2

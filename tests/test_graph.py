@@ -317,3 +317,36 @@ def test_graph_results_not_mailboxed(agent):
     g.wait(timeout=30)
     with pytest.raises(RuntimeError, match="empty mailbox"):
         agent.recv(cr)
+
+
+def test_candidate_cache_is_bounded(agent, monkeypatch):
+    """The per-graph placement-candidate cache evicts oldest entries past
+    its cap instead of growing with every distinct (alias, sig) seen."""
+    from repro.core.graph import ExecutionGraph
+    monkeypatch.setattr(ExecutionGraph, "_CAND_CACHE_MAX", 3)
+    cr = agent.claim("EWMM")
+    with halo_graph(session=agent) as g:
+        for m in (2, 3, 4, 5, 6):                  # 5 distinct signatures
+            agent.isend((jnp.ones((m, m)), jnp.ones((m, m))), cr)
+    g.wait(timeout=30)
+    assert len(g._cand_cache) <= 3
+
+
+def test_candidate_cache_flushed_on_quarantine_change(agent):
+    """mark_failed / clear_failures mid-graph move the scheduler epoch; the
+    next placement flushes every cached candidate list and re-syncs, and a
+    quarantined record stops being offered immediately."""
+    a = jnp.ones((8, 8))
+    cr = agent.claim("EWMM")
+    with halo_graph(session=agent, launch=False) as g:
+        node = agent.isend((a, a), cr)
+    rec, _, _ = g._place(node, (a, a))
+    assert g._cand_cache and g._cand_epoch == agent.scheduler.epoch
+    agent.scheduler.mark_failed(rec)               # quarantine mid-graph
+    rec2, _, _ = g._place(node, (a, a))
+    assert rec2 is not rec                         # no longer offered
+    assert g._cand_epoch == agent.scheduler.epoch  # cache re-synced
+    agent.scheduler.clear_failures()
+    rec3, _, _ = g._place(node, (a, a))
+    assert rec3 is rec                             # offered again post-clear
+    assert g._cand_epoch == agent.scheduler.epoch
