@@ -1,0 +1,206 @@
+"""Multi-process collective Jacobi scaling: 2 -> 4 -> 8 ranks
+(DESIGN.md §13).
+
+Strong scaling over mixed in-process/remote device groups: a fixed pool of
+``SYSTEMS`` independent Jacobi systems is swept ``SWEEPS`` times, the pool
+distributed over an R-member ``HaloComm`` whose rank 0 is the in-process
+``xla`` agent and ranks 1..R-1 are :class:`~repro.distributed.remote
+.RemoteAgent` members, one spawned worker process each.  Each member sweeps
+``SYSTEMS/R`` systems (batched ``imap`` calls inside one captured graph),
+so doubling the member count halves the per-member work — the scaling
+ratio ``T(2 members) / T(R members)`` is the figure of merit.
+
+Context numbers ride along per scale: the single-agent serial floor
+(``speedup_x`` vs one kernel at a time in-process), the node count, and
+the wire traffic — total frame bytes written per member plus the raw
+bytes the content-addressed buffer cache elided (each system's constant
+Jacobi matrix ships once per worker, then travels as a 16-byte digest
+ref; DESIGN.md §13).  Every member runs the same xla record fns, so
+parity with the serial pass is bit-exact: distributing across processes
+must not change a single bit.
+
+Reading the curve: the artifact records ``host_cpus``.  On a single-core
+CI container every process timeshares one CPU, so wall-clock cannot
+improve with rank count — there the scaling ratios measure the transport
+overhead envelope (how little adding members *costs*), and the ratios are
+recorded, not gated (they sit below the 1.05 baseline floor by design).
+On a multi-core host the same sweep measures real strong scaling.
+
+Results go to ``BENCH_multiproc.json``; ``--smoke`` runs the 2-rank point
+only at reduced shapes, writing ``BENCH_smoke_multiproc.json`` for the CI
+bench-regression gate.
+
+Run:  PYTHONPATH=src python -m benchmarks.multiproc_scaling [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _workload(n, systems, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), systems + 1)
+    As = [jax.random.normal(keys[i], (n, n), jnp.float32)
+          + n * jnp.eye(n, dtype=jnp.float32) for i in range(systems)]
+    b = jax.random.normal(keys[-1], (n,), jnp.float32)
+    return {"As": As, "bs": [(i + 1.0) * b for i in range(systems)],
+            "x0s": [jnp.zeros(n, jnp.float32)] * systems}
+
+
+def _serial_pass(session, cr_js, cr_vdp, w, sweeps):
+    """One kernel at a time on the local xla agent, system by system."""
+    xs, res = [], 0.0
+    for r in range(len(w["As"])):
+        x = w["x0s"][r]
+        for _ in range(sweeps):
+            session.send((w["As"][r], x, w["bs"][r]), cr_js)
+            x = session.recv(cr_js)
+        session.send((x, x), cr_vdp)
+        res += float(session.recv(cr_vdp))
+        xs.append(x)
+    return np.concatenate([np.asarray(x) for x in xs]), res
+
+
+def _collective_pass(comm, w, sweeps):
+    """The identical sweeps as ONE captured graph over the device group.
+
+    ``SYSTEMS/R`` batches of R systems each: batch k's system r runs on
+    member r (``imap`` pins one dispatch per rank), batches pipeline on the
+    member agents' FIFO queues — so every member sweeps its share of the
+    pool and the batches overlap across processes."""
+    from repro.core import halo_graph
+
+    R = comm.size
+    systems = len(w["As"])
+    assert systems % R == 0, (systems, R)
+    batches = [slice(k * R, (k + 1) * R) for k in range(systems // R)]
+    with halo_graph(session=comm.session) as g:
+        X = list(w["x0s"])
+        for _ in range(sweeps):
+            for sl in batches:
+                X[sl] = comm.imap("JS", list(zip(w["As"][sl], X[sl],
+                                                 w["bs"][sl])))
+        parts, outs = [], []
+        for sl in batches:
+            S = comm.imap("VDP", list(zip(X[sl], X[sl])))
+            parts.append(comm.iallreduce(S, op="sum")[0])
+            outs.append(comm.igather(X[sl]))
+    x = np.concatenate([np.asarray(jax.block_until_ready(o.result(timeout=600)))
+                        for o in outs])
+    res = sum(float(p.result(timeout=60)) for p in parts)
+    return x, res, g
+
+
+def _best_of(fn, repeats):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(smoke: bool = False) -> dict:
+    """Run the scaling sweep; writes the JSON artifact and returns it."""
+    from repro.core import RuntimeAgent, default_manifest
+    from repro.core.registry import KernelRegistry
+    from repro.distributed.remote import spawn_worker
+    from repro.kernels import register_all
+
+    scales = [2] if smoke else [2, 4, 8]
+    n, sweeps, repeats = (48, 8, 3) if smoke else (64, 12, 5)
+    systems = 2 if smoke else 8
+    out_path = ROOT / ("BENCH_smoke_multiproc.json" if smoke
+                       else "BENCH_multiproc.json")
+
+    registry = KernelRegistry()
+    register_all(registry)
+    session = RuntimeAgent(registry=registry, manifest=default_manifest())
+    pin = {"allowed_platforms": ["xla"], "platform_preference": ["xla"]}
+    cr_js = session.claim("JS", overrides=pin)
+    cr_vdp = session.claim("VDP", overrides=pin)
+    if session.scheduler is not None:
+        session.scheduler.sample_every = 10 ** 9   # freeze during timing
+        session.scheduler.min_samples = 0
+
+    workers, agents = [], []
+    print(f"# === multi-process collective Jacobi: {systems} systems over "
+          f"{'/'.join(map(str, scales))} ranks ===", flush=True)
+    print("name,us_per_call,derived")
+    per_scale: dict = {}
+    w_load = _workload(n, systems=systems)
+    x_ref, res_ref = _serial_pass(session, cr_js, cr_vdp, w_load, sweeps)
+    try:
+        for ranks in scales:
+            while len(workers) < ranks - 1:
+                w = spawn_worker(f"bw{len(workers)}", devices=2)
+                workers.append(w)
+                agents.append(w.agent("xla").attach(session))
+            members = ["xla"] + [ag.platform for ag in agents[:ranks - 1]]
+            comm = session.comm_split(members)
+            wire0 = [w.client.wire_stats() for w in workers[:ranks - 1]]
+
+            x_col, res_col, g = _collective_pass(comm, w_load, sweeps)
+            np.testing.assert_array_equal(x_col, x_ref)   # bit-exact
+            np.testing.assert_allclose(res_col, res_ref, rtol=1e-4)
+
+            serial_s = collective_s = float("inf")
+            for _ in range(repeats):       # alternate arms: drift-fair
+                serial_s = min(serial_s, _best_of(
+                    lambda: _serial_pass(session, cr_js, cr_vdp,
+                                         w_load, sweeps), 1))
+                collective_s = min(collective_s, _best_of(
+                    lambda: _collective_pass(comm, w_load, sweeps), 1))
+            comm.free()
+            wire1 = [w.client.wire_stats() for w in workers[:ranks - 1]]
+            sent = sum(b["bytes_sent"] - a["bytes_sent"]
+                       for a, b in zip(wire0, wire1))
+            saved = sum(b["bytes_saved"] - a["bytes_saved"]
+                        for a, b in zip(wire0, wire1))
+            per_scale[str(ranks)] = {
+                "members": members,
+                "nodes": len(g.nodes),
+                "serial_s": round(serial_s, 6),
+                "collective_s": round(collective_s, 6),
+                "speedup_x": round(serial_s / max(collective_s, 1e-9), 3),
+                "wire_sent_mb": round(sent / 2**20, 3),
+                "wire_cache_saved_mb": round(saved / 2**20, 3),
+            }
+            print(f"collective/{ranks}rank,"
+                  f"{collective_s / len(g.nodes) * 1e6:.1f},"
+                  f"members={ranks}")
+    finally:
+        for w in workers:
+            w.shutdown()
+        session.finalize()
+
+    base = per_scale[str(scales[0])]["collective_s"]
+    scaling = {f"scaling_{r}rank_x":
+               round(base / max(per_scale[str(r)]["collective_s"], 1e-9), 3)
+               for r in scales[1:]}
+    rec = {
+        "n": n, "sweeps": sweeps, "repeats": repeats, "systems": systems,
+        "workers": len(workers),
+        "host_cpus": os.cpu_count(),    # 1 CPU => overhead envelope, not
+        "scales": per_scale,            # speedup (see module docstring)
+        **scaling,
+    }
+    out_path.write_text(json.dumps(rec, indent=1))
+    print(f"# wrote {out_path.name}: "
+          + ", ".join(f"{r}r={per_scale[r]['collective_s'] * 1e3:.0f}ms"
+                      for r in per_scale)
+          + "".join(f", {k}={v}" for k, v in scaling.items()))
+    return rec
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -218,6 +218,11 @@ def _fusion(smoke: bool = False):
     fusion_main(smoke=smoke)
 
 
+def _multiproc(smoke: bool = False):
+    from .multiproc_scaling import main as multiproc_main
+    multiproc_main(smoke=smoke)
+
+
 #: name -> full-pass section runner, in execution order
 SECTIONS = {
     "tables": _paper_tables,
@@ -225,6 +230,7 @@ SECTIONS = {
     "async": _async,
     "graph": _graph,
     "collective": _collective,
+    "multiproc": _multiproc,
     "serve": _serve,
     "tuning": _tuning,
     "fusion": _fusion,
@@ -234,6 +240,7 @@ SECTIONS = {
 #: the tiny CI subset: best-of-N, reduced shapes, BENCH_smoke_*.json
 SMOKE_SECTIONS = {
     "collective": lambda: _collective(smoke=True),
+    "multiproc": lambda: _multiproc(smoke=True),
     "tuning": lambda: _tuning(smoke=True),
     "fusion": lambda: _fusion(smoke=True),
 }

@@ -36,7 +36,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import logging
-import os
 import queue
 import threading
 import time
@@ -45,6 +44,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 
 from .compute_object import BufferHandle, as_compute_object
+from .envutil import env_flag, env_float
 from .manifest import Manifest, default_manifest
 from .registry import (GLOBAL_REGISTRY, KernelRecord, KernelRegistry,
                        SelectionError)
@@ -252,20 +252,12 @@ class HealthConfig:
     def from_env(cls, **overrides: Any) -> "HealthConfig":
         """Build from ``HALO_HEARTBEAT_TIMEOUT`` / ``HALO_HEALTH_POLL`` /
         ``HALO_STRAGGLER_MULTIPLE`` / ``HALO_STRAGGLER_MIN``, explicit
-        keyword overrides winning (tests strip all ``HALO_*`` vars)."""
-        def env(name: str, default):
-            raw = os.environ.get(name)
-            if raw is None or raw == "":
-                return default
-            try:
-                return float(raw)
-            except ValueError:
-                log.warning("ignoring non-numeric %s=%r", name, raw)
-                return default
-        cfg = {"heartbeat_timeout": env("HALO_HEARTBEAT_TIMEOUT", 30.0),
-               "poll_interval": env("HALO_HEALTH_POLL", None),
-               "straggler_multiple": env("HALO_STRAGGLER_MULTIPLE", 4.0),
-               "straggler_min_s": env("HALO_STRAGGLER_MIN", 0.25)}
+        keyword overrides winning (tests strip all ``HALO_*`` vars).
+        Malformed values warn and fall back (envutil semantics)."""
+        cfg = {"heartbeat_timeout": env_float("HALO_HEARTBEAT_TIMEOUT", 30.0),
+               "poll_interval": env_float("HALO_HEALTH_POLL", None),
+               "straggler_multiple": env_float("HALO_STRAGGLER_MULTIPLE", 4.0),
+               "straggler_min_s": env_float("HALO_STRAGGLER_MIN", 0.25)}
         cfg.update(overrides)
         return cls(**cfg)
 
@@ -497,7 +489,7 @@ class VirtualizationAgent:
             try:
                 result = fn()
             except BaseException as exc:  # noqa: BLE001 — propagate via future
-                fut.set_exception(exc)
+                self._fail_item(fut, exc)
                 self._beat(None)
                 continue
             fut.set_result(result)        # waiters proceed before bookkeeping
@@ -507,6 +499,15 @@ class VirtualizationAgent:
                     after(result, t0)
                 except Exception:
                     log.exception("post-execution hook raised")
+
+    def _fail_item(self, fut: HaloFuture, exc: BaseException) -> None:
+        """Complete a work item's future with its execution error.  Split
+        out of :meth:`_worker_loop` so transports can suppress it: a
+        RemoteAgent whose process died fails the *transport* call on the
+        blocked worker thread, but by then ``mark_dead`` already handed the
+        item to the replay ladder — completing the future with the
+        transport error would race (and could beat) the replayed result."""
+        fut.set_exception(exc)
 
     def submit(self, fn: Callable[[], Any], future: Optional[HaloFuture] = None,
                after: Optional[Callable[[Any, float], None]] = None,
@@ -637,7 +638,9 @@ class XlaAgent(VirtualizationAgent):
             # config kwargs are static (DESIGN.md §9); an outer jit here
             # would trace the config ints and break the static block specs
             return record.fn(*args, **kwargs)
-        key = id(record)
+        # keyed by record.uid, not id(record): a collected record's id can
+        # be reused by a new one, which would silently serve a stale jit
+        key = record.uid
         fn = self._jit_cache.get(key)
         if fn is None:
             fn = jax.jit(record.fn)
@@ -753,7 +756,7 @@ class RuntimeAgent:
         self.health: Optional[HealthMonitor] = None
         if health is not None:
             self.enable_health_monitor(monitor=health, start=False)
-        elif os.environ.get("HALO_HEALTH_MONITOR", "") not in ("", "0"):
+        elif env_flag("HALO_HEALTH_MONITOR"):
             self.enable_health_monitor()
 
     # -- agent interoperability (plug-and-play, §V-A5) -------------------------

@@ -1,0 +1,73 @@
+"""Hardened ``HALO_*`` environment-variable parsing.
+
+Every runtime knob that reads the environment goes through these helpers so
+a malformed value (``HALO_GRAPH_CACHE=abc``, ``HALO_HEARTBEAT_TIMEOUT=""``)
+degrades to a logged warning plus the built-in default instead of a
+``ValueError`` deep inside an init path.  This matters doubly for the
+multi-process runtime (DESIGN.md §13): spawned workers inherit whatever
+environment the user's launcher had, and a worker that dies during
+``import repro`` because of a typo'd env var looks exactly like a hardware
+fault to the health monitor.
+
+Semantics shared by all helpers: an unset or empty variable silently yields
+the default (empty means "not configured", matching the pre-existing call
+sites); a present-but-unparsable value warns once per call and yields the
+default.
+"""
+from __future__ import annotations
+
+import logging
+import os
+from typing import Optional
+
+log = logging.getLogger("repro.halo.env")
+
+__all__ = ["env_flag", "env_float", "env_int", "env_path"]
+
+
+def env_int(name: str, default: int) -> int:
+    """``int(os.environ[name])`` with warn-and-fallback on malformed values."""
+    raw = os.environ.get(name)
+    if raw is None or raw == "":
+        return default
+    try:
+        return int(raw)
+    except ValueError:
+        log.warning("ignoring non-integer %s=%r (using default %r)",
+                    name, raw, default)
+        return default
+
+
+def env_float(name: str, default: Optional[float]) -> Optional[float]:
+    """``float(os.environ[name])`` with warn-and-fallback on malformed
+    values.  ``default`` may be None for knobs whose unset state is
+    meaningful (e.g. ``HALO_HEALTH_POLL`` -> derive from the timeout)."""
+    raw = os.environ.get(name)
+    if raw is None or raw == "":
+        return default
+    try:
+        return float(raw)
+    except ValueError:
+        log.warning("ignoring non-numeric %s=%r (using default %r)",
+                    name, raw, default)
+        return default
+
+
+def env_flag(name: str, default: bool = False) -> bool:
+    """Boolean knob: unset/empty -> ``default``; ``"0"`` -> False; any other
+    value -> True.  (Matches the historical ``not in ("", "0")`` sites, so
+    ``HALO_FUSION=yes`` keeps meaning "on".)"""
+    raw = os.environ.get(name)
+    if raw is None or raw == "":
+        return default
+    return raw != "0"
+
+
+def env_path(name: str, default: Optional[str] = None) -> Optional[str]:
+    """Path-valued knob: unset/empty -> ``default`` (usually None, meaning
+    "memory only").  No validation beyond emptiness — the consumer decides
+    whether a missing file is cold-start or an error."""
+    raw = os.environ.get(name)
+    if raw is None or raw == "":
+        return default
+    return raw

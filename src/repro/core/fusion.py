@@ -37,9 +37,10 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import itertools
 import logging
-import os
 import threading
+import weakref
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -48,6 +49,7 @@ import numpy as np
 
 from .agents import HaloFuture, RuntimeAgent
 from .compute_object import ComputeObject, as_compute_object
+from .envutil import env_flag, env_int
 from .registry import KernelAttributes, KernelRecord, SelectionError
 from .scheduler import abstract_signature
 
@@ -376,15 +378,14 @@ def _ensure_fused_records(session: RuntimeAgent, alias: str,
         return existing
     from ..kernels.fused import ewise_chain, ewise_chain_space, make_composed
 
-    contract = os.environ.get("HALO_FUSION_CONTRACT", "0") not in ("", "0")
+    contract = env_flag("HALO_FUSION_CONTRACT")
     cost = _sum_of_parts_cost(session, members)
     argmaps = [tuple("acc" if s == CHAIN else s for s in m.argmap)
                for m in members]
     kwargs_list = [dict(m.kwargs) for m in members]
     xla_recs = [_member_record(registry, m.alias, "xla") for m in members]
     if contract:
-        donate_on = os.environ.get("HALO_FUSION_DONATE", "0") \
-            not in ("", "0")
+        donate_on = env_flag("HALO_FUSION_DONATE")
         composed = make_composed([r.fn for r in xla_recs], argmaps,
                                  kwargs_list,
                                  donate=tuple(donate) if donate_on else (),
@@ -550,6 +551,32 @@ def _payload_sig(obj: Any, slot_idx: Dict[int, int]) -> str:
     return f"s{obj!r}"
 
 
+# Stable ids for failsafe callables in compiled-graph cache keys.  The key
+# must distinguish *which* callback a node carries, but ``id()`` of a
+# callable can be recycled after collection — a new lambda allocated at a
+# dead one's address would silently hit the dead graph's cached plan.  A
+# WeakKeyDictionary entry dies with its callable, so a uid is never reused
+# for a different live object.
+_callable_uids: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_callable_uid_counter = itertools.count(1)
+_callable_uid_lock = threading.Lock()
+
+
+def _callable_uid(fn: Callable) -> int:
+    """Process-unique id for ``fn``, stable for its lifetime."""
+    with _callable_uid_lock:
+        try:
+            uid = _callable_uids.get(fn)
+            if uid is None:
+                uid = next(_callable_uid_counter)
+                _callable_uids[fn] = uid
+            return uid
+        except TypeError:
+            # non-weakref-able callable (e.g. a builtin): fall back to id();
+            # builtins are immortal so reuse cannot occur
+            return id(fn)
+
+
 def _graph_key(g, fuse: bool, slot_idx: Dict[int, int]) -> str:
     """Cache key: topology + shapes/dtypes + kwargs/overrides + placement
     epoch.  A quarantine change (``CostModelScheduler.epoch``) invalidates
@@ -569,7 +596,7 @@ def _graph_key(g, fuse: bool, slot_idx: Dict[int, int]) -> str:
             f"|{node.alias}|{node.tag}"
             f"|{sorted((k, repr(v)) for k, v in node.overrides.items())}"
             f"|{sorted((k, repr(v)) for k, v in node.kwargs.items())}"
-            f"|{cr_sig}|{id(node.failsafe) if node.failsafe else 0}"
+            f"|{cr_sig}|{_callable_uid(node.failsafe) if node.failsafe else 0}"
             f"|{[p.uid for p in node.parents]}"
             f"|{_payload_sig(node.payload, slot_idx)}").encode())
     return h.hexdigest()
@@ -814,7 +841,7 @@ def compile_graph(g, fuse: Optional[bool] = None) -> CompiledGraph:
                 f"node {node.uid} ({node.alias}) depends on a future from "
                 f"outside this graph; compiled replay requires a closed DAG")
     if fuse is None:
-        fuse = os.environ.get("HALO_FUSION", "1") != "0"
+        fuse = env_flag("HALO_FUSION", default=True)
 
     slots, slot_idx = _collect_inputs(g)
     key = _graph_key(g, fuse, slot_idx)
@@ -919,10 +946,7 @@ def compile_graph(g, fuse: Optional[bool] = None) -> CompiledGraph:
              "%d intermediate(s) eliminated)", key[:8], len(g.nodes),
              len(templates), len(chains), stats["intermediates_eliminated"])
     cache[key] = cg
-    try:
-        max_entries = int(os.environ.get("HALO_GRAPH_CACHE", "16") or 16)
-    except ValueError:
-        max_entries = 16
+    max_entries = env_int("HALO_GRAPH_CACHE", 16)
     while len(cache) > max(1, max_entries):
         cache.popitem(last=False)
     return cg

@@ -385,9 +385,12 @@ class ExecutionGraph:
         self.stats["placements_scored"] += 1
         allowed_ov = overrides.get("allowed_platforms")
         pref_ov = overrides.get("platform_preference")
+        # _tried keys by record.uid, not id(): a cache entry can outlive a
+        # deregistered record, and a recycled id() would alias its key onto
+        # a fresh record's (same failure class as the PR-7 _seal hang)
         key = (node.alias, sig, tuple(allowed_ov) if allowed_ov else None,
                tuple(pref_ov) if pref_ov else None,
-               tuple(id(r) for r in node._tried))
+               tuple(r.uid for r in node._tried))
         with self._lock:
             if sched is not None:
                 epoch = sched.epoch

@@ -35,7 +35,14 @@ __all__ = [
     "KernelRegistry",
     "PLATFORM_PREFERENCE",
     "SelectionError",
+    "clone_record",
 ]
+
+# Process-wide monotonic record ids.  ``id()`` of a record is only unique
+# while the record is alive — caches that key on it can silently alias a new
+# record after garbage collection (the PR-7 ``_seal`` hang).  Every cache
+# that may outlive its record keys on ``KernelRecord.uid`` instead.
+_record_uids = itertools.count(1)
 
 # Platform ids, ordered by default performance preference on the TPU target.
 PLATFORM_PREFERENCE: Tuple[str, ...] = ("sharded", "pallas", "xla", "jnp")
@@ -88,6 +95,10 @@ class KernelRecord:
     # with those keys static — so agents call it directly instead of
     # wrapping it in a fresh ``jax.jit`` that would trace the config ints.
     tuning_space: Optional[Callable[..., List[Dict[str, Any]]]] = None
+    # Stable process-unique id: cache keys that may outlive the record
+    # (jit caches, graph candidate caches) use this instead of ``id()``,
+    # which the allocator reuses after collection.
+    uid: int = dataclasses.field(default_factory=_record_uids.__next__)
 
     def feasible(self, *args, **kwargs) -> bool:
         """True when ``supports`` accepts these abstract args (or is unset)."""
@@ -113,6 +124,18 @@ class KernelRecord:
             log.debug("tuning_space raised for %s/%s; treating as empty",
                       self.alias, self.platform, exc_info=True)
             return []
+
+
+def clone_record(record: KernelRecord, **changes: Any) -> KernelRecord:
+    """A copy of ``record`` with ``changes`` applied and a **fresh uid**.
+
+    ``dataclasses.replace`` alone would copy the source's uid, making the
+    clone indistinguishable from the original to every uid-keyed cache.
+    Used by the remote transport (DESIGN.md §13) to republish a worker's
+    records under its remote platform id."""
+    if "uid" not in changes:
+        changes["uid"] = next(_record_uids)
+    return dataclasses.replace(record, **changes)
 
 
 class SelectionError(KeyError):

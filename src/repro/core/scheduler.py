@@ -133,8 +133,9 @@ class CostModelScheduler:
         """Process-default scheduler: EMA table persistent iff
         ``HALO_AUTOTUNE_CACHE`` is set; tuning DB from ``HALO_TUNING_DB``
         (or the cache path's ``.tuning.json`` sibling)."""
+        from .envutil import env_path
         from .tuning import TuningDB       # deferred: tuning imports us
-        return cls(cache_path=os.environ.get("HALO_AUTOTUNE_CACHE") or None,
+        return cls(cache_path=env_path("HALO_AUTOTUNE_CACHE"),
                    tuning_db=TuningDB.default())
 
     # -- measurement feedback ------------------------------------------------
@@ -195,12 +196,33 @@ class CostModelScheduler:
 
     def mark_failed(self, record: KernelRecord) -> None:
         """Quarantine a record whose execution raised: selection skips it
-        until :meth:`clear_failures`.  Failures are per-process (never
-        persisted) — a failing substrate may be healthy in the next run."""
+        until :meth:`clear_failures`.
+
+        **Locality**: quarantine state (and :attr:`epoch`) is strictly
+        process-local — never persisted, never implicitly shared.  Each
+        worker process's scheduler quarantines independently; a record that
+        fails only inside a worker stays selectable on the host unless the
+        event is explicitly propagated back via :meth:`mark_failed_key`
+        (the remote transport does this on every reply, DESIGN.md §13).
+        Likewise the EMA table: per-process measurements (an honest
+        "per-process estimate table" — a remote record's host-side EMA
+        includes the wire cost, the worker-side one does not)."""
+        self.mark_failed_key(_record_key(record))
+
+    def mark_failed_key(self, key: str) -> None:
+        """Quarantine by raw record key (``alias|platform|prio:verid``) —
+        the cross-process form of :meth:`mark_failed`, used to apply a
+        worker's quarantine events to the host-side scheduler after
+        translating the platform segment to the remote member's id."""
         with self._lock:
-            key = _record_key(record)
             self._failed[key] = self._failed.get(key, 0) + 1
             self._epoch += 1
+
+    def failed_record_keys(self) -> List[str]:
+        """The currently-quarantined record keys (for shipping across the
+        wire; see :meth:`mark_failed_key` for the locality contract)."""
+        with self._lock:
+            return sorted(self._failed)
 
     def is_failed(self, record: KernelRecord) -> bool:
         with self._lock:

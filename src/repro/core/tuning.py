@@ -178,9 +178,10 @@ class TuningDB:
     def default(cls) -> "TuningDB":
         """Process-default DB: ``HALO_TUNING_DB`` if set, else a
         ``.tuning.json`` sibling of ``HALO_AUTOTUNE_CACHE``, else memory."""
-        path = os.environ.get("HALO_TUNING_DB")
+        from .envutil import env_path
+        path = env_path("HALO_TUNING_DB")
         if not path:
-            cache = os.environ.get("HALO_AUTOTUNE_CACHE")
+            cache = env_path("HALO_AUTOTUNE_CACHE")
             if cache:
                 path = str(Path(cache).with_suffix(".tuning.json"))
         return cls(path or None)

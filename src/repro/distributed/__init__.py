@@ -1,2 +1,4 @@
 from .sharding import (MeshContext, ParamSpec, current_context, logical_spec,
                        mesh_context, named_sharding, shard, ShardingRules)
+from .remote import (RemoteAgent, RemoteExecutionError, RemoteWorker,
+                     RemoteWorkerError, spawn_worker)

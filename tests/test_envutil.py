@@ -1,0 +1,91 @@
+"""Hardened HALO_* env parsing: malformed values warn and fall back
+instead of blowing up init paths (doubly important for spawned workers,
+which inherit whatever environment the launcher had)."""
+import logging
+
+import pytest
+
+from repro.core.envutil import env_flag, env_float, env_int, env_path
+
+
+def test_env_int_unset_and_empty(monkeypatch):
+    monkeypatch.delenv("HALO_GRAPH_CACHE", raising=False)
+    assert env_int("HALO_GRAPH_CACHE", 16) == 16
+    monkeypatch.setenv("HALO_GRAPH_CACHE", "")
+    assert env_int("HALO_GRAPH_CACHE", 16) == 16
+
+
+def test_env_int_malformed_warns_and_falls_back(monkeypatch, caplog):
+    monkeypatch.setenv("HALO_GRAPH_CACHE", "abc")
+    with caplog.at_level(logging.WARNING, logger="repro.halo.env"):
+        assert env_int("HALO_GRAPH_CACHE", 16) == 16
+    assert any("HALO_GRAPH_CACHE" in r.message for r in caplog.records)
+
+
+def test_env_int_valid(monkeypatch):
+    monkeypatch.setenv("HALO_GRAPH_CACHE", "64")
+    assert env_int("HALO_GRAPH_CACHE", 16) == 64
+
+
+def test_env_float_empty_is_default_not_error(monkeypatch, caplog):
+    """The motivating bug: HALO_HEARTBEAT_TIMEOUT="" used to raise
+    ValueError inside HealthConfig.from_env."""
+    monkeypatch.setenv("HALO_HEARTBEAT_TIMEOUT", "")
+    with caplog.at_level(logging.WARNING, logger="repro.halo.env"):
+        assert env_float("HALO_HEARTBEAT_TIMEOUT", 30.0) == 30.0
+    # empty means "not configured": no warning noise
+    assert not caplog.records
+
+
+def test_env_float_malformed_warns(monkeypatch, caplog):
+    monkeypatch.setenv("HALO_HEARTBEAT_TIMEOUT", "5s")
+    with caplog.at_level(logging.WARNING, logger="repro.halo.env"):
+        assert env_float("HALO_HEARTBEAT_TIMEOUT", 30.0) == 30.0
+    assert any("HALO_HEARTBEAT_TIMEOUT" in r.message for r in caplog.records)
+
+
+def test_env_float_valid_and_none_default(monkeypatch):
+    monkeypatch.setenv("HALO_HEALTH_POLL", "2.5")
+    assert env_float("HALO_HEALTH_POLL", None) == 2.5
+    monkeypatch.delenv("HALO_HEALTH_POLL", raising=False)
+    assert env_float("HALO_HEALTH_POLL", None) is None
+
+
+def test_env_flag(monkeypatch):
+    monkeypatch.delenv("HALO_FUSION", raising=False)
+    assert env_flag("HALO_FUSION", default=True) is True
+    assert env_flag("HALO_FUSION") is False
+    monkeypatch.setenv("HALO_FUSION", "0")
+    assert env_flag("HALO_FUSION", default=True) is False
+    monkeypatch.setenv("HALO_FUSION", "1")
+    assert env_flag("HALO_FUSION") is True
+    monkeypatch.setenv("HALO_FUSION", "")
+    assert env_flag("HALO_FUSION", default=True) is True
+
+
+def test_env_path(monkeypatch, tmp_path):
+    monkeypatch.delenv("HALO_TUNING_DB", raising=False)
+    assert env_path("HALO_TUNING_DB") is None
+    monkeypatch.setenv("HALO_TUNING_DB", "")
+    assert env_path("HALO_TUNING_DB", "fallback") == "fallback"
+    monkeypatch.setenv("HALO_TUNING_DB", str(tmp_path / "db.json"))
+    assert env_path("HALO_TUNING_DB") == str(tmp_path / "db.json")
+
+
+def test_health_config_survives_malformed_env(monkeypatch):
+    """End to end through the real call site."""
+    from repro.core.agents import HealthConfig
+    monkeypatch.setenv("HALO_HEARTBEAT_TIMEOUT", "")
+    monkeypatch.setenv("HALO_STRAGGLER_MULTIPLE", "fast")
+    cfg = HealthConfig.from_env()
+    assert cfg.heartbeat_timeout == 30.0
+    assert cfg.straggler_multiple == 4.0
+
+
+def test_graph_cache_size_survives_malformed_env(monkeypatch, caplog):
+    """The fusion compile cache reads HALO_GRAPH_CACHE per trim; a typo'd
+    value must degrade to the default bound, not fail the compile."""
+    monkeypatch.setenv("HALO_GRAPH_CACHE", "abc")
+    with caplog.at_level(logging.WARNING, logger="repro.halo.env"):
+        assert env_int("HALO_GRAPH_CACHE", 16) == 16
+    assert any("HALO_GRAPH_CACHE" in r.message for r in caplog.records)

@@ -1,0 +1,132 @@
+"""Regression tests for id()-reuse-prone cache keys (the PR-7 _seal hang
+class of bug): every cache that can outlive the object it keys must use a
+process-unique uid, not id()."""
+import gc
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agents import XlaAgent
+from repro.core.fusion import _callable_uid, _callable_uids
+from repro.core.registry import (KernelAttributes, KernelRecord,
+                                 KernelRegistry, clone_record)
+from repro.core.scheduler import CostModelScheduler, _record_key
+
+
+def _rec(alias="MMM", platform="xla", priority=10, fn=None):
+    return KernelRecord(alias=alias, fn=fn or (lambda a, b: a @ b),
+                        platform=platform, priority=priority,
+                        attrs=KernelAttributes(sw_fid=f"fid:{alias}"))
+
+
+# -- KernelRecord.uid ---------------------------------------------------------
+def test_record_uids_are_unique_across_collection():
+    """Unlike id(), uids are never reused after a record is collected."""
+    seen = set()
+    for _ in range(50):
+        r = _rec()
+        assert r.uid not in seen
+        seen.add(r.uid)
+        del r
+        gc.collect()
+
+
+def test_clone_record_gets_fresh_uid_and_changes():
+    src = _rec()
+    clone = clone_record(src, platform="xla@w0", is_failsafe=False)
+    assert clone.uid != src.uid
+    assert clone.platform == "xla@w0"
+    assert clone.alias == src.alias and clone.fn is src.fn
+    assert clone.priority == src.priority
+    # explicit uid override is honored (resume/debug paths)
+    pinned = clone_record(src, uid=999999)
+    assert pinned.uid == 999999
+
+
+def test_clone_registers_and_deregisters_cleanly():
+    reg = KernelRegistry()
+    src = reg.register(_rec())
+    clone = reg.register(clone_record(src, platform="xla@w0"))
+    platforms = {r.platform for r in reg.records("MMM")}
+    assert platforms == {"xla", "xla@w0"}
+    reg.deregister("MMM", "xla@w0")
+    assert {r.platform for r in reg.records("MMM")} == {"xla"}
+    assert clone.uid != src.uid
+
+
+# -- XlaAgent jit cache -------------------------------------------------------
+def test_xla_jit_cache_keyed_by_uid():
+    """Two records wrapping the same fn must not share (or collide on) a
+    cache slot via id() reuse: the key is the stable uid."""
+    agent = XlaAgent()
+    try:
+        a = jnp.ones((4, 4))
+        r1 = _rec(fn=lambda x, y: x + y)
+        out1 = agent._device_execute(r1, (a, a), {})
+        assert r1.uid in agent._jit_cache
+        r2 = clone_record(r1, platform="xla@w0")
+        agent._device_execute(r2, (a, a), {})
+        assert r2.uid in agent._jit_cache and r2.uid != r1.uid
+        assert len(agent._jit_cache) == 2
+        np.testing.assert_array_equal(np.asarray(out1), 2.0)
+    finally:
+        agent.shutdown(wait=False)
+
+
+# -- fusion callable uids -----------------------------------------------------
+def test_callable_uid_stable_and_distinct():
+    def f():
+        return 1
+
+    def g():
+        return 2
+
+    assert _callable_uid(f) == _callable_uid(f)
+    assert _callable_uid(f) != _callable_uid(g)
+
+
+def test_callable_uid_entry_dies_with_callable():
+    """The WeakKeyDictionary must not pin callables alive (and a collected
+    callable's id can be reused — the uid never is)."""
+    def f():
+        return 1
+
+    uid = _callable_uid(f)
+    before = len(_callable_uids)
+    del f
+    gc.collect()
+    assert len(_callable_uids) < before or before == 0
+    # a fresh callable never resurrects the old uid
+
+    def h():
+        return 3
+
+    assert _callable_uid(h) != uid
+
+
+def test_callable_uid_builtin_fallback():
+    # builtins are not weakref-able; they are also immortal, so the id()
+    # fallback cannot collide
+    assert _callable_uid(len) == _callable_uid(len)
+
+
+# -- scheduler quarantine keys ------------------------------------------------
+def test_mark_failed_key_matches_mark_failed():
+    sched = CostModelScheduler()
+    r = _rec(alias="EWADD")
+    sched.mark_failed(r)
+    assert _record_key(r) in sched.failed_record_keys()
+    assert sched.is_failed(r)
+
+
+def test_mark_failed_key_cross_process_form():
+    """Raw-key quarantine (the form a worker ships across the wire) is
+    equivalent to record-based quarantine and bumps the epoch."""
+    sched = CostModelScheduler()
+    r = _rec(alias="EWADD", platform="xla@w0")
+    e0 = sched.epoch
+    sched.mark_failed_key(_record_key(r))
+    assert sched.epoch == e0 + 1
+    assert sched.is_failed(r)
+    sched.clear_failures()
+    assert not sched.failed_record_keys()
