@@ -203,9 +203,9 @@ def _collective(smoke: bool = False):
     collective_main(smoke=smoke)
 
 
-def _serve():
+def _serve(smoke: bool = False):
     from .serve_throughput import main as serve_main
-    serve_main()
+    serve_main(smoke=smoke)
 
 
 def _tuning(smoke: bool = False):
@@ -241,6 +241,7 @@ SECTIONS = {
 SMOKE_SECTIONS = {
     "collective": lambda: _collective(smoke=True),
     "multiproc": lambda: _multiproc(smoke=True),
+    "serve": lambda: _serve(smoke=True),
     "tuning": lambda: _tuning(smoke=True),
     "fusion": lambda: _fusion(smoke=True),
 }

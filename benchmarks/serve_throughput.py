@@ -1,14 +1,26 @@
-"""Serving throughput: legacy whole-batch queue vs slot continuous batching.
+"""Serving throughput: legacy queue vs slot engine vs paged KV cache.
 
-The same Poisson-arrival workload (mixed ``max_new``, fixed prompt length)
-is driven through (a) the legacy ``RequestQueue`` (batch-boundary join,
-decode to the live batch max) and (b) the slot ``StepScheduler``
-(mid-flight join/leave, independent retirement).  Reports tokens/s and
-p50/p95 request latency per engine, prints the harness CSV, and writes
-``BENCH_serve.json`` at the repo root so the serving perf trajectory is
-recorded (DESIGN.md §6).
+Two workloads, one harness:
 
-Run:  PYTHONPATH=src python -m benchmarks.serve_throughput [--seed N]
+* **Baseline contrast** — the same Poisson-arrival workload (mixed
+  ``max_new``, fixed prompt length) driven through (a) the legacy
+  ``RequestQueue`` (batch-boundary join, decode to the live batch max) and
+  (b) the slot ``StepScheduler`` (mid-flight join/leave, independent
+  retirement).  Unchanged from the committed baseline so the
+  ``slot_vs_legacy_tok_per_s`` gate keeps measuring the same thing.
+* **Shared-prefix overload** — arrivals at **10×** the baseline rate,
+  prompts drawn from a few hot stems (DESIGN.md §14), a queue-depth cap so
+  sustained overload sheds load instead of building unbounded backlog.
+  Driven through the dense slot engine and the paged engine (COW prefix
+  sharing + chunked prefill); reports tokens/s and p50/p95/**p99** request
+  latency per engine plus the paged allocator scorecard (prefix-reuse hit
+  rate, blocks/token, forks, evictions, rejected submits).
+
+Reports the harness CSV and writes ``BENCH_serve.json`` at the repo root
+(``BENCH_smoke_serve.json`` with ``--smoke``: the reduced overload section
+only, feeding the CI bench-regression gate).
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_throughput [--seed N] [--smoke]
 
 ``--seed`` re-rolls the workload (prompts, decode budgets, arrival gaps)
 for noise studies; the default (0) is the fixed workload the committed
@@ -34,7 +46,22 @@ MAX_NEW = (2, 4, 8, 12)          # mixed decode budgets
 # the slot engine admits them into free slots mid-flight
 RATE_HZ = 300.0
 MAX_LEN = PROMPT_LEN + max(MAX_NEW) + 4
-OUT_JSON = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+# shared-prefix overload section: 10x the arrival rate, prompts from a few
+# hot stems so paged prefix reuse has something to hit, and a queue-depth
+# cap so the overload degrades into bounded queueing + rejections
+RATE10_HZ = 10 * RATE_HZ
+N_SHARED = 32
+STEMS = 4
+STEM_LEN = 24
+SUFFIX_LEN = 4
+MAX_NEW10 = (4, 8, 12, 16)
+BLOCK = 8
+MAX_LEN10 = STEM_LEN + SUFFIX_LEN + max(MAX_NEW10) + 4
+QDEPTH = 8                       # per-class queued-request cap
+ROOT = Path(__file__).resolve().parent.parent
+OUT_JSON = ROOT / "BENCH_serve.json"
+SMOKE_JSON = ROOT / "BENCH_smoke_serve.json"
 
 
 def _workload(vocab: int, seed: int = 0):
@@ -45,105 +72,198 @@ def _workload(vocab: int, seed: int = 0):
     return prompts, max_new, gaps
 
 
+def _shared_workload(vocab: int, seed: int = 0, n: int = N_SHARED):
+    """Prompts = one of a few hot stems + a short unique suffix, arriving at
+    10x the baseline rate: the paged engine's prefix matcher should serve
+    most prompt blocks from cache while the dense engine recomputes them."""
+    r = np.random.RandomState(seed + 1)
+    stems = r.randint(0, vocab, size=(STEMS, STEM_LEN))
+    which = r.randint(0, STEMS, size=n)
+    suffix = r.randint(0, vocab, size=(n, SUFFIX_LEN))
+    prompts = [list(map(int, stems[which[i]])) + list(map(int, suffix[i]))
+               for i in range(n)]
+    max_new = [int(MAX_NEW10[i % len(MAX_NEW10)]) for i in range(n)]
+    gaps = r.exponential(1.0 / RATE10_HZ, size=n)
+    return prompts, max_new, gaps
+
+
 def _drive(front, prompts, max_new, gaps):
-    """Submit the workload against a started front; returns summary stats."""
+    """Submit the workload against a started front; returns summary stats.
+
+    A submit rejected at the QoS depth cap (AdmissionError) is counted, not
+    fatal — bounded queueing under overload is the contract under test."""
+    from repro.serve.engine import AdmissionError
+    n = len(prompts)
     lat = []
+    rejected = 0
     t0 = time.perf_counter()
     futs = []
-    for i in range(N_REQ):
+    for i in range(n):
         time.sleep(gaps[i])
         ts = time.perf_counter()
-        fut = front.submit(list(map(int, prompts[i])), max_new=max_new[i])
+        try:
+            fut = front.submit(list(map(int, prompts[i])),
+                               max_new=max_new[i])
+        except AdmissionError:
+            rejected += 1
+            continue
         fut.add_done_callback(
             lambda f, ts=ts: lat.append(time.perf_counter() - ts))
         futs.append(fut)
     results = [f.result(timeout=600) for f in futs]
     wall = time.perf_counter() - t0
     # result() can return before the last done-callback fired; wait so the
-    # percentiles below never drop the tail sample p95 exists to capture
+    # percentiles below never drop the tail sample p99 exists to capture
     deadline = time.perf_counter() + 5.0
-    while len(lat) < N_REQ and time.perf_counter() < deadline:
+    while len(lat) < len(futs) and time.perf_counter() < deadline:
         time.sleep(0.001)
     from repro.core.portability import percentile_nearest
     toks = sum(len(r) for r in results)
     lat.sort()
-    return {"requests": N_REQ, "tokens": toks, "wall_s": round(wall, 4),
+    return {"requests": n, "served": len(futs), "rejected": rejected,
+            "tokens": toks, "wall_s": round(wall, 4),
             "tok_per_s": round(toks / wall, 2),
             "p50_ms": round(1e3 * percentile_nearest(lat, .5), 2),
-            "p95_ms": round(1e3 * percentile_nearest(lat, .95), 2)}
+            "p95_ms": round(1e3 * percentile_nearest(lat, .95), 2),
+            "p99_ms": round(1e3 * percentile_nearest(lat, .99), 2)}
 
 
-def main(seed: int = 0) -> None:
+def main(seed: int = 0, smoke: bool = False) -> None:
     from repro.configs import get_config
     from repro.models import build_model
-    from repro.serve.engine import (RequestQueue, ServeEngine, SlotEngine,
+    from repro.serve.engine import (AdmissionPolicy, PagedEngine, QoSClass,
+                                    RequestQueue, ServeEngine, SlotEngine,
                                     StepScheduler)
 
     cfg = get_config(ARCH).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    prompts, max_new, gaps = _workload(cfg.vocab_size, seed=seed)
+    passes = 1 if smoke else 3
 
-    def best_of(front, after_warmup=None, passes: int = 3):
+    def best_of(front, workload, after_warmup=None):
         """Warmup pass (compiles), then best-throughput of ``passes`` timed
         passes — CPU scheduling noise at these sub-second walls is large."""
         with front:
-            _drive(front, prompts, max_new, gaps)
+            _drive(front, *workload)
         if after_warmup is not None:
             after_warmup()
         best = None
         for _ in range(passes):
             with front:
-                st = _drive(front, prompts, max_new, gaps)
+                st = _drive(front, *workload)
             if best is None or st["tok_per_s"] > best["tok_per_s"]:
                 best = st
         return best
 
-    # legacy whole-batch queue: one fixed-width flush pool, batch-boundary
-    # join — early-retired lanes idle until the whole flush drains
-    engine = ServeEngine(model, max_len=MAX_LEN)
-    queue = RequestQueue(engine, params, SLOTS, PROMPT_LEN, max_delay=0.02)
-    legacy = best_of(queue)
+    out = {}
+    if not smoke:
+        workload = _workload(cfg.vocab_size, seed=seed)
 
-    # slot continuous batching: mid-flight admission into free lanes; the
-    # scorecard covers exactly the timed passes (reset after warmup)
-    sched = StepScheduler(SlotEngine(model, params, SLOTS, MAX_LEN))
-    slot = best_of(sched, after_warmup=sched.reset_stats)
-    rep = sched.report()
+        # legacy whole-batch queue: one fixed-width flush pool,
+        # batch-boundary join — early-retired lanes idle until the whole
+        # flush drains
+        engine = ServeEngine(model, max_len=MAX_LEN)
+        queue = RequestQueue(engine, params, SLOTS, PROMPT_LEN,
+                             max_delay=0.02)
+        legacy = best_of(queue, workload)
 
-    print("# === serving throughput: legacy whole-batch vs slot engine ===")
+        # slot continuous batching: mid-flight admission into free lanes;
+        # the scorecard covers exactly the timed passes (reset after warmup)
+        sched = StepScheduler(SlotEngine(model, params, SLOTS, MAX_LEN))
+        slot = best_of(sched, workload, after_warmup=sched.reset_stats)
+        rep = sched.report()
+
+        print("# === serving throughput: legacy whole-batch vs slot "
+              "engine ===")
+        print("name,us_per_call,derived")
+        for name, st in (("serve/legacy_queue", legacy),
+                         ("serve/slot_engine", slot)):
+            us_per_tok = 1e6 * st["wall_s"] / max(1, st["tokens"])
+            print(f"{name},{us_per_tok:.1f},tok_per_s={st['tok_per_s']}"
+                  f";p50_ms={st['p50_ms']};p95_ms={st['p95_ms']}")
+        print(f"serve/slot_scorecard,"
+              f"{1e6 * rep.t4_s / max(1, rep.tokens):.1f},"
+              f"T1_us={rep.t1_s * 1e6:.0f};T3_us={rep.t3_s * 1e6:.0f};"
+              f"overhead={rep.overhead * 100:.3f}%")
+
+        out.update({
+            "workload": {"arch": ARCH, "requests": N_REQ, "slots": SLOTS,
+                         "prompt_len": PROMPT_LEN, "max_new": list(MAX_NEW),
+                         "poisson_rate_hz": RATE_HZ, "seed": seed},
+            "legacy_queue": legacy,
+            "slot_engine": slot,
+            "slot_vs_legacy_tok_per_s": round(
+                slot["tok_per_s"] / max(legacy["tok_per_s"], 1e-9), 3),
+            "slot_scorecard": {"t1_s": round(rep.t1_s, 6),
+                               "t3_s": round(rep.t3_s, 6),
+                               "steps": rep.steps, "tokens": rep.tokens,
+                               "overhead_t1_over_t4": round(rep.overhead,
+                                                            6)},
+        })
+
+    # shared-prefix overload: 10x arrivals, hot stems, bounded queueing.
+    # The same workload and policy drive both engines; the contrast is the
+    # paged arena's prefix reuse + chunked prefill vs dense per-slot caches
+    n_shared = 12 if smoke else N_SHARED
+    shared = _shared_workload(cfg.vocab_size, seed=seed, n=n_shared)
+    policy = AdmissionPolicy(classes={"default": QoSClass(max_depth=QDEPTH)})
+    dense_sched = StepScheduler(
+        SlotEngine(model, params, SLOTS, MAX_LEN10), policy=policy)
+    dense = best_of(dense_sched, shared)
+
+    paged_engine = PagedEngine(model, params, SLOTS, MAX_LEN10,
+                               block_size=BLOCK, chunk_tokens=2 * BLOCK)
+    paged_sched = StepScheduler(paged_engine, policy=policy)
+    paged = best_of(paged_sched, shared)
+    pstats = paged_engine.stats()
+
+    print(f"# === shared-prefix overload: {RATE10_HZ:.0f} Hz arrivals, "
+          f"{STEMS} stems, depth cap {QDEPTH} ===")
     print("name,us_per_call,derived")
-    for name, st in (("serve/legacy_queue", legacy), ("serve/slot_engine", slot)):
+    for name, st in (("serve10x/slot_engine", dense),
+                     ("serve10x/paged_engine", paged)):
         us_per_tok = 1e6 * st["wall_s"] / max(1, st["tokens"])
         print(f"{name},{us_per_tok:.1f},tok_per_s={st['tok_per_s']}"
-              f";p50_ms={st['p50_ms']};p95_ms={st['p95_ms']}")
-    print(f"serve/slot_scorecard,{1e6 * rep.t4_s / max(1, rep.tokens):.1f},"
-          f"T1_us={rep.t1_s * 1e6:.0f};T3_us={rep.t3_s * 1e6:.0f};"
-          f"overhead={rep.overhead * 100:.3f}%")
+              f";p99_ms={st['p99_ms']};rejected={st['rejected']}")
+    print(f"serve10x/paged_alloc,0.0,"
+          f"prefix_hit_rate={pstats['prefix_hit_rate']:.3f}"
+          f";blocks_per_token={pstats['blocks_per_token']:.3f}"
+          f";forks={pstats['forks']};evictions={pstats['evictions']}")
 
-    out = {
-        "workload": {"arch": ARCH, "requests": N_REQ, "slots": SLOTS,
-                     "prompt_len": PROMPT_LEN, "max_new": list(MAX_NEW),
-                     "poisson_rate_hz": RATE_HZ, "seed": seed},
-        "legacy_queue": legacy,
-        "slot_engine": slot,
-        "slot_vs_legacy_tok_per_s": round(
-            slot["tok_per_s"] / max(legacy["tok_per_s"], 1e-9), 3),
-        "slot_scorecard": {"t1_s": round(rep.t1_s, 6),
-                           "t3_s": round(rep.t3_s, 6),
-                           "steps": rep.steps, "tokens": rep.tokens,
-                           "overhead_t1_over_t4": round(rep.overhead, 6)},
+    out["shared_prefix_10x"] = {
+        "workload": {"arch": ARCH, "requests": n_shared, "slots": SLOTS,
+                     "stems": STEMS, "stem_len": STEM_LEN,
+                     "suffix_len": SUFFIX_LEN, "max_new": list(MAX_NEW10),
+                     "poisson_rate_hz": RATE10_HZ, "block_size": BLOCK,
+                     "queue_depth_cap": QDEPTH, "seed": seed},
+        "slot_engine": dense,
+        "paged_engine": paged,
+        "paged_vs_slot_tok_per_s": round(
+            paged["tok_per_s"] / max(dense["tok_per_s"], 1e-9), 3),
+        "paged_stats": {
+            "prefix_hit_rate": round(pstats["prefix_hit_rate"], 4),
+            "blocks_per_token": round(pstats["blocks_per_token"], 4),
+            "prefix_hits": pstats["prefix_hits"],
+            "forks": pstats["forks"],
+            "evictions": pstats["evictions"],
+            "rejected_submits": paged_sched.rejected,
+        },
     }
-    OUT_JSON.write_text(json.dumps(out, indent=2) + "\n")
-    print(f"# wrote {OUT_JSON}")
+
+    dest = SMOKE_JSON if smoke else OUT_JSON
+    dest.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {dest}")
 
 
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser(
-        description="serving throughput: legacy queue vs slot engine")
+        description="serving throughput: legacy queue vs slot vs paged")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload RNG seed (default 0 — the fixed workload "
                          "the committed baseline ratios were measured with)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced overload section only; writes "
+                         "BENCH_smoke_serve.json for the CI gate")
     main(**vars(ap.parse_args()))

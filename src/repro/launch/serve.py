@@ -5,7 +5,9 @@ requests into a fixed pool of decode slots, each request retires
 independently on its own EOS / ``max_new``, and the run reports throughput,
 per-request latency percentiles, and the serving T1/T3 scorecard.
 ``--legacy`` routes the same workload through the whole-batch RequestQueue
-compat path instead.
+compat path instead; ``--paged`` serves it from the paged KV cache
+(refcounted block arena, COW prefix sharing, chunked prefill —
+DESIGN.md §14) and reports the allocator scorecard.
 """
 from __future__ import annotations
 
@@ -17,8 +19,8 @@ import jax
 from ..configs import get_config
 from ..core.portability import ServeReport, percentile_nearest
 from ..models import build_model
-from ..serve.engine import (RequestQueue, ServeEngine, SlotEngine,
-                            StepScheduler)
+from ..serve.engine import (PagedEngine, RequestQueue, ServeEngine,
+                            SlotEngine, StepScheduler)
 
 
 def main(argv=None):
@@ -36,7 +38,20 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="whole-batch RequestQueue compat path")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: refcounted block arena, COW "
+                         "prefix sharing, chunked prefill (DESIGN.md §14)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (--paged)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="arena capacity in blocks (--paged; default: "
+                         "dense-parity capacity)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="prefill chunk length in tokens (--paged; 0 = "
+                         "whole-prompt admission)")
     args = ap.parse_args(argv)
+    if args.legacy and args.paged:
+        ap.error("--legacy and --paged are mutually exclusive")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -56,10 +71,19 @@ def main(argv=None):
                 for i in range(args.requests)]
 
     sched = None
+    paged = None
     if args.legacy:
         engine = ServeEngine(model, max_len=max_len)
         front = RequestQueue(engine, params, args.slots, args.prompt_len,
                              temperature=args.temperature)
+    elif args.paged:
+        paged = PagedEngine(model, params, args.slots, max_len,
+                            block_size=args.block_size,
+                            num_blocks=args.num_blocks,
+                            chunk_tokens=args.chunk)
+        sched = StepScheduler(paged, temperature=args.temperature,
+                              seed=args.seed)
+        front = sched
     else:
         sched = StepScheduler(SlotEngine(model, params, args.slots, max_len),
                               temperature=args.temperature, seed=args.seed)
@@ -90,6 +114,12 @@ def main(argv=None):
     if sched is not None:
         print(ServeReport.csv_header())
         print(sched.report().csv())
+    if paged is not None:
+        s = paged.stats()
+        print(f"paged arena: capacity={s['capacity']} "
+              f"hit_rate={s['prefix_hit_rate']:.3f} "
+              f"blocks_per_token={s['blocks_per_token']:.3f} "
+              f"forks={s['forks']} evictions={s['evictions']}")
     for f, r in list(zip(futs, results))[:3]:
         print(f"  req {f.uid}: {r[:8]}…")
     return results

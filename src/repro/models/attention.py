@@ -104,12 +104,35 @@ def gqa_forward(p: Params, x: jax.Array, a: AttnConfig, *,
         # ring buffer when the cache is window-sized (see transformer.ring_len)
         ring = a.window is not None and lc <= a.window and not prefix_len
         pos = _lane_positions(cache_pos, b)
-        slot = jnp.mod(pos, lc) if ring else pos
         lane = jnp.arange(b)
-        ck = ck.at[lane, :, slot].set(k[:, :, 0].astype(ck.dtype))
-        cv = cv.at[lane, :, slot].set(v[:, :, 0].astype(cv.dtype))
-        out = decode_attention(q, ck, cv, pos, a,
-                               prefix_len=prefix_len, ring=ring)
+        if s == 1:
+            slot = jnp.mod(pos, lc) if ring else pos
+            ck = ck.at[lane, :, slot].set(k[:, :, 0].astype(ck.dtype))
+            cv = cv.at[lane, :, slot].set(v[:, :, 0].astype(cv.dtype))
+            out = decode_attention(q, ck, cv, pos, a,
+                                   prefix_len=prefix_len, ring=ring)
+        elif ring:
+            # chunked prefill over a ring cache: attend over (old ring ‖
+            # chunk) *before* writing — an in-place chunk write can
+            # overwrite in-window keys that earlier chunk queries still
+            # need (DESIGN.md §14); the engine clamps chunks to <= lc so
+            # the post-attention write never self-collides
+            out = chunk_ring_attention(q, ck, cv, k, v, pos, a)
+            slot = jnp.mod(pos[:, None] + jnp.arange(s), lc)
+            ck = ck.at[lane[:, None], :, slot].set(
+                k.transpose(0, 2, 1, 3).astype(ck.dtype))
+            cv = cv.at[lane[:, None], :, slot].set(
+                v.transpose(0, 2, 1, 3).astype(cv.dtype))
+        else:
+            # full-length cache: write the chunk, then per-query causal
+            # masks — each query g_i = p0+i hides keys past itself, which
+            # covers both the chunk's own future and any stale tail
+            slot = pos[:, None] + jnp.arange(s)
+            ck = ck.at[lane[:, None], :, slot].set(
+                k.transpose(0, 2, 1, 3).astype(ck.dtype))
+            cv = cv.at[lane[:, None], :, slot].set(
+                v.transpose(0, 2, 1, 3).astype(cv.dtype))
+            out = chunk_attention(q, ck, cv, pos, a, prefix_len=prefix_len)
         new_kv = (ck, cv)
 
     # pin the pre-projection layout (heads over tp): without it the multi-
@@ -149,6 +172,75 @@ def decode_attention(q, ck, cv, pos, a: AttnConfig, *, prefix_len: int = 0,
     p_att = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgqk,bgkd->bgqd", p_att, cv.astype(jnp.float32))
     return out.reshape(bq, h, sq, dh).astype(q.dtype)
+
+
+def chunk_attention(q, ck, cv, p0, a: AttnConfig, *, prefix_len: int = 0):
+    """Multi-query decode attention for one prefill chunk over a full-length
+    cache (the chunk is already written at positions p0..p0+C-1).
+
+    The per-query causal mask ``kpos <= p0+i`` plays the same role as the
+    decode mask: whatever a previous occupant (or the chunk's own future)
+    left beyond each query's position contributes exactly -1e30 scores, so
+    chunked and whole-prompt prefill agree wherever the math reduces in the
+    same order (serving asserts greedy token parity, DESIGN.md §14)."""
+    bq, h, c, dh = q.shape
+    kvh = ck.shape[1]
+    rep = h // kvh
+    p0 = _lane_positions(p0, bq)
+    qf = (q.astype(jnp.float32) * dh ** -0.5).reshape(bq, kvh, rep, c, dh)
+    s = jnp.einsum("bgrcd,bgkd->bgrck", qf, ck.astype(jnp.float32))
+    kpos = jnp.arange(ck.shape[2])
+    gi = p0[:, None] + jnp.arange(c)                     # (B,C) query pos
+    mask = kpos[None, None, :] <= gi[:, :, None]         # (B,C,K)
+    if a.window is not None:
+        wm = kpos[None, None, :] > gi[:, :, None] - a.window
+        if prefix_len:
+            wm = wm | (kpos[None, None, :] < prefix_len)
+        mask = mask & wm
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p_att = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrck,bgkd->bgrcd", p_att, cv.astype(jnp.float32))
+    return out.reshape(bq, h, c, dh).astype(q.dtype)
+
+
+def chunk_ring_attention(q, ck, cv, kn, vn, p0, a: AttnConfig):
+    """Multi-query chunk attention over a window-sized ring cache.
+
+    The chunk is *not* yet written: ring slot ``p % lc`` for a late chunk
+    position would overwrite a key an earlier chunk query still needs, so
+    scores run over the concatenation (old ring ‖ chunk keys) with explicit
+    occupancy masks and the caller writes the chunk afterwards.
+
+    Old ring slot ``j`` holds position ``p_j = (p0-1) - ((p0-1-j) mod lc)``
+    — the latest pre-chunk position congruent to ``j`` — valid for query
+    ``g_i = p0+i`` iff it exists (``j < p0`` or the ring already wrapped)
+    and it is still in-window (``p_j > g_i - window``).  Chunk key ``t``
+    (position ``p0+t``) is valid iff ``t <= i``; it is always in-window
+    because the chunk length is clamped to ``lc <= window``."""
+    bq, h, c, dh = q.shape
+    kvh = ck.shape[1]
+    rep = h // kvh
+    lc = ck.shape[2]
+    p0 = _lane_positions(p0, bq)
+    gi = p0[:, None] + jnp.arange(c)                     # (B,C)
+    j = jnp.arange(lc)
+    pj = (p0[:, None] - 1) - jnp.mod(p0[:, None] - 1 - j[None, :], lc)
+    exists = (j[None, :] < p0[:, None]) | (p0[:, None] >= lc)
+    old_ok = exists[:, None, :] & (pj[:, None, :] > gi[:, :, None] - a.window)
+    t = jnp.arange(c)
+    new_ok = jnp.broadcast_to(t[None, None, :] <= t[None, :, None],
+                              (bq, c, c))
+    mask = jnp.concatenate([old_ok, new_ok], axis=-1)    # (B,C,lc+C)
+    kf = jnp.concatenate([ck.astype(jnp.float32),
+                          kn.astype(jnp.float32)], axis=2)
+    vf = jnp.concatenate([cv.astype(jnp.float32),
+                          vn.astype(jnp.float32)], axis=2)
+    qf = (q.astype(jnp.float32) * dh ** -0.5).reshape(bq, kvh, rep, c, dh)
+    s = jnp.einsum("bgrcd,bgkd->bgrck", qf, kf)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p_att = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrck,bgkd->bgrcd", p_att, vf)
+    return out.reshape(bq, h, c, dh).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -204,11 +296,20 @@ def mla_forward(p: Params, x: jax.Array, a: AttnConfig, *,
         cl, cr = cache                               # (B,S,lat), (B,S,rdh)
         pos = _lane_positions(cache_pos, b)          # per-slot write position
         lane = jnp.arange(b)
-        cl = cl.at[lane, pos].set(ckv[:, 0].astype(cl.dtype))
-        cr = cr.at[lane, pos].set(k_rope[:, 0].astype(cr.dtype))
+        if s == 1:
+            cl = cl.at[lane, pos].set(ckv[:, 0].astype(cl.dtype))
+            cr = cr.at[lane, pos].set(k_rope[:, 0].astype(cr.dtype))
+            qpos = pos[:, None]                      # (B,1) query positions
+        else:
+            # chunked prefill: the latent cache has no ring layout, so the
+            # chunk writes first and the per-query causal mask below hides
+            # the chunk's own future exactly like stale tail garbage
+            qpos = pos[:, None] + jnp.arange(s)      # (B,C)
+            cl = cl.at[lane[:, None], qpos].set(ckv.astype(cl.dtype))
+            cr = cr.at[lane[:, None], qpos].set(k_rope.astype(cr.dtype))
         wuk = p["wuk"].reshape(lat, h, dh)
         q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32),
-                           wuk.astype(jnp.float32))  # (B,1,H,lat)
+                           wuk.astype(jnp.float32))  # (B,S,H,lat)
         scale = (dh + rdh) ** -0.5
         s_lat = jnp.einsum("bshl,btl->bhst", q_lat,
                            cl.astype(jnp.float32))
@@ -216,7 +317,7 @@ def mla_forward(p: Params, x: jax.Array, a: AttnConfig, *,
                             cr.astype(jnp.float32))
         scores = (s_lat + s_rope) * scale
         kpos = jnp.arange(cl.shape[1])
-        scores = jnp.where((kpos[None, :] <= pos[:, None])[:, None, None],
+        scores = jnp.where((kpos[None, None, :] <= qpos[:, :, None])[:, None],
                            scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
         ctx_lat = jnp.einsum("bhst,btl->bshl", probs,

@@ -346,6 +346,44 @@ class Model:
         logits = _masked_logits(params, x[:, -1:], cfg)
         return logits[:, 0], caches
 
+    def supports_chunked_prefill(self) -> bool:
+        """True when prompts can be prefilled in multi-token chunks through
+        the decode caches.  Attention blocks (GQA ring/full and MLA) accept
+        multi-token cache updates; Mamba's cache path is single-token
+        (ssm.mamba_forward has no chunk-with-initial-state form), MoE
+        routing is capacity-dependent (expert capacity is sized per
+        invocation, so chunked and whole-prompt prefills route — and drop —
+        tokens differently), and stub frontends / prefix-LM configs have no
+        token chunking — those serve via whole-prompt admission instead."""
+        if self.cfg.frontend != "none" or self.cfg.prefix_len:
+            return False
+        return all(b.kind != "mamba" and b.moe is None
+                   for st in self.cfg.stages for b in st.pattern)
+
+    def prefill_chunk(self, params, caches, tokens, p0
+                      ) -> Tuple[jax.Array, PyTree]:
+        """Run one prefill chunk through the decode caches.
+
+        ``tokens`` (B, C) continues each lane's prompt at positions
+        ``p0..p0+C-1`` (``p0`` scalar or (B,)); every attention cache is
+        updated in place (ring slots included) and the returned logits are
+        the chunk's *last* token's — only the final chunk of a prompt is
+        sampled.  Callers must gate on :meth:`supports_chunked_prefill`."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens).astype(
+            cfg.activation_dtype())
+        x = shard(x, "batch", None, None)
+        b, c = tokens.shape
+        pos = jnp.asarray(p0, jnp.int32)
+        if pos.ndim == 0:
+            pos = jnp.full((b,), pos, jnp.int32)
+        positions = pos[:, None] + jnp.arange(c)[None, :]
+        x, _, new_caches = _forward(params, x, positions, cfg,
+                                    caches=caches, cache_pos=pos,
+                                    mode="decode")
+        logits = _masked_logits(params, x[:, -1:], cfg)
+        return logits[:, 0], new_caches
+
     def decode_step(self, params, caches, token, pos, active=None
                     ) -> Tuple[jax.Array, PyTree]:
         """token (B,1) int32 (or (B,1,D) embeddings for stub frontends).

@@ -1,3 +1,5 @@
-from .engine import (Request, RequestQueue, ServeEngine, SlotEngine,
+from .engine import (AdmissionError, AdmissionPolicy, PagedEngine, QoSClass,
+                     Request, RequestQueue, ServeEngine, SlotEngine,
                      StepScheduler, sample_tokens)
-from .kvcache import evict_slot, insert_slot, pad_caches
+from .kvcache import (BlockPool, NoFreeBlocks, evict_slot, init_paged,
+                      insert_slot, leaf_layout, pad_caches, prefix_block_keys)

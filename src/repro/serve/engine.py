@@ -39,11 +39,50 @@ import numpy as np
 from ..core.agents import AgentDeadError, AgentState, HaloFuture
 from ..core.portability import ServeReport
 from ..models.transformer import Model
-from .kvcache import evict_slot, insert_slot, pad_caches
+from .kvcache import (BlockPool, LeafSpec, NoFreeBlocks, _is_spec,
+                      copy_block, evict_slot, gather_views, init_paged,
+                      insert_slot, leaf_layout, pad_caches,
+                      prefix_block_keys, ring_lengths, scatter_slots,
+                      scatter_token)
 
 log = logging.getLogger("repro.serve.engine")
 
 PyTree = Any
+
+
+class AdmissionError(RuntimeError):
+    """Request rejected by the admission/QoS policy: its class queue-depth
+    cap was hit at submit, or it aged out of the queue past ``max_delay``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSClass:
+    """Per-class admission limits.  ``max_depth`` caps how many requests of
+    the class may sit queued (submit past it raises
+    :class:`AdmissionError`); ``max_delay`` bounds how long a queued request
+    may wait before it is failed instead of admitted (seconds)."""
+    max_depth: Optional[int] = None
+    max_delay: Optional[float] = None
+
+
+@dataclasses.dataclass
+class AdmissionPolicy:
+    """Admission/QoS policy for :class:`StepScheduler` (DESIGN.md §14).
+
+    ``classes`` maps a QoS class name (the ``qos=`` argument to ``submit``)
+    to its limits; unknown classes get ``default``.  ``watermark`` is the
+    fraction of the paged arena that must remain unreserved *after* an
+    admission — requests that would dip below it stay queued (and
+    eventually age out via their class ``max_delay``), so sustained
+    overload degrades into bounded queueing + rejections instead of an
+    allocator failure mid-decode.  Dense slot engines ignore the
+    watermark (their memory is fixed at construction)."""
+    classes: Dict[str, QoSClass] = dataclasses.field(default_factory=dict)
+    default: QoSClass = QoSClass()
+    watermark: float = 0.0
+
+    def qos(self, name: str) -> QoSClass:
+        return self.classes.get(name, self.default)
 
 
 def sample_tokens(logits: jax.Array, key: jax.Array, temperature) -> jax.Array:
@@ -65,6 +104,7 @@ class Request:
     prompt: List[int]
     max_new: int
     eos_id: Optional[int] = None
+    qos: str = "default"
     result: Optional[List[int]] = None
     future: Optional[HaloFuture] = None
     submitted_at: float = 0.0
@@ -158,19 +198,398 @@ class SlotEngine:
         (the caller must fail its active lanes when this returns False);
         trace-time errors never consume the donation, so the common
         bad-request case keeps the pool — and its occupants — intact."""
-        if not any(leaf.is_deleted() for leaf in jax.tree.leaves(self.caches)):
+        leaves = jax.tree.leaves(self.caches)
+        if not any(leaf.is_deleted() for leaf in leaves):
             return True
+        # a failed call rarely consumes *every* donated buffer: explicitly
+        # release the survivors before rebuilding, otherwise they are only
+        # freed when GC collects the old tree — a 2x-pool peak that can
+        # itself OOM the rebuild (RequestQueue.flush regression test)
+        for leaf in leaves:
+            if not leaf.is_deleted():
+                leaf.delete()
         self.caches = self.model.init_cache(self.slots, self.max_len)
         return False
 
 
+# ---------------------------------------------------------------------------
+# Paged engine: block-paged cache with COW prefix sharing + chunked prefill
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _SlotMeta:
+    """Host bookkeeping for one paged lane."""
+    prompt: List[int]
+    max_new: int
+    key: Any                    # admission PRNG key (reused across chunks)
+    temperature: float
+    resv: int                   # reservation remaining to draw down
+    reserved: int               # worst-case blocks reserved at admission
+    nblocks: int = 0            # populated block-table entries
+    pos: int = 0                # next prompt position to prefill
+
+
+class PagedEngine:
+    """Block-paged drop-in for :class:`SlotEngine` (DESIGN.md §14).
+
+    Same host surface (``decode_step`` / ``release_slot`` /
+    ``ensure_caches``) over block-paged storage: every sequence-bearing
+    cache leaf lives in one preallocated arena of ``block_size``-token
+    blocks, each lane maps logical positions through a per-slot block
+    table, and a :class:`~repro.serve.kvcache.BlockPool` refcounts the
+    blocks.  On top of the dense engine it adds:
+
+    * **copy-on-write prefix sharing** — full prompt blocks are registered
+      under content keys; a later admission whose prefix matches reuses the
+      resident chain (no prefill compute, no new blocks) and forks a
+      private copy the first time it writes a shared block (SWA ring wrap
+      included);
+    * **chunked prefill** — long prompts prefill ``chunk_tokens`` at a time
+      (``begin_admission`` → ``continue_admission``), so one long prompt
+      interleaves with decode steps instead of stalling active lanes;
+    * **admission accounting** — a lane reserves its worst-case block count
+      up front (``can_admit``), so decode never exhausts the arena
+      mid-flight: overload surfaces at admission, as policy.
+
+    Decode gathers each lane's blocks into a dense per-lane view, runs the
+    *unmodified* ``model.decode_step`` on it, and scatters the one written
+    entry per leaf back — masked garbage beyond each lane's position scores
+    exactly -1e30 either way, so paged decode is bit-identical to the dense
+    slot engine (the parity suite asserts it).  ``release_slot`` is
+    host-only bookkeeping (refcounts, no device work), which is what lets
+    failed lanes free their blocks even when the device pool is broken."""
+
+    def __init__(self, model: Model, params: PyTree, slots: int,
+                 max_len: int, *, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 chunk_tokens: Optional[int] = None,
+                 prefix_sharing: bool = True):
+        if model.cfg.frontend != "none":   # token-embedding frontend only
+            raise ValueError(
+                "PagedEngine serves token frontends; patch/frame stub "
+                "frontends go through ServeEngine's lockstep fallback")
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.block_size = int(block_size)
+        self.blocks_per_lane = -(-max_len // self.block_size)
+        self.layout = leaf_layout(model.cfg, max_len)
+        self._rings = ring_lengths(self.layout, max_len)
+        # chunk length: whole blocks, clamped to the smallest ring so one
+        # chunk never writes the same ring slot twice (attention.py)
+        cap = min(self._rings) if self._rings else max_len
+        if chunk_tokens is None:
+            chunk_tokens = 2 * self.block_size
+        self.chunk_tokens = (min(int(chunk_tokens), cap)
+                             // self.block_size * self.block_size)
+        self._chunkable = (model.supports_chunked_prefill()
+                           and self.chunk_tokens > 0)
+        self.prefix_sharing = bool(prefix_sharing) and self._chunkable
+        if num_blocks is None:
+            # parity capacity with the dense engine (+1 for the null block),
+            # plus per-slot headroom for the worst-case COW fork bound so a
+            # full arena of shared-prefix lanes stays admissible
+            slack = max((self._fork_bound(s0, max_len - s0)
+                         for s0 in range(1, max_len)), default=0)
+            num_blocks = slots * (self.blocks_per_lane + slack) + 1
+        self.num_blocks = num_blocks
+        self.pool = BlockPool(num_blocks, self.block_size)
+        self.paged = init_paged(model.cfg, slots, max_len, num_blocks,
+                                self.block_size)
+        self.tables = np.zeros((slots, self.blocks_per_lane), np.int32)
+        self._meta: List[Optional[_SlotMeta]] = [None] * slots
+        self.tokens_cached = 0          # positions written (prompt + decode)
+        self._admit = jax.jit(self._admit_fn, donate_argnums=(1,))
+        self._chunk = jax.jit(self._chunk_fn, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        self._copy = jax.jit(self._copy_fn, donate_argnums=(0,))
+
+    # -- compiled bodies ---------------------------------------------------
+    def _admit_fn(self, params, paged, toks, slot, table_row, key,
+                  temperature):
+        """Whole-prompt admission: the same prefill + pad as the dense
+        engine (bit-identical logits), then scatter the padded row into the
+        lane's blocks — ring leaves arrive already in ring layout, so every
+        leaf writes ring slots 0..min(S0, length)."""
+        logits, one = self.model.prefill(params, {"tokens": toks})
+        one = pad_caches(self.model.cfg, one, self.max_len)
+        s0 = toks.shape[1]
+
+        def w(ls: LeafSpec, arena, view):
+            if ls.kind == "lane":
+                return jax.tree.map(
+                    lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+                        f, o.astype(f.dtype), slot, axis=1), arena, view)
+            n = min(s0, ls.length)
+            return scatter_slots(ls, arena, view, table_row,
+                                 jnp.arange(n), self.block_size)
+
+        paged = jax.tree.map(w, self.layout, paged, one, is_leaf=_is_spec)
+        return paged, sample_tokens(logits, key, temperature)
+
+    def _chunk_fn(self, params, paged, toks, p0, table_row, key,
+                  temperature):
+        """One prefill chunk for one lane: gather its view, run the chunk,
+        scatter the chunk's ring slots back.  Chunkable configs have no
+        lane leaves (no Mamba), so only sequence arenas update."""
+        views = gather_views(self.layout, paged, table_row[None, :],
+                             self.block_size)
+        logits, views = self.model.prefill_chunk(params, views, toks, p0)
+        c = toks.shape[1]
+
+        def w(ls: LeafSpec, arena, view):
+            if ls.kind == "lane":
+                return arena
+            slots = jnp.mod(p0 + jnp.arange(c), ls.length)
+            return scatter_slots(ls, arena, view, table_row, slots,
+                                 self.block_size)
+
+        paged = jax.tree.map(w, self.layout, paged, views, is_leaf=_is_spec)
+        return paged, sample_tokens(logits, key, temperature)
+
+    def _decode_fn(self, params, paged, tok, tables, pos, active, key,
+                   temperature):
+        views = gather_views(self.layout, paged, tables, self.block_size)
+        logits, views = self.model.decode_step(params, views, tok, pos,
+                                               active)
+        paged = scatter_token(self.layout, paged, views, tables, pos,
+                              active, self.block_size)
+        return paged, sample_tokens(logits, key, temperature)
+
+    def _copy_fn(self, paged, src, dst):
+        return copy_block(self.layout, paged, src, dst)
+
+    # -- block bookkeeping (host) ------------------------------------------
+    def _fork_bound(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case COW forks the linear budget does not already cover.
+
+        A *matched* block's fork spends its own (unspent) table-entry unit,
+        but a block this lane allocated fresh, registered, and saw another
+        lane match can be forced into a fork by a ring-wrap write — a
+        second draw for the same entry.  That can only hit registered
+        (full-prompt) blocks, and registration only happens when the prompt
+        itself never wrapped, so the bound is the wrapped ring slots of the
+        decode phase intersected with the registered block range."""
+        if not self.prefix_sharing or not self._rings:
+            return 0
+        if any(prompt_len > length for length in self._rings):
+            return 0      # prompt wrapped: its blocks are never registered
+        wrapped = set()
+        for length in self._rings:
+            for p in range(prompt_len, prompt_len + max_new):
+                if p >= length:
+                    wrapped.add((p % length) // self.block_size)
+        return len(wrapped & set(range(prompt_len // self.block_size)))
+
+    def blocks_for(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case blocks one request can consume (tail + COW forks)."""
+        return (-(-(prompt_len + max_new) // self.block_size)
+                + self._fork_bound(prompt_len, max_new))
+
+    def can_admit(self, prompt_len: int, max_new: int, *,
+                  watermark: float = 0.0) -> bool:
+        """True when the arena can reserve the request's worst case and
+        stay above ``watermark`` (fraction of capacity) afterwards."""
+        need = self.blocks_for(prompt_len, max_new)
+        floor = int(watermark * self.pool.capacity)
+        return self.pool.available() - self.pool.reserved - need >= floor
+
+    def _lane_alloc(self, meta: _SlotMeta) -> int:
+        if meta.resv > 0:
+            meta.resv -= 1
+            return self.pool.alloc(reserved=True)
+        return self.pool.alloc()
+
+    def _grow_table(self, slot: int, upto: int) -> None:
+        """Extend the lane's block chain to cover positions [0, upto)."""
+        meta = self._meta[slot]
+        need = -(-upto // self.block_size)
+        while meta.nblocks < need:
+            bid = self._lane_alloc(meta)
+            self.tables[slot, meta.nblocks] = bid
+            meta.nblocks += 1
+
+    def _prepare_writes(self, slot: int, start: int, count: int) -> None:
+        """COW fence: make every block the next write burst touches private.
+
+        The write set for positions [start, start+count) is the full-leaf
+        block range plus, per distinct ring length, the wrapped ring slots'
+        blocks.  Shared blocks (refcount > 1) fork — host alloc + jitted
+        arena row copy — and registered-but-unshared blocks leave the
+        prefix cache, since their content is about to stop matching their
+        key.  Forked *originals* keep their registration: their content is
+        frozen, so later admissions can still match them."""
+        meta = self._meta[slot]
+        touched = set(range(start // self.block_size,
+                            (start + count - 1) // self.block_size + 1))
+        for length in self._rings:
+            touched.update((p % length) // self.block_size
+                           for p in range(start, start + count))
+        for j in sorted(touched):
+            if j >= meta.nblocks:
+                continue                       # fresh block, never shared
+            bid = int(self.tables[slot, j])
+            if self.pool.refcount(bid) > 1:
+                use_resv = meta.resv > 0
+                if use_resv:
+                    meta.resv -= 1
+                new = self.pool.fork(bid, reserved=use_resv)
+                self.paged = self._copy(self.paged,
+                                        jnp.asarray(bid, jnp.int32),
+                                        jnp.asarray(new, jnp.int32))
+                self.tables[slot, j] = new
+            elif self.pool.is_registered(bid):
+                self.pool.unregister(bid)
+
+    def _register_prompt(self, slot: int, meta: _SlotMeta) -> None:
+        if not self.prefix_sharing:
+            return
+        if any(len(meta.prompt) > length for length in self._rings):
+            # the SWA ring wrapped during prefill: these blocks no longer
+            # hold the prefix KV their content key would promise
+            return
+        keys = prefix_block_keys(meta.prompt, self.block_size)
+        for i, key in enumerate(keys):
+            bid = int(self.tables[slot, i])
+            if not self.pool.is_registered(bid):
+                self.pool.register_prefix(bid, key)
+
+    # -- host surface ------------------------------------------------------
+    def begin_admission(self, slot: int, prompt: List[int], max_new: int,
+                        key, temperature=0.0) -> Optional[int]:
+        """Admit ``prompt`` into lane ``slot``.  Returns its first sampled
+        token when the prefill completed in this call, or None when a
+        chunked prefill is now in flight (drive it with
+        ``continue_admission``, one chunk per engine iteration)."""
+        s0 = len(prompt)
+        need = self.blocks_for(s0, max_new)
+        self.pool.reserve(need)
+        meta = _SlotMeta(prompt=list(prompt), max_new=max_new, key=key,
+                         temperature=float(temperature), resv=need,
+                         reserved=need)
+        self._meta[slot] = meta
+        if self.prefix_sharing:
+            # never match the whole prompt: >= 1 suffix token must prefill
+            keys = prefix_block_keys(prompt, self.block_size,
+                                     limit=(s0 - 1) // self.block_size)
+            for i, bid in enumerate(self.pool.match_prefix(keys)):
+                self.tables[slot, i] = bid
+                meta.nblocks += 1
+        meta.pos = meta.nblocks * self.block_size
+        if not self._chunkable or (meta.nblocks == 0
+                                   and s0 <= self.chunk_tokens):
+            return self._admit_whole(slot, meta)
+        return self.continue_admission(slot)
+
+    def _admit_whole(self, slot: int, meta: _SlotMeta) -> int:
+        s0 = len(meta.prompt)
+        self._grow_table(slot, s0)
+        toks = jnp.asarray(meta.prompt, jnp.int32)[None, :]
+        row = jnp.asarray(self.tables[slot])
+        self.paged, tok = self._admit(self.params, self.paged, toks,
+                                      jnp.asarray(slot, jnp.int32), row,
+                                      meta.key, meta.temperature)
+        meta.pos = s0
+        self.tokens_cached += s0
+        self._register_prompt(slot, meta)
+        return int(jax.device_get(tok)[0])
+
+    def continue_admission(self, slot: int) -> Optional[int]:
+        """Run one prefill chunk; returns the first sampled token once the
+        whole prompt is in cache, else None."""
+        meta = self._meta[slot]
+        s0 = len(meta.prompt)
+        c = min(self.chunk_tokens, s0 - meta.pos)
+        self._grow_table(slot, meta.pos + c)
+        self._prepare_writes(slot, meta.pos, c)
+        toks = jnp.asarray(meta.prompt[meta.pos:meta.pos + c],
+                           jnp.int32)[None, :]
+        row = jnp.asarray(self.tables[slot])
+        self.paged, tok = self._chunk(self.params, self.paged, toks,
+                                      jnp.asarray(meta.pos, jnp.int32), row,
+                                      meta.key, meta.temperature)
+        meta.pos += c
+        self.tokens_cached += c
+        if meta.pos < s0:
+            return None
+        self._register_prompt(slot, meta)
+        return int(jax.device_get(tok)[0])
+
+    def decode_step(self, tok, pos, active, key, temperature=0.0):
+        """One batched decode step; same contract as the dense engine.
+
+        Host prep per active lane: grow the tail block if this position
+        crosses a block boundary, then COW-fence the write set — after
+        which every block written this step is private, so the jitted
+        gather → decode → scatter touches no shared storage."""
+        for i, on in enumerate(active):
+            if on:
+                p = int(pos[i])
+                self._grow_table(i, p + 1)
+                self._prepare_writes(i, p, 1)
+                self.tokens_cached += 1
+        self.paged, nxt = self._decode(
+            self.params, self.paged, jnp.asarray(tok, jnp.int32)[:, None],
+            jnp.asarray(self.tables), jnp.asarray(pos, jnp.int32),
+            jnp.asarray(active, bool), key, float(temperature))
+        return jax.device_get(nxt)
+
+    def release_slot(self, slot: int) -> None:
+        """Host-only retirement: deref the lane's chain and return its
+        unused reservation.  No device work — stale arena rows are masked
+        by the next reader and overwritten by the next owner — so this is
+        safe even while the device pool is broken (failed lanes must
+        release their blocks, test_chaos)."""
+        meta = self._meta[slot]
+        if meta is None:
+            return
+        for j in range(meta.nblocks):
+            self.pool.deref(int(self.tables[slot, j]))
+        self.pool.unreserve(meta.resv)
+        self.tables[slot, :] = 0
+        self._meta[slot] = None
+
+    # failed lanes use the same host-only path (no device call to explode)
+    abandon_slot = release_slot
+
+    def ensure_caches(self) -> bool:
+        """Check the arenas after a failed jitted call; True if intact.
+        Rebuilding resets the pool — every lane's state is gone, the
+        caller must fail its active lanes (same contract as SlotEngine)."""
+        leaves = jax.tree.leaves(self.paged)
+        if not any(leaf.is_deleted() for leaf in leaves):
+            return True
+        for leaf in leaves:
+            if not leaf.is_deleted():
+                leaf.delete()      # release survivors before the rebuild
+        self.paged = init_paged(self.model.cfg, self.slots, self.max_len,
+                                self.num_blocks, self.block_size)
+        self.pool.reset()
+        self.tables[:] = 0
+        self._meta = [None] * self.slots
+        return False
+
+    def stats(self) -> Dict[str, Any]:
+        """Allocator + sharing scorecard (benchmarks record these)."""
+        s = dict(self.pool.stats())
+        s["tokens_cached"] = self.tokens_cached
+        s["prefix_hit_rate"] = (self.pool.prefix_hits
+                                / max(1, self.pool.prefix_queries))
+        s["blocks_per_token"] = (self.pool.allocs
+                                 / max(1, self.tokens_cached))
+        return s
+
+
 @dataclasses.dataclass
 class _Lane:
-    """One occupied slot: its request plus the decode cursor."""
+    """One occupied slot: its request plus the decode cursor.  A lane with
+    ``prefilling=True`` is mid chunked-prefill: it owns its slot and blocks
+    but does not join the decode batch until admission completes."""
     req: Request
     pos: int                 # next cache position this lane writes
     last_tok: int
     tokens: List[int]
+    prefilling: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -187,9 +606,12 @@ class StepScheduler:
     _seq = itertools.count(1)
 
     def __init__(self, engine: SlotEngine, temperature: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, policy: Optional[AdmissionPolicy] = None):
         self.engine = engine
         self.temperature = temperature
+        self.policy = policy or AdmissionPolicy()
+        self.rejected = 0        # submits refused at the QoS depth cap
+        self.expired = 0         # queued requests aged out past max_delay
         self.name = f"slot-engine-{next(StepScheduler._seq)}"
         self._key = jax.random.PRNGKey(seed)
         self._queue: "collections.deque[Request]" = collections.deque()
@@ -213,13 +635,16 @@ class StepScheduler:
 
     # -- submission ----------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 16, *,
-               eos_id: Optional[int] = None,
+               eos_id: Optional[int] = None, qos: str = "default",
                on_token: Optional[Callable[[int, int], None]] = None
                ) -> HaloFuture:
         """Enqueue a request; returns a future for its generated tokens.
 
-        ``on_token(token, index)`` streams every token (including the one
-        sampled from the prefill) from the stepping thread as it lands."""
+        ``qos`` names an :class:`AdmissionPolicy` class: a full class queue
+        rejects the submit with :class:`AdmissionError` (bounded queueing
+        is the overload contract — DESIGN.md §14).  ``on_token(token,
+        index)`` streams every token (including the one sampled from the
+        prefill) from the stepping thread as it lands."""
         prompt = list(map(int, prompt))
         if not prompt:
             raise ValueError("empty prompt")
@@ -229,10 +654,18 @@ class StepScheduler:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds the "
                 f"engine max_len ({self.engine.max_len})")
+        cap = self.policy.qos(qos).max_depth
         with self._cond:
             if self._stop:
                 raise RuntimeError(
                     "StepScheduler is stopped; start() it again to submit")
+            if cap is not None:
+                depth = sum(1 for r in self._queue if r.qos == qos)
+                if depth >= cap:
+                    self.rejected += 1
+                    raise AdmissionError(
+                        f"QoS class {qos!r} queue is full "
+                        f"({depth}/{cap} queued); rejected")
             if not self._queue and not any(l is not None
                                            for l in self._lanes):
                 # busy period starts now: the stall clock for liveness runs
@@ -241,7 +674,7 @@ class StepScheduler:
             self._uid += 1
             fut = HaloFuture(uid=self._uid, alias="generate")
             self._queue.append(Request(self._uid, prompt, max_new,
-                                       eos_id=eos_id, future=fut,
+                                       eos_id=eos_id, qos=qos, future=fut,
                                        submitted_at=time.monotonic(),
                                        on_token=on_token))
             self._cond.notify_all()
@@ -315,12 +748,28 @@ class StepScheduler:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    def _abandon(self, slot: int) -> None:
+        """Release a failed lane's blocks.  Paged engines expose the
+        host-only ``abandon_slot`` (refcount bookkeeping, safe even with a
+        broken device pool); the dense engine's eviction is a device call,
+        so it is skipped here — dense lane state is garbage the next
+        ``insert_slot`` fully overwrites anyway."""
+        release = getattr(self.engine, "abandon_slot", None)
+        if release is None:
+            return
+        try:
+            release(slot)
+        except Exception:
+            log.exception("abandon_slot(%d) failed", slot)
+
     def _fail_active(self, exc: BaseException) -> None:
         """Fail every occupied lane (their cache state is unrecoverable)."""
         with self._cond:
-            lanes = [l for l in self._lanes if l is not None]
+            lanes = [(i, l) for i, l in enumerate(self._lanes)
+                     if l is not None]
             self._lanes = [None] * self.engine.slots
-        for lane in lanes:
+        for i, lane in lanes:
+            self._abandon(i)
             if lane.req.future is not None:
                 lane.req.future.set_exception(exc)
 
@@ -331,8 +780,57 @@ class StepScheduler:
         if req.future is not None:
             req.future.set_result(list(tokens))
 
+    def _expire_queued(self) -> None:
+        """Fail queued requests that aged past their QoS class max_delay."""
+        now = time.monotonic()
+        expired: List[Request] = []
+        with self._cond:
+            if not self._queue:
+                return
+            keep: "collections.deque[Request]" = collections.deque()
+            for r in self._queue:
+                limit = self.policy.qos(r.qos).max_delay
+                if limit is not None and now - r.submitted_at > limit:
+                    expired.append(r)
+                else:
+                    keep.append(r)
+            self._queue = keep
+        for r in expired:
+            self.expired += 1
+            if r.future is not None:
+                r.future.set_exception(AdmissionError(
+                    f"request {r.uid} waited > {self.policy.qos(r.qos).max_delay}s "
+                    f"queued (QoS class {r.qos!r}); dropped"))
+
+    def _admissible(self, req: Request) -> bool:
+        """Free-memory gate: paged engines must cover the request's
+        worst-case blocks and stay above the policy watermark; dense
+        engines always admit (their memory is fixed per slot)."""
+        can = getattr(self.engine, "can_admit", None)
+        if can is None:
+            return True
+        return can(len(req.prompt), req.max_new,
+                   watermark=self.policy.watermark)
+
+    def _finish_admission(self, slot: int, req: Request, tok: int) -> bool:
+        """Handle a completed prefill's first token; True if the request
+        retired immediately (EOS or max_new == 1) and freed its slot."""
+        self._tokens += 1
+        req.stream(tok, 0)
+        if (req.eos_id is not None and tok == req.eos_id) \
+                or req.max_new == 1:
+            with self._cond:
+                self._lanes[slot] = None
+            self.engine.release_slot(slot)
+            self._finish(req, [tok])
+            return True
+        with self._cond:
+            self._lanes[slot] = _Lane(req, pos=len(req.prompt),
+                                      last_tok=tok, tokens=[tok])
+        return False
+
     def step(self) -> bool:
-        """One engine iteration: admit → decode → retire.
+        """One engine iteration: admit → prefill chunks → decode → retire.
 
         Returns True if any work was done.  Call from a single thread at a
         time (the background loop, or the caller when not started)."""
@@ -340,12 +838,19 @@ class StepScheduler:
         dev = 0.0
         worked = False
         self._beat()          # claim the iteration: a hang inside it stalls
+        self._expire_queued()
 
-        # (a) admission: prefill queued requests into free slots
+        # (a) admission: prefill queued requests into free slots.  FCFS —
+        # a head-of-queue request the watermark cannot cover yet blocks
+        # later ones (no starvation of big prompts); it ages out via its
+        # QoS max_delay if the arena never drains enough.
+        begin = getattr(self.engine, "begin_admission", None)
         while True:
             with self._cond:
                 free = [i for i, l in enumerate(self._lanes) if l is None]
-                req = self._queue.popleft() if free and self._queue else None
+                req = None
+                if free and self._queue and self._admissible(self._queue[0]):
+                    req = self._queue.popleft()
             if req is None:
                 break
             slot = free[0]
@@ -353,10 +858,23 @@ class StepScheduler:
             req.started_at = time.monotonic()
             d0 = time.perf_counter()
             try:
-                tok = self.engine.prefill_into_slot(
-                    slot, req.prompt, self._next_key(), self.temperature)
+                if begin is not None:
+                    with self._cond:
+                        # hold the slot before the device call: a chunked
+                        # admission spans iterations
+                        self._lanes[slot] = _Lane(req, pos=0, last_tok=-1,
+                                                  tokens=[],
+                                                  prefilling=True)
+                    tok = begin(slot, req.prompt, req.max_new,
+                                self._next_key(), self.temperature)
+                else:
+                    tok = self.engine.prefill_into_slot(
+                        slot, req.prompt, self._next_key(), self.temperature)
             except Exception as exc:
                 dev += time.perf_counter() - d0
+                with self._cond:
+                    self._lanes[slot] = None
+                self._abandon(slot)
                 if req.future is not None:
                     req.future.set_exception(exc)
                 if not self.engine.ensure_caches():
@@ -365,20 +883,43 @@ class StepScheduler:
                     self._fail_active(exc)
                 continue
             dev += time.perf_counter() - d0
-            self._tokens += 1
-            req.stream(tok, 0)
-            if (req.eos_id is not None and tok == req.eos_id) \
-                    or req.max_new == 1:
-                self._finish(req, [tok])      # never occupied the slot
-                continue
+            if tok is None:
+                continue           # chunked prefill in flight on this lane
             with self._cond:
-                self._lanes[slot] = _Lane(req, pos=len(req.prompt),
-                                          last_tok=tok, tokens=[tok])
+                self._lanes[slot] = None     # _finish_admission re-occupies
+            self._finish_admission(slot, req, tok)
 
-        # (b) one batched decode step across all occupied slots
+        # (a') chunked prefills: one chunk per prefilling lane per iteration,
+        # so a long prompt interleaves with decode instead of stalling it
+        with self._cond:
+            prefilling = [(i, l) for i, l in enumerate(self._lanes)
+                          if l is not None and l.prefilling]
+        for i, lane in prefilling:
+            worked = True
+            d0 = time.perf_counter()
+            try:
+                tok = self.engine.continue_admission(i)
+            except Exception as exc:
+                dev += time.perf_counter() - d0
+                with self._cond:
+                    self._lanes[i] = None
+                self._abandon(i)
+                if lane.req.future is not None:
+                    lane.req.future.set_exception(exc)
+                if not self.engine.ensure_caches():
+                    self._fail_active(exc)
+                continue
+            dev += time.perf_counter() - d0
+            if tok is None:
+                continue                     # more chunks to go
+            with self._cond:
+                self._lanes[i] = None
+            self._finish_admission(i, lane.req, tok)
+
+        # (b) one batched decode step across all decoding slots
         with self._cond:
             occupied = [(i, l) for i, l in enumerate(self._lanes)
-                        if l is not None]
+                        if l is not None and not l.prefilling]
         if occupied:
             worked = True
             b = self.engine.slots
@@ -461,12 +1002,14 @@ class StepScheduler:
             with self._cond:
                 dropped = list(self._queue)
                 self._queue.clear()
-                lanes = [l for l in self._lanes if l is not None]
+                lanes = [(i, l) for i, l in enumerate(self._lanes)
+                         if l is not None]
                 self._lanes = [None] * self.engine.slots
             for r in dropped:
                 if r.future is not None:
                     r.future.cancel()
-            for lane in lanes:
+            for i, lane in lanes:
+                self._abandon(i)
                 if lane.req.future is not None:
                     lane.req.future.cancel()
 

@@ -23,6 +23,11 @@ everywhere:
 * :func:`failing` / :func:`faulty_record` — record-level counterparts for
   registry-driven fault paths (a kernel whose *record* is bad, rather than
   its agent).
+* :func:`engine_chaos` — the serving-path counterpart: jitted serving
+  programs inline their kernels at trace time, so :class:`FaultyAgent`
+  never sees a decode call.  ``engine_chaos`` wraps a serving engine's
+  host entry points (``decode_step`` by default) with the same
+  :class:`FaultPlan` semantics instead.
 """
 from __future__ import annotations
 
@@ -36,8 +41,8 @@ from ..core.agents import (JnpAgent, PallasAgent, RuntimeAgent,
                            VirtualizationAgent, XlaAgent)
 from ..core.registry import KernelRecord
 
-__all__ = ["FaultError", "FaultPlan", "FaultyAgent", "chaos", "failing",
-           "faulty_record"]
+__all__ = ["EngineFault", "FaultError", "FaultPlan", "FaultyAgent", "chaos",
+           "engine_chaos", "failing", "faulty_record"]
 
 _MODES = ("raise", "hang", "die")
 
@@ -195,6 +200,102 @@ def chaos(session: RuntimeAgent, *plans: Union[FaultPlan, Dict[str, Any]],
         sched = getattr(session, "scheduler", None)
         if clear_quarantine and sched is not None:
             sched.clear_failures()
+
+
+class EngineFault:
+    """Executes a :class:`FaultPlan` against one engine method.
+
+    Serving engines run jitted programs whose kernels were inlined at trace
+    time, so agent-level fault injection (:class:`FaultyAgent`) cannot reach
+    them.  This adapter patches a *host* entry point instead — e.g.
+    ``decode_step`` — and applies the plan's raise/hang/die semantics at the
+    call boundary, which is exactly where a lost device surfaces to the
+    scheduler.  Counters mirror :class:`FaultyAgent`: ``calls`` / ``failures``
+    readable from the test thread, ``release()`` unblocks hang/die waits.
+
+    ``plan.aliases`` is ignored (the patched method *is* the target);
+    ``plan.platform`` is informational only."""
+
+    def __init__(self, target: Any, method: str, plan: FaultPlan):
+        self.target = target
+        self.method = method
+        self.plan = plan
+        self.calls = 0
+        self.failures = 0
+        self._fault_lock = threading.Lock()
+        self._release = threading.Event()
+        self._orig: Optional[Callable[..., Any]] = None
+
+    def release(self) -> None:
+        """Unblock every in-flight and future hang/die wait."""
+        self._release.set()
+
+    def _wrapped(self, *args, **kwargs):
+        plan = self.plan
+        with self._fault_lock:
+            self.calls += 1
+            n = self.calls
+        if plan.applies(n):
+            with self._fault_lock:
+                self.failures += 1
+            if plan.mode == "raise":
+                raise plan.error()
+            if plan.mode == "hang":
+                self._release.wait(plan.delay_s if plan.delay_s > 0 else None)
+                return self._orig(*args, **kwargs)
+            # "die": wedge mid-call until released, then fail — the stalled
+            # heartbeat (scheduler stuck inside step()) is the point
+            self._release.wait()
+            raise plan.error()
+        return self._orig(*args, **kwargs)
+
+    def install(self) -> "EngineFault":
+        if self._orig is not None:
+            raise RuntimeError("EngineFault already installed")
+        # remember whether the method lived on the instance (a jitted
+        # callable assigned in __init__) or on the class — uninstall must
+        # restore the same arrangement, not pin a bound method
+        self._was_instance_attr = self.method in vars(self.target)
+        self._orig = getattr(self.target, self.method)
+        setattr(self.target, self.method, self._wrapped)
+        return self
+
+    def uninstall(self) -> None:
+        if self._orig is None:
+            return
+        if self._was_instance_attr:
+            setattr(self.target, self.method, self._orig)
+        else:
+            delattr(self.target, self.method)
+        self._orig = None
+
+
+@contextlib.contextmanager
+def engine_chaos(engine: Any, *,
+                 method: str = "decode_step",
+                 plan: Optional[FaultPlan] = None,
+                 **plan_kwargs) -> Iterator[EngineFault]:
+    """Patch ``engine.<method>`` with :class:`FaultPlan` semantics for the
+    block's duration.  On exit — success or test failure — wedged calls are
+    released and the original method restored, so one test's chaos never
+    leaks into the next.
+
+    ::
+
+        with engine_chaos(paged, mode="raise", nth=3) as fault:
+            ... drive the scheduler ...
+        assert fault.failures == 1
+    """
+    if plan is None:
+        plan = FaultPlan(**plan_kwargs)
+    elif plan_kwargs:
+        raise ValueError("pass a FaultPlan or keyword fields, not both")
+    fault = EngineFault(engine, method, plan).install()
+    try:
+        yield fault
+    finally:
+        fault.release()
+        fault.uninstall()
 
 
 def failing(message: str = "injected fault",

@@ -13,11 +13,13 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core import (HealthConfig, KernelRegistry, RuntimeAgent,
+from repro.core import (AgentDeadError, AgentState, HealthConfig,
+                        HealthMonitor, KernelRegistry, RuntimeAgent,
                         default_manifest, halo_graph)
 from repro.kernels import register_all
-from repro.testing.faults import FaultPlan, chaos
+from repro.testing.faults import FaultError, FaultPlan, chaos, engine_chaos
 
 N = 32
 ITERS = 4
@@ -210,3 +212,118 @@ def test_flaky_member_recovers_without_membership_change():
         assert comm.epoch == 0
     finally:
         sess.finalize()
+
+
+# -- paged serving chaos ------------------------------------------------------
+# Jitted serving programs inline their kernels at trace time, so FaultyAgent
+# never sees a decode call; engine_chaos patches the engine's host entry
+# point instead (testing/faults.py).  The claims under test (DESIGN.md §14):
+# a decode fault fails exactly the in-flight lanes, every failed lane's
+# blocks return to the arena (pool.check() passes, zero leaks), queued
+# requests still serve afterwards, and a wedged stepping thread goes DEAD —
+# futures fail with AgentDeadError and the arena drains even while the
+# device call is still stuck.
+
+@pytest.fixture(scope="module")
+def serve_model(rng):
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    model = build_model(cfg)
+    return model, model.init(rng)
+
+
+def _paged_sched(model, params, **kw):
+    from repro.serve import PagedEngine, StepScheduler
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("chunk_tokens", 0)       # whole-prompt admission
+    engine = PagedEngine(model, params, **kw)
+    return engine, StepScheduler(engine)
+
+
+def _assert_arena_drained(pool):
+    """Every refcount back at zero, reservations returned, nothing leaked."""
+    pool.check()
+    assert pool.live_blocks() == 0
+    assert pool.reserved == 0
+    assert pool.available() == pool.capacity
+
+
+CASES = [([3, 1, 4, 1, 5], 6), ([2, 7, 1, 8, 2, 8], 6), ([9, 9, 8, 7], 5)]
+
+
+def test_paged_decode_fault_releases_blocks_and_keeps_serving(serve_model):
+    """Kill decode mid-step: the two in-flight lanes fail with the injected
+    FaultError and release their blocks; the still-queued third request is
+    served afterwards with output identical to a fault-free run."""
+    model, params = serve_model
+    ref_engine, ref_sched = _paged_sched(model, params)
+    ref = ref_sched.submit(CASES[2][0], max_new=CASES[2][1])
+    ref_sched.drain()
+    expect = ref.result(timeout=60)
+
+    engine, sched = _paged_sched(model, params)
+    futs = [sched.submit(p, max_new=n) for p, n in CASES]
+    with engine_chaos(engine, mode="raise", nth=2, times=1) as fault:
+        with pytest.raises(FaultError):
+            while sched.busy():            # 2nd batched decode call faults
+                sched.step()
+        assert fault.failures == 1
+        for f in futs[:2]:                 # the lanes that were in flight
+            with pytest.raises(FaultError):
+                f.result(timeout=5)
+        sched.drain()                      # queued request still serves
+    assert futs[2].result(timeout=60) == expect
+    assert sched.completed == 1
+    _assert_arena_drained(engine.pool)
+
+
+def test_paged_decode_straggle_recovers_with_parity(serve_model):
+    """Hang (not kill) one decode step: the straggling call finishes on the
+    real path after the delay, so every request completes bit-identically to
+    a fault-free run and the arena still drains to empty."""
+    model, params = serve_model
+    _, ref_sched = _paged_sched(model, params)
+    refs = [ref_sched.submit(p, max_new=n) for p, n in CASES]
+    ref_sched.drain()
+    expect = [f.result(timeout=60) for f in refs]
+
+    engine, sched = _paged_sched(model, params)
+    with engine_chaos(engine, mode="hang", nth=2, times=1,
+                      delay_s=0.2) as fault:
+        futs = [sched.submit(p, max_new=n) for p, n in CASES]
+        sched.drain()
+        assert fault.failures == 1
+    assert [f.result(timeout=60) for f in futs] == expect
+    assert sched.completed == len(CASES)
+    _assert_arena_drained(engine.pool)
+
+
+def test_paged_wedged_decode_goes_dead_and_frees_blocks(serve_model):
+    """A stepping thread wedged inside a device call stalls the heartbeat;
+    the monitor declares the scheduler DEAD, every in-flight and queued
+    future fails with AgentDeadError, and the failed lanes' blocks are back
+    in the arena *while the device call is still stuck* (release is
+    host-only refcount bookkeeping — DESIGN.md §14)."""
+    model, params = serve_model
+    engine, sched = _paged_sched(model, params)
+    mon = HealthMonitor(HealthConfig(heartbeat_timeout=0.25,
+                                     poll_interval=0.02))
+    sched.attach_health(mon)
+    with engine_chaos(engine, mode="die", nth=1) as fault:
+        sched.start()
+        futs = [sched.submit(p, max_new=n) for p, n in CASES]
+        _wait_until(lambda: fault.calls >= 1, what="decode wedged")
+        beats, busy, last = sched.heartbeat()
+        assert busy
+        assert mon.check(now=last + 0.05)[sched.name] == AgentState.HEALTHY
+        assert mon.check(now=last + 0.3)[sched.name] == AgentState.DEAD
+        for f in futs:
+            with pytest.raises(AgentDeadError):
+                f.result(timeout=5)
+        _assert_arena_drained(engine.pool)  # freed while decode still wedged
+        fault.release()                     # wedged call now fails; loop
+    sched.stop(drain=False)                 # survives (step errors are caught)
+    assert sched.pending() == 0 and sched.active() == 0

@@ -1,0 +1,285 @@
+"""Property-based allocator tests for the paged KV cache (DESIGN.md §14).
+
+The :class:`~repro.serve.kvcache.BlockPool` is held to *invariants*, not
+examples: a randomized driver replays the engine's admit / decode / COW-fork
+/ retire protocol against the pool and calls ``pool.check()`` after **every**
+operation, so a violation surfaces at the op that caused it, not at drain.
+Prompts are drawn from a small set of shared stems so prefix matches, COW
+forks and LRU evictions all occur organically.
+
+The suite runs 500+ interleavings with or without hypothesis: the driver is
+plain code, the bulk test iterates seeds directly, and hypothesis (when
+installed) adds shrinking on top.  A device-level test pins the COW
+guarantee itself: forking then writing the fork never mutates the shared
+source block's bytes.
+"""
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # hypothesis is an optional extra
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    class _NoStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NoStrategies()
+
+from repro.serve.kvcache import (BlockPool, NoFreeBlocks, copy_block,
+                                 gather_views, init_paged, leaf_layout,
+                                 prefix_block_keys)
+
+BS = 4            # block size for the model-based driver
+CAP = 16          # pool capacity (num_blocks - 1)
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+class _Lane:
+    """Shadow of one serving lane: its block chain + unspent reservation."""
+
+    def __init__(self, blocks, resv, prompt, pos, limit):
+        self.blocks = blocks          # bids, in table order
+        self.resv = resv              # worst-case blocks not yet drawn down
+        self.prompt = prompt
+        self.pos = pos                # tokens written so far
+        self.limit = limit            # s0 + max_new: the reserved budget
+
+
+def _alloc(pool, lane):
+    """The engine's allocation rule: spend the lane's reservation first."""
+    if lane.resv > 0:
+        lane.resv -= 1
+        return pool.alloc(reserved=True)
+    return pool.alloc()
+
+
+def _admit(pool, rng, lanes, stems):
+    """Reserve worst case, reuse a matched prefix chain, alloc the rest."""
+    stem = rng.choice(stems)
+    s0 = rng.randrange(1, 4 * BS)
+    prompt = (stem + [rng.randrange(256) for _ in range(64)])[:s0]
+    max_new = rng.randrange(1, 2 * BS)
+    need = ceil_div(s0 + max_new, BS)
+    if not pool.can_reserve(need):
+        return                                     # admission gated: no lane
+    pool.reserve(need)
+    keys = prefix_block_keys(prompt, BS, limit=(s0 - 1) // BS)
+    matched = pool.match_prefix(keys)
+    blocks = list(matched)
+    lane = _Lane(blocks, need, prompt, len(matched) * BS, s0 + max_new)
+    lanes.append(lane)
+    pool.check()
+    while lane.pos < s0:                           # prefill the remainder
+        blocks.append(_alloc(pool, lane))
+        pool.check()
+        lane.pos = min(s0, lane.pos + BS)
+
+
+def _decode(pool, rng, lanes):
+    """Write one token: tail alloc at a block boundary; a wrap-style write
+    into an existing block forks it when shared, unregisters it when not."""
+    if not lanes:
+        return
+    lane = rng.choice(lanes)
+    if lane.pos >= lane.limit:                     # lane exhausted its budget
+        return
+    if lane.pos % BS == 0 and rng.random() < 0.7:
+        lane.blocks.append(_alloc(pool, lane))
+    elif lane.blocks:
+        i = rng.randrange(len(lane.blocks))        # ring wrap lands anywhere
+        bid = lane.blocks[i]
+        if pool.refcount(bid) > 1:
+            if lane.resv > 0:
+                lane.resv -= 1
+                lane.blocks[i] = pool.fork(bid, reserved=True)
+            elif pool.available() - pool.reserved >= 1:
+                lane.blocks[i] = pool.fork(bid)
+        elif pool.is_registered(bid):
+            pool.unregister(bid)
+    lane.pos += 1
+
+
+def _retire(pool, rng, lanes):
+    if not lanes:
+        return
+    lane = lanes.pop(rng.randrange(len(lanes)))
+    if rng.random() < 0.6:                         # publish prompt blocks
+        for i, key in enumerate(prefix_block_keys(lane.prompt, BS)):
+            if i < len(lane.blocks) and pool.refcount(lane.blocks[i]) >= 1:
+                pool.register_prefix(lane.blocks[i], key)
+    for bid in lane.blocks:
+        pool.deref(bid)
+    pool.unreserve(lane.resv)
+
+
+def drive(seed, steps=60):
+    """One random interleaving; checks invariants after every operation."""
+    rng = random.Random(seed)
+    pool = BlockPool(CAP + 1, BS)
+    stems = [[rng.randrange(256) for _ in range(3 * BS)] for _ in range(3)]
+    lanes = []
+    for _ in range(steps):
+        op = rng.random()
+        if op < 0.25:
+            _admit(pool, rng, lanes, stems)
+        elif op < 0.8:
+            _decode(pool, rng, lanes)
+        else:
+            _retire(pool, rng, lanes)
+        pool.check()
+    while lanes:                                   # drain
+        _retire(pool, rng, lanes)
+        pool.check()
+    assert pool.live_blocks() == 0                 # every refcount back at 0
+    assert pool.reserved == 0
+    assert pool.available() == pool.capacity       # zero leaked blocks
+    return pool
+
+
+def test_random_interleavings_never_leak():
+    """500+ random admit/decode/fork/retire interleavings: no leak, no
+    double free, refcounts return to zero at drain.  Runs everywhere —
+    hypothesis only adds shrinking on top of this sweep."""
+    hits = forks = evictions = 0
+    for seed in range(520):
+        pool = drive(seed)
+        hits += pool.prefix_hits
+        forks += pool.forks
+        evictions += pool.evictions
+    # the sweep must actually exercise the interesting paths
+    assert hits > 100 and forks > 100 and evictions > 20
+
+
+@given(seed=st.integers(0, 2**32 - 1), steps=st.integers(1, 120))
+@settings(max_examples=50, deadline=None)
+def test_random_interleavings_hypothesis(seed, steps):
+    drive(seed, steps)
+
+
+def test_double_free_raises():
+    pool = BlockPool(8, BS)
+    bid = pool.alloc()
+    pool.deref(bid)
+    with pytest.raises(ValueError, match="double free"):
+        pool.deref(bid)
+    pool.check()
+
+
+def test_exhaustion_raises_not_corrupts():
+    pool = BlockPool(4, BS)                        # capacity 3
+    bids = [pool.alloc() for _ in range(3)]
+    with pytest.raises(NoFreeBlocks):
+        pool.alloc()
+    pool.check()
+    for b in bids:
+        pool.deref(b)
+    assert pool.available() == pool.capacity
+
+
+def test_reservations_gate_unreserved_allocs():
+    pool = BlockPool(6, BS)                        # capacity 5
+    pool.reserve(4)
+    pool.alloc()                                   # 1 beside the reservation
+    with pytest.raises(NoFreeBlocks):
+        pool.alloc()                               # would invade it
+    assert pool.alloc(reserved=True) is not None   # the reservation itself
+    pool.check()
+    with pytest.raises(ValueError):
+        pool.unreserve(4)                          # only 3 still reserved
+
+
+def test_fork_requires_sharing_and_moves_one_ref():
+    pool = BlockPool(8, BS)
+    bid = pool.alloc()
+    with pytest.raises(ValueError, match="unshared"):
+        pool.fork(bid)
+    pool.ref(bid)                                  # second lane joins
+    new = pool.fork(bid)                           # second lane goes private
+    assert new != bid
+    assert pool.refcount(bid) == 1 and pool.refcount(new) == 1
+    pool.check()
+
+
+def test_match_revives_from_reusable_and_eviction_unregisters():
+    pool = BlockPool(4, BS)                        # capacity 3
+    keys = prefix_block_keys([1, 2, 3, 4, 5, 6, 7, 8], BS)
+    chain = [pool.alloc(), pool.alloc()]
+    for bid, key in zip(chain, keys):
+        assert pool.register_prefix(bid, key)
+    for bid in chain:
+        pool.deref(bid)                            # park on the reusable LRU
+    assert pool.live_blocks() == 0
+    assert pool.match_prefix(keys) == chain        # revived, ref'd again
+    for bid in chain:
+        pool.deref(bid)
+    # allocation pressure evicts LRU reusable blocks and their registration
+    got = [pool.alloc() for _ in range(3)]
+    assert pool.evictions >= 2 and set(chain) <= set(got)
+    assert pool.match_prefix(keys) == []
+    pool.check()
+
+
+def test_prefix_block_keys_chain():
+    toks = list(range(10))
+    keys = prefix_block_keys(toks, 4)
+    assert keys == [(0, 1, 2, 3), (0, 1, 2, 3, 4, 5, 6, 7)]
+    assert prefix_block_keys(toks, 4, limit=1) == [(0, 1, 2, 3)]
+    assert prefix_block_keys(toks[:3], 4) == []
+
+
+def test_cow_fork_never_mutates_shared_block(rng):
+    """Device-level COW: fork a shared block, write the fork, and assert the
+    source block's bytes are untouched (and the sharer still reads them)."""
+    from repro.configs import get_config
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    bs, nblocks, max_len = 4, 9, 16
+    layout = leaf_layout(cfg, max_len)
+    paged = init_paged(cfg, slots=2, max_len=max_len, num_blocks=nblocks,
+                       block_size=bs)
+    import jax
+    import jax.numpy as jnp
+    # fill block 1 with recognizable content, table both slots onto it
+    paged = jax.tree.map(
+        lambda ls, a: a.at[:, 1].set(1.0) if ls.kind == "seq" else a,
+        layout, paged, is_leaf=lambda x: hasattr(x, "kind"))
+    src_before = [np.asarray(a[:, 1]) for ls, a in
+                  zip(jax.tree.leaves(layout, is_leaf=lambda x:
+                      hasattr(x, "kind")), jax.tree.leaves(paged))
+                  if ls.kind == "seq"]
+    # COW: slot 1 forks block 1 -> block 2, then overwrites its copy
+    paged = copy_block(layout, paged, jnp.int32(1), jnp.int32(2))
+    paged = jax.tree.map(
+        lambda ls, a: a.at[:, 2].mul(-3.0) if ls.kind == "seq" else a,
+        layout, paged, is_leaf=lambda x: hasattr(x, "kind"))
+    seq_arenas = [(ls, a) for ls, a in
+                  zip(jax.tree.leaves(layout, is_leaf=lambda x:
+                      hasattr(x, "kind")), jax.tree.leaves(paged))
+                  if ls.kind == "seq"]
+    for (ls, a), before in zip(seq_arenas, src_before):
+        np.testing.assert_array_equal(np.asarray(a[:, 1]), before)
+        assert np.all(np.asarray(a[:, 2]) == -3.0)   # fork took the write
+    # a reader tabled on the original still sees the original content
+    tables = jnp.asarray([[1, 0, 0, 0], [2, 0, 0, 0]], jnp.int32)
+    views = gather_views(layout, paged, tables, bs)
+    for ls, v in zip(jax.tree.leaves(layout, is_leaf=lambda x:
+                     hasattr(x, "kind")), jax.tree.leaves(views)):
+        if ls.kind != "seq":
+            continue
+        first = np.moveaxis(np.asarray(v), ls.seq_axis, -1)[..., :bs]
+        assert np.all(first[:, 0] == 1.0) and np.all(first[:, 1] == -3.0)

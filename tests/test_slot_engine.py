@@ -1,6 +1,7 @@
 """Slot-based continuous batching (DESIGN.md §6): mid-flight admission,
 independent retirement, slot reuse, EOS stop, legacy parity, no-echo flush."""
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -210,3 +211,218 @@ def test_submit_validation(mamba):
         sched.submit([1, 2], max_new=0)
     with pytest.raises(ValueError):
         sched.submit([1] * 12, max_new=8)          # 12 + 8 > 16
+
+
+# ---------------------------------------------------------------------------
+# Paged engine (DESIGN.md §14): parity vs the dense slot reference,
+# admission/QoS policy, and buffer-release regression
+# ---------------------------------------------------------------------------
+from repro.serve.engine import (AdmissionError, AdmissionPolicy, PagedEngine,
+                                QoSClass)
+
+
+def _drive_pair(model, params, prompts, max_new, *, max_len=48, slots=2,
+                **paged_kw):
+    """Run the same workload through the dense and paged engines; returns
+    (dense outputs, paged outputs, paged engine)."""
+    outs = []
+    paged = None
+    for make in (lambda: SlotEngine(model, params, slots=slots,
+                                    max_len=max_len),
+                 lambda: PagedEngine(model, params, slots=slots,
+                                     max_len=max_len, **paged_kw)):
+        eng = make()
+        sched = StepScheduler(eng, seed=3)
+        futs = [sched.submit(list(p), max_new=n)
+                for p, n in zip(prompts, max_new)]
+        sched.drain()
+        outs.append([f.result(timeout=60) for f in futs])
+        if isinstance(eng, PagedEngine):
+            paged = eng
+    return outs[0], outs[1], paged
+
+
+def test_paged_whole_prompt_bit_parity(danube):
+    """chunk_tokens=0 reuses the dense engine's exact prefill program, so
+    greedy outputs are bit-identical — including decode past the SWA ring
+    wrap (prompt 30 + 14 > window 32)."""
+    cfg, model, params = danube
+    prompts = [[3, 1, 4, 1, 5], list(range(1, 31)), [9, 9, 8], [2] * 12]
+    dense, paged, eng = _drive_pair(model, params, prompts, [3, 14, 6, 4],
+                                    block_size=8, chunk_tokens=0)
+    assert dense == paged
+    eng.pool.check()
+    assert eng.pool.live_blocks() == 0 and eng.pool.reserved == 0
+
+
+def test_paged_whole_prompt_bit_parity_lane_state(mamba):
+    """Mamba lanes carry O(1) state (no seq axis): the paged engine still
+    serves them (admission accounting only) with bit-identical outputs."""
+    cfg, model, params = mamba
+    prompts = [[1, 2, 3], [4, 5, 6, 7, 8, 9, 10], [11, 12, 13]]
+    dense, paged, eng = _drive_pair(model, params, prompts, [4, 6, 2],
+                                    max_len=24, block_size=8)
+    assert dense == paged
+    eng.pool.check()
+
+
+def test_paged_chunked_prefill_matches_dense(danube):
+    """Greedy outputs across chunked-prefill boundaries (prompt 30, chunk
+    16, block 8) equal the dense engine's, and admission really was
+    chunked (multiple prefill iterations per long prompt)."""
+    cfg, model, params = danube
+    assert model.supports_chunked_prefill()
+    prompts = [list(range(1, 31)), [7, 7, 7], list(range(40, 58))]
+    dense, paged, eng = _drive_pair(model, params, prompts, [6, 4, 6],
+                                    block_size=8, chunk_tokens=16)
+    assert dense == paged
+    eng.pool.check()
+
+
+def test_paged_shared_prefix_reuses_blocks_and_forks_on_write(danube):
+    """A second request arriving once the first is decoding reuses its
+    registered 24-token prefix chain (prefix hits); the SWA ring wrap then
+    writes into a shared block while both lanes are live, forcing a COW
+    fork.  Outputs still match the dense engine and every block returns at
+    drain."""
+    cfg, model, params = danube
+    shared = list(range(100, 124))                 # exactly 3 blocks of 8
+    prompts = [shared + [1, 2, 3, 4, 5], shared + [9, 8, 7, 6, 5, 4]]
+
+    ref = StepScheduler(SlotEngine(model, params, slots=2, max_len=48),
+                        seed=3)
+    refs = [ref.submit(list(p), max_new=14) for p in prompts]
+    ref.drain()
+    dense = [f.result(timeout=60) for f in refs]
+
+    eng = PagedEngine(model, params, slots=2, max_len=48, block_size=8,
+                      chunk_tokens=16)
+    sched = StepScheduler(eng, seed=3)
+    f1 = sched.submit(prompts[0], max_new=14)
+    while sched.active() == 0 or any(
+            l is not None and l.prefilling for l in sched._lanes):
+        sched.step()                               # finish req 1's prefill
+    f2 = sched.submit(prompts[1], max_new=14)      # arrives mid-decode
+    sched.drain()
+    assert [f1.result(timeout=60), f2.result(timeout=60)] == dense
+    st = eng.stats()
+    assert st["prefix_hits"] >= 3                  # chain reused at admit
+    assert st["forks"] >= 1                        # COW on the wrap write
+    eng.pool.check()
+    assert eng.pool.live_blocks() == 0 and eng.pool.reserved == 0
+
+
+def test_paged_admission_depth_cap_rejects(danube):
+    cfg, model, params = danube
+    eng = PagedEngine(model, params, slots=1, max_len=48, block_size=8)
+    pol = AdmissionPolicy(classes={"bulk": QoSClass(max_depth=1)})
+    sched = StepScheduler(eng, policy=pol)
+    keep = sched.submit([1, 2, 3], max_new=2, qos="bulk")
+    with pytest.raises(AdmissionError, match="queue is full"):
+        sched.submit([4, 5, 6], max_new=2, qos="bulk")
+    # other classes are unaffected by the bulk cap
+    other = sched.submit([4, 5, 6], max_new=2)
+    sched.drain()
+    assert len(keep.result(timeout=60)) == 2
+    assert len(other.result(timeout=60)) == 2
+    assert sched.rejected == 1
+
+
+def test_paged_admission_max_delay_expires_queued(danube):
+    """A queued request older than its class max_delay fails with
+    AdmissionError at the next step instead of waiting forever."""
+    cfg, model, params = danube
+    eng = PagedEngine(model, params, slots=1, max_len=48, block_size=8)
+    pol = AdmissionPolicy(classes={"rt": QoSClass(max_delay=0.0)})
+    sched = StepScheduler(eng, policy=pol)
+    doomed = sched.submit([1, 2, 3], max_new=4, qos="rt")
+    time.sleep(0.01)
+    sched.drain()
+    with pytest.raises(AdmissionError, match="waited"):
+        doomed.result(timeout=60)
+    assert sched.expired == 1
+    ok = sched.submit([1, 2, 3], max_new=2)        # engine still serves
+    sched.drain()
+    assert len(ok.result(timeout=60)) == 2
+
+
+def test_paged_watermark_defers_admission_until_blocks_free(danube):
+    """With a free-block watermark, a request that would dip the arena
+    below the floor waits in queue until a lane retires — then serves
+    normally (admission is deferred, not dropped)."""
+    cfg, model, params = danube
+    # capacity 13: each (prompt 8 + max_new 8) lane needs 2 blocks
+    eng = PagedEngine(model, params, slots=2, max_len=48, block_size=8,
+                      num_blocks=14)
+    sched = StepScheduler(eng, policy=AdmissionPolicy(watermark=0.77))
+    futs = [sched.submit([i] * 8, max_new=8) for i in range(3)]
+    # floor = int(0.77 * 13) = 10 free blocks: the empty arena (headroom
+    # 13 - need 2 = 11) admits one lane, but with it holding a block and a
+    # reservation (headroom 9) the next request must wait
+    assert sched.step()
+    assert sched.active() == 1 and sched.pending() == 2
+    sched.drain()
+    for f in futs:
+        assert len(f.result(timeout=60)) == 8
+    eng.pool.check()
+
+
+def test_failed_batch_releases_cache_buffers(mamba):
+    """Regression (RequestQueue.flush whole-batch failure): when a failed
+    jitted call consumes only part of the donated cache tree, ensure_caches
+    must delete the surviving leaves before rebuilding — otherwise they
+    stay resident alongside the new pool until GC."""
+    cfg, model, params = mamba
+    sched = StepScheduler(SlotEngine(model, params, slots=2, max_len=24))
+    old_leaves = jax.tree.leaves(sched.engine.caches)
+    real_decode = sched.engine.decode_step
+
+    def half_dead_decode(*args, **kwargs):
+        # consume a strict subset of the donation, then fail
+        old_leaves[0].delete()
+        raise RuntimeError("injected partial donation failure")
+
+    sched.engine.decode_step = half_dead_decode
+    fut = sched.submit([1, 2, 3], max_new=4)
+    with pytest.raises(RuntimeError, match="injected"):
+        sched.step()
+    with pytest.raises(RuntimeError):
+        fut.result(timeout=60)
+    assert all(leaf.is_deleted() for leaf in old_leaves), \
+        "surviving donated buffers were stranded across the rebuild"
+    sched.engine.decode_step = real_decode
+    ok = sched.submit([1, 2, 3], max_new=3)
+    sched.drain()
+    assert len(ok.result(timeout=60)) == 3
+
+
+def test_paged_failed_decode_releases_blocks(danube):
+    """A decode failure on the paged path frees every failed lane's blocks
+    (no arena leak) and later submissions serve from a rebuilt arena."""
+    cfg, model, params = danube
+    eng = PagedEngine(model, params, slots=2, max_len=48, block_size=8)
+    sched = StepScheduler(eng)
+    real_decode = eng.decode_step
+
+    def exploding_decode(*args, **kwargs):
+        for leaf in jax.tree.leaves(eng.paged):
+            leaf.delete()
+        raise RuntimeError("injected paged decode failure")
+
+    eng.decode_step = exploding_decode
+    fut = sched.submit([1, 2, 3, 4, 5, 6, 7, 8, 9], max_new=6)
+    with pytest.raises(RuntimeError, match="injected"):
+        sched.step()
+    with pytest.raises(RuntimeError):
+        fut.result(timeout=60)
+    eng.pool.check()
+    assert eng.pool.live_blocks() == 0 and eng.pool.reserved == 0
+    assert eng.pool.available() == eng.pool.capacity
+
+    eng.decode_step = real_decode
+    ok = sched.submit([1, 2, 3], max_new=4)
+    sched.drain()
+    ref = StepScheduler(SlotEngine(model, params, slots=2, max_len=48))
+    rf = ref.submit([1, 2, 3], max_new=4)
+    ref.drain()
+    assert ok.result(timeout=60) == rf.result(timeout=60)
