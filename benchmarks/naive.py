@@ -83,3 +83,50 @@ def conv1d_naive(x, w):
 def smmm_naive(a_dense, b):
     """Sparsity-oblivious: dense outer-product matmul of the sparse operand."""
     return jnp.sum(a_dense[:, :, None] * b[None, :, :], axis=1)
+
+
+@jax.jit
+def fft_naive(x):
+    """Frequency-serialized DFT: one O(n) reduction per output bin, no
+    Cooley–Tukey factorization (O(n^2) total)."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[-1]
+    t = jnp.arange(n, dtype=jnp.float32)
+
+    def body(k, out):
+        ang = -2.0 * jnp.pi * k.astype(jnp.float32) * t / n
+        re = jnp.sum(x * jnp.cos(ang), axis=-1)
+        im = jnp.sum(x * jnp.sin(ang), axis=-1)
+        return out.at[..., k].set(jax.lax.complex(re, im))
+    return jax.lax.fori_loop(0, n, body, jnp.zeros(x.shape, jnp.complex64))
+
+
+@jax.jit
+def sort_naive(x):
+    """Odd-even transposition sort: n data-oblivious compare-exchange
+    sweeps along the last axis (O(n^2) comparisons)."""
+    x = jnp.asarray(x)
+    n = x.shape[-1]
+    j = jnp.arange(n)
+
+    def sweep(i, v):
+        off = i % 2
+        left = (j - off) % 2 == 0            # j is the low side of its pair
+        partner = jnp.clip(jnp.where(left, j + 1, j - 1), 0, n - 1)
+        pv = jnp.take(v, partner, axis=-1)
+        out = jnp.where(left, jnp.minimum(v, pv), jnp.maximum(v, pv))
+        return jnp.where(partner == j, v, out)   # unpaired boundary: keep
+    return jax.lax.fori_loop(0, n, sweep, x)
+
+
+@jax.jit
+def hist_naive(x, bins: int = 64, lo: float = 0.0, hi: float = 1.0):
+    """Bin-serialized histogram: one full pass over the data per bin."""
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    width = (hi - lo) / bins
+    ids = jnp.clip(jnp.floor((x - lo) / width).astype(jnp.int32), 0, bins - 1)
+    valid = (x >= lo) & (x <= hi)
+
+    def body(k, out):
+        return out.at[k].set(jnp.sum(jnp.where((ids == k) & valid, 1.0, 0.0)))
+    return jax.lax.fori_loop(0, bins, body, jnp.zeros(bins, jnp.float32))

@@ -223,6 +223,11 @@ def _multiproc(smoke: bool = False):
     multiproc_main(smoke=smoke)
 
 
+def _train(smoke: bool = False):
+    from .train_scaling import main as train_main
+    train_main(smoke=smoke)
+
+
 #: name -> full-pass section runner, in execution order
 SECTIONS = {
     "tables": _paper_tables,
@@ -231,6 +236,7 @@ SECTIONS = {
     "graph": _graph,
     "collective": _collective,
     "multiproc": _multiproc,
+    "train": _train,
     "serve": _serve,
     "tuning": _tuning,
     "fusion": _fusion,
@@ -241,6 +247,7 @@ SECTIONS = {
 SMOKE_SECTIONS = {
     "collective": lambda: _collective(smoke=True),
     "multiproc": lambda: _multiproc(smoke=True),
+    "train": lambda: _train(smoke=True),
     "serve": lambda: _serve(smoke=True),
     "tuning": lambda: _tuning(smoke=True),
     "fusion": lambda: _fusion(smoke=True),

@@ -23,6 +23,8 @@ from repro.core import (MPIX_Claim, MPIX_Finalize, MPIX_Initialize, MPIX_Recv,
                         MPIX_Send, halo_session)
 from repro.core.portability import (KernelReport, time_fn)
 from repro.kernels.ewise import ewmd_ref, ewmm_ref
+from repro.kernels.fft import fft_ref
+from repro.kernels.sorthist import hist_ref, sort_ref
 from repro.kernels.jacobi import jacobi_step_ref
 from repro.kernels.conv1d import conv1d_ref
 from repro.kernels.matmul import mmm_ref
@@ -57,6 +59,9 @@ def _inputs(key) -> Dict[str, Tuple]:
         "JS": (a_dd, x, x),
         "1DCONV": (sig, taps),
         "SMMM": (sp, b),
+        "FFT": (sig[:8 * 1024].reshape(8, 1024),),
+        "SORT": (vec[:4096],),
+        "HIST": (jax.nn.sigmoid(vec),),
     }
 
 
@@ -69,6 +74,9 @@ _BASELINE: Dict[str, Callable] = {
     "JS": jax.jit(jacobi_step_ref),
     "1DCONV": jax.jit(conv1d_ref),
     "SMMM": jax.jit(smmm_ref),
+    "FFT": jax.jit(fft_ref),
+    "SORT": jax.jit(sort_ref),
+    "HIST": jax.jit(hist_ref),
 }
 
 _NAIVE: Dict[str, Callable] = {
@@ -80,6 +88,9 @@ _NAIVE: Dict[str, Callable] = {
     "JS": naive.jacobi_step_naive,
     "1DCONV": naive.conv1d_naive,
     "SMMM": naive.smmm_naive,
+    "FFT": naive.fft_naive,
+    "SORT": naive.sort_naive,
+    "HIST": naive.hist_naive,
 }
 
 

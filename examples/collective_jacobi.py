@@ -26,8 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (MPIX_CommSplit, MPIX_Finalize, MPIX_Initialize,
-                        MPIX_Wait, halo_dispatch, halo_graph)
+from repro import halo
 from repro.core.portability import portability_score
 
 N = 128
@@ -54,16 +53,16 @@ def serial_jacobi(a, b, d, iters, platform="xla"):
     x = jnp.zeros_like(b)
     res = jnp.float32(0)
     for _ in range(iters):
-        p = halo_dispatch("MVM", a, x, overrides=ov)
-        x_new = halo_dispatch(
+        p = halo.dispatch("MVM", a, x, overrides=ov)
+        x_new = halo.dispatch(
             "EWMD",
-            halo_dispatch("EWADD",
-                          halo_dispatch("EWSUB", b, p, overrides=ov),
-                          halo_dispatch("EWMM", d, x, overrides=ov),
+            halo.dispatch("EWADD",
+                          halo.dispatch("EWSUB", b, p, overrides=ov),
+                          halo.dispatch("EWMM", d, x, overrides=ov),
                           overrides=ov),
             d, overrides=ov)
-        e = halo_dispatch("EWSUB", x_new, x, overrides=ov)
-        res = halo_dispatch("VDP", e, e, overrides=ov)
+        e = halo.dispatch("EWSUB", x_new, x, overrides=ov)
+        res = halo.dispatch("VDP", e, e, overrides=ov)
         x = x_new
     return jax.block_until_ready(x), float(res)
 
@@ -99,7 +98,7 @@ def collective_jacobi_graph(comm, a, b, d, iters):
     B = comm.scatter(b)
     D = comm.scatter(d)
     X = comm.scatter(jnp.zeros_like(b))
-    with halo_graph(session=comm.session) as g:
+    with halo.graph(session=comm.session) as g:
         R = None
         for _ in range(iters):
             xs = comm.iallgather(X)
@@ -113,8 +112,8 @@ def collective_jacobi_graph(comm, a, b, d, iters):
             R = comm.iallreduce(S, op="sum")
             X = Xn
         out = comm.igather(X)
-    x = jax.block_until_ready(MPIX_Wait(out))
-    return g, x, float(MPIX_Wait(R[0]))
+    x = jax.block_until_ready(halo.wait(out))
+    return g, x, float(halo.wait(R[0]))
 
 
 def _time(fn, repeats=3):
@@ -128,9 +127,9 @@ def _time(fn, repeats=3):
 
 
 def main():
-    MPIX_Initialize()
+    halo.initialize()
     a, b, d = _problem(N)
-    comm = MPIX_CommSplit(list(GROUP))
+    comm = halo.comm_split(list(GROUP))
     print(f"device group: {comm} ({comm.size} member agents)")
 
     x_serial, res_serial = serial_jacobi(a, b, d, ITERS)
@@ -159,7 +158,7 @@ def main():
                     ("collective-eager", t_eager),
                     ("collective-graph", t_graph)]:
         print(f"{name},{t * 1e3:.1f},{portability_score(t_base, t):.3f}")
-    MPIX_Finalize()
+    halo.finalize()
     print("OK")
 
 

@@ -1,9 +1,10 @@
 """Quickstart: the paper's hardware-agnostic host-code template (Table V).
 
 The same host code — claim by alias, send a compute-object, receive the
-result — runs all eight HPC subroutines with zero hardware-specific logic.
-The runtime agent routes each invocation to the best registered kernel
-(pallas > xla > jnp fail-safe) based on Table-II attributes and feasibility.
+result — runs the full HPC subroutine suite with zero hardware-specific
+logic.  The runtime agent routes each invocation to the best registered
+kernel (pallas > xla > jnp fail-safe) based on Table-II attributes and
+feasibility.  Everything comes through the unified ``repro.halo`` facade.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,14 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (MPIX_Claim, MPIX_Finalize, MPIX_Initialize,
-                        MPIX_ISend, MPIX_Recv, MPIX_Send, MPIX_Waitall,
-                        halo_session)
+from repro import halo
 from repro.kernels.spmm import dense_to_bell, random_block_sparse
 
 
 def main():
-    MPIX_Initialize()                                   # start the session
+    halo.initialize()                                   # start the session
     key = jax.random.PRNGKey(0)
     k1, k2 = jax.random.split(key)
     n = 512
@@ -40,13 +39,17 @@ def main():
         "JS": (a_dd, jnp.zeros(n), x),
         "1DCONV": (sig, taps),
         "SMMM": (vals, idx, b),
+        # data-reorganization + spectral class (Table II rows 9–11)
+        "FFT": (sig[:1024],),
+        "SORT": (x,),
+        "HIST": (jax.nn.sigmoid(sig),),
     }
 
     # ---- the paper's template: unified control flow for every kernel ------
     for alias, args in jobs.items():
-        cr = MPIX_Claim(alias)                          # claim a child rank
-        MPIX_Send(args, cr)                             # marshal compute-obj
-        out = MPIX_Recv(cr)                             # retrieve result
+        cr = halo.claim(alias)                          # claim a child rank
+        halo.send(args, cr)                             # marshal compute-obj
+        out = halo.recv(cr)                             # retrieve result
         out = jax.tree.leaves(out)[0]
         print(f"{alias:8s} -> shape {np.shape(out)} "
               f"finite={bool(jnp.all(jnp.isfinite(jnp.asarray(out))))}")
@@ -54,19 +57,19 @@ def main():
     # ---- non-blocking variant: submit everything, then wait (DESIGN.md §4)
     reqs = []
     for alias, args in jobs.items():
-        cr = MPIX_Claim(alias)
-        # mailbox=False: we consume through the handles, never via MPIX_Recv
-        reqs.append(MPIX_ISend(args, cr, mailbox=False))
-    outs = MPIX_Waitall(reqs)
+        cr = halo.claim(alias)
+        # mailbox=False: we consume through the handles, never via halo.recv
+        reqs.append(halo.isend(args, cr, mailbox=False))
+    outs = halo.waitall(reqs)
     ok = all(bool(jnp.all(jnp.isfinite(jnp.asarray(l))))
              for o in outs for l in jax.tree.leaves(o))
     print(f"\nasync burst: {len(outs)} subroutines in flight at once, "
           f"all finite={ok}")
 
-    t1 = halo_session().t1_seconds_per_call
+    t1 = halo.session().t1_seconds_per_call
     print(f"HALO overhead T1 per call: {t1 * 1e6:.1f} us "
           f"(paper: ~1.9 us on ZeroMQ IPC)")
-    MPIX_Finalize()
+    halo.finalize()
 
 
 if __name__ == "__main__":

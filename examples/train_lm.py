@@ -5,7 +5,12 @@ atomic checkpoints → heartbeat journal → straggler policy.  Defaults are
 sized for this CPU container (--preset small ≈ 2 minutes); ``--preset 100m``
 is the deliverable-scale run (~124M params, a few hundred steps).
 
+``--comm N`` trains the same model data-parallel over an N-member C²MPI
+device group through the ``repro.halo`` facade (bit-identical loss curve at
+equal global batch; DESIGN.md §15).
+
 Run:  PYTHONPATH=src python examples/train_lm.py --preset small --steps 60
+      PYTHONPATH=src python examples/train_lm.py --preset small --comm 2
       PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
 """
 import argparse
@@ -14,11 +19,13 @@ import logging
 import jax
 import jax.numpy as jnp
 
+from repro import halo
 from repro.configs.base import ArchConfig, AttnConfig, BlockSpec, Stage
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.train import (CheckpointManager, HeartbeatJournal, TrainHyper,
                          Trainer)
+from repro.train.step_kernels import register_arch
 
 
 def danube_100m() -> ArchConfig:
@@ -47,6 +54,8 @@ def main():
     ap.add_argument("--seq-len", type=int, default=None)
     ap.add_argument("--batch", type=int, default=None)
     ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--comm", type=int, default=0, metavar="N",
+                    help="data-parallel over an N-member device group")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm_ckpt")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(message)s")
@@ -67,12 +76,23 @@ def main():
     print(f"model {cfg.name}: {n_params / 1e6:.1f}M params, "
           f"seq={seq} batch={batch} steps={args.steps}")
 
+    comm = None
+    microbatches = 1
+    if args.comm:
+        # the facade builds the device group; a custom ArchConfig becomes a
+        # dispatchable arch id via register_arch (DESIGN.md §15)
+        register_arch(cfg.name, cfg)
+        subs = halo.comm_split().platforms
+        comm = halo.comm_split(
+            [subs[i % len(subs)] for i in range(args.comm)])
+        microbatches = args.comm
     hp = TrainHyper(base_lr=lr, warmup_steps=max(5, args.steps // 10),
-                    total_steps=args.steps)
+                    total_steps=args.steps, microbatches=microbatches)
     trainer = Trainer(
         model=model, hp=hp,
         ckpt=CheckpointManager(args.ckpt_dir, keep=2),
         heartbeat=HeartbeatJournal(f"{args.ckpt_dir}/heartbeat.jsonl"),
+        comm=comm, arch=cfg.name if comm is not None else None,
         log_every=max(1, args.steps // 20), ckpt_every=max(10, args.steps // 4))
     pipe = SyntheticLM(cfg, seq_len=seq, global_batch=batch)
 

@@ -44,7 +44,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 
 from .compute_object import BufferHandle, as_compute_object
-from .envutil import env_flag, env_float
+from .config import halo_config
 from .manifest import Manifest, default_manifest
 from .registry import (GLOBAL_REGISTRY, KernelRecord, KernelRegistry,
                        SelectionError)
@@ -250,14 +250,16 @@ class HealthConfig:
 
     @classmethod
     def from_env(cls, **overrides: Any) -> "HealthConfig":
-        """Build from ``HALO_HEARTBEAT_TIMEOUT`` / ``HALO_HEALTH_POLL`` /
-        ``HALO_STRAGGLER_MULTIPLE`` / ``HALO_STRAGGLER_MIN``, explicit
-        keyword overrides winning (tests strip all ``HALO_*`` vars).
-        Malformed values warn and fall back (envutil semantics)."""
-        cfg = {"heartbeat_timeout": env_float("HALO_HEARTBEAT_TIMEOUT", 30.0),
-               "poll_interval": env_float("HALO_HEALTH_POLL", None),
-               "straggler_multiple": env_float("HALO_STRAGGLER_MULTIPLE", 4.0),
-               "straggler_min_s": env_float("HALO_STRAGGLER_MIN", 0.25)}
+        """Build from the consolidated :func:`repro.core.config.halo_config`
+        (``HALO_HEARTBEAT_TIMEOUT`` / ``HALO_HEALTH_POLL`` /
+        ``HALO_STRAGGLER_MULTIPLE`` / ``HALO_STRAGGLER_MIN`` plus
+        ``halo.configure(...)`` overrides), explicit keyword overrides
+        winning (tests strip all ``HALO_*`` vars)."""
+        hc = halo_config()
+        cfg = {"heartbeat_timeout": hc.heartbeat_timeout,
+               "poll_interval": hc.health_poll,
+               "straggler_multiple": hc.straggler_multiple,
+               "straggler_min_s": hc.straggler_min_s}
         cfg.update(overrides)
         return cls(**cfg)
 
@@ -756,7 +758,7 @@ class RuntimeAgent:
         self.health: Optional[HealthMonitor] = None
         if health is not None:
             self.enable_health_monitor(monitor=health, start=False)
-        elif env_flag("HALO_HEALTH_MONITOR"):
+        elif halo_config().health_monitor:
             self.enable_health_monitor()
 
     # -- agent interoperability (plug-and-play, §V-A5) -------------------------

@@ -1,0 +1,166 @@
+"""Typed runtime configuration: every ``HALO_*`` knob in one place.
+
+Historically each subsystem read its own environment variables at its own
+call sites (``HALO_FUSION`` in :mod:`repro.core.fusion`,
+``HALO_HEARTBEAT_TIMEOUT`` in :mod:`repro.core.agents`, the wire-cache trio
+in :mod:`repro.distributed.remote`, …).  That worked, but there was no
+single place to *see* the knob surface, no way to override one
+programmatically without mutating ``os.environ``, and no typing.
+
+:class:`HaloConfig` is the consolidated view: one frozen dataclass whose
+fields document every knob and its default.  :func:`halo_config` builds the
+effective config at each read — **override > environment > default** — so
+the long-standing env-var semantics (including hardened parsing via
+:mod:`repro.core.envutil`) are unchanged, and :func:`configure` layers
+process-local typed overrides on top:
+
+    from repro import halo
+    halo.configure(fusion=False, heartbeat_timeout=5.0)
+
+Overrides are deliberately **not** written back into ``os.environ``:
+spawned remote workers (DESIGN.md §13) inherit the parent *environment*,
+so env vars stay authoritative for child processes — a host-side
+``configure(...)`` tweaks only the host session.  Use real env vars when a
+knob must propagate to workers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, Optional
+
+from .envutil import env_flag, env_float, env_int, env_path
+
+__all__ = ["HaloConfig", "configure", "halo_config", "reset_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloConfig:
+    """The full ``HALO_*`` knob surface as typed fields with defaults.
+
+    Each field maps 1:1 onto the env var of the same upper-snake name with
+    the ``HALO_`` prefix (``fusion`` ↔ ``HALO_FUSION``).  Field values in a
+    :func:`halo_config` snapshot already reflect the env and any
+    :func:`configure` overrides.
+    """
+
+    # -- graph fusion / compiled-graph cache (DESIGN.md §12) ---------------
+    #: master switch for the graph-fusion pass inside ``compile_graph``
+    fusion: bool = True
+    #: fuse matmul-terminated chains into one contracted kernel
+    fusion_contract: bool = False
+    #: donate dead intermediate buffers to fused kernels
+    fusion_donate: bool = False
+    #: LRU capacity of the per-session compiled-graph cache
+    graph_cache: int = 16
+
+    # -- liveness / health monitoring (DESIGN.md §11) ----------------------
+    #: start the background HealthMonitor sweeper with every session
+    health_monitor: bool = False
+    #: seconds without a heartbeat before an agent is declared DEAD
+    heartbeat_timeout: float = 30.0
+    #: sweeper poll interval (None → derived from ``heartbeat_timeout``)
+    health_poll: Optional[float] = None
+    #: in-flight call is a straggler at ``multiple`` × the median latency
+    straggler_multiple: float = 4.0
+    #: never flag a straggler under this many seconds in flight
+    straggler_min_s: float = 0.25
+
+    # -- autotuning (DESIGN.md §9) -----------------------------------------
+    #: path of the persisted scheduler latency table (None → memory only)
+    autotune_cache: Optional[str] = None
+    #: path of the persisted TuningDB (None → autotune-cache sibling)
+    tuning_db: Optional[str] = None
+
+    # -- multi-process workers (DESIGN.md §13) -----------------------------
+    #: digest-dedupe repeated large arrays on the worker wire protocol
+    wire_cache: bool = True
+    #: smallest array (bytes) eligible for wire-cache pinning
+    wire_cache_min: int = 4096
+    #: per-worker pinned-array budget in MiB
+    wire_cache_mb: int = 256
+    #: client-side timeout (s) for one remote execution (None → no limit)
+    remote_timeout: Optional[float] = None
+    #: seconds to wait for a spawned worker's READY handshake
+    worker_timeout: float = 120.0
+    #: emulated host devices per spawned worker (XLA_FLAGS fan-out)
+    worker_devices: int = 1
+    #: worker-process log level name
+    worker_log: str = "WARNING"
+
+
+_FIELDS = {f.name: f for f in dataclasses.fields(HaloConfig)}
+
+#: env readers per field type; path-like strings use env_path
+_READERS = {
+    "fusion": lambda d: env_flag("HALO_FUSION", d),
+    "fusion_contract": lambda d: env_flag("HALO_FUSION_CONTRACT", d),
+    "fusion_donate": lambda d: env_flag("HALO_FUSION_DONATE", d),
+    "graph_cache": lambda d: env_int("HALO_GRAPH_CACHE", d),
+    "health_monitor": lambda d: env_flag("HALO_HEALTH_MONITOR", d),
+    "heartbeat_timeout": lambda d: env_float("HALO_HEARTBEAT_TIMEOUT", d),
+    "health_poll": lambda d: env_float("HALO_HEALTH_POLL", d),
+    "straggler_multiple": lambda d: env_float("HALO_STRAGGLER_MULTIPLE", d),
+    "straggler_min_s": lambda d: env_float("HALO_STRAGGLER_MIN", d),
+    "autotune_cache": lambda d: env_path("HALO_AUTOTUNE_CACHE", d),
+    "tuning_db": lambda d: env_path("HALO_TUNING_DB", d),
+    "wire_cache": lambda d: env_flag("HALO_WIRE_CACHE", d),
+    "wire_cache_min": lambda d: env_int("HALO_WIRE_CACHE_MIN", d),
+    "wire_cache_mb": lambda d: env_int("HALO_WIRE_CACHE_MB", d),
+    "remote_timeout": lambda d: env_float("HALO_REMOTE_TIMEOUT", d),
+    "worker_timeout": lambda d: env_float("HALO_WORKER_TIMEOUT", d),
+    "worker_devices": lambda d: env_int("HALO_WORKER_DEVICES", d),
+    "worker_log": lambda d: env_path("HALO_WORKER_LOG", d),
+}
+
+assert set(_READERS) == set(_FIELDS)
+
+_lock = threading.Lock()
+_overrides: Dict[str, Any] = {}
+
+
+def halo_config() -> HaloConfig:
+    """The effective config *right now*: override > env > default.
+
+    Rebuilt on every call (a handful of env reads), so tests that
+    monkeypatch the environment and long-lived sessions both observe
+    changes immediately — exactly like the old per-site env reads did."""
+    with _lock:
+        ov = dict(_overrides)
+    values = {}
+    for name, field in _FIELDS.items():
+        if name in ov:
+            values[name] = ov[name]
+        else:
+            values[name] = _READERS[name](field.default)
+    return HaloConfig(**values)
+
+
+def configure(**overrides: Any) -> HaloConfig:
+    """Set process-local typed overrides for ``HALO_*`` knobs.
+
+    Keyword names are :class:`HaloConfig` field names; unknown names raise
+    ``TypeError`` (catching typos that a raw ``os.environ`` write would
+    silently ignore).  Passing ``None`` for a field *clears* its override
+    (back to env/default).  Returns the new effective config.
+
+    Overrides never touch ``os.environ`` — env vars remain authoritative
+    for spawned child workers."""
+    unknown = [k for k in overrides if k not in _FIELDS]
+    if unknown:
+        raise TypeError(
+            f"unknown HaloConfig field(s) {unknown}; "
+            f"have {sorted(_FIELDS)}")
+    with _lock:
+        for k, v in overrides.items():
+            if v is None:
+                _overrides.pop(k, None)
+            else:
+                _overrides[k] = v
+    return halo_config()
+
+
+def reset_config() -> None:
+    """Drop every :func:`configure` override (tests / fresh sessions)."""
+    with _lock:
+        _overrides.clear()

@@ -49,7 +49,7 @@ import numpy as np
 
 from .agents import HaloFuture, RuntimeAgent
 from .compute_object import ComputeObject, as_compute_object
-from .envutil import env_flag, env_int
+from .config import halo_config
 from .registry import KernelAttributes, KernelRecord, SelectionError
 from .scheduler import abstract_signature
 
@@ -378,14 +378,14 @@ def _ensure_fused_records(session: RuntimeAgent, alias: str,
         return existing
     from ..kernels.fused import ewise_chain, ewise_chain_space, make_composed
 
-    contract = env_flag("HALO_FUSION_CONTRACT")
+    contract = halo_config().fusion_contract
     cost = _sum_of_parts_cost(session, members)
     argmaps = [tuple("acc" if s == CHAIN else s for s in m.argmap)
                for m in members]
     kwargs_list = [dict(m.kwargs) for m in members]
     xla_recs = [_member_record(registry, m.alias, "xla") for m in members]
     if contract:
-        donate_on = env_flag("HALO_FUSION_DONATE")
+        donate_on = halo_config().fusion_donate
         composed = make_composed([r.fn for r in xla_recs], argmaps,
                                  kwargs_list,
                                  donate=tuple(donate) if donate_on else (),
@@ -841,7 +841,7 @@ def compile_graph(g, fuse: Optional[bool] = None) -> CompiledGraph:
                 f"node {node.uid} ({node.alias}) depends on a future from "
                 f"outside this graph; compiled replay requires a closed DAG")
     if fuse is None:
-        fuse = env_flag("HALO_FUSION", default=True)
+        fuse = halo_config().fusion
 
     slots, slot_idx = _collect_inputs(g)
     key = _graph_key(g, fuse, slot_idx)
@@ -946,7 +946,7 @@ def compile_graph(g, fuse: Optional[bool] = None) -> CompiledGraph:
              "%d intermediate(s) eliminated)", key[:8], len(g.nodes),
              len(templates), len(chains), stats["intermediates_eliminated"])
     cache[key] = cg
-    max_entries = env_int("HALO_GRAPH_CACHE", 16)
+    max_entries = halo_config().graph_cache
     while len(cache) > max(1, max_entries):
         cache.popitem(last=False)
     return cg

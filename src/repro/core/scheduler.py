@@ -133,9 +133,9 @@ class CostModelScheduler:
         """Process-default scheduler: EMA table persistent iff
         ``HALO_AUTOTUNE_CACHE`` is set; tuning DB from ``HALO_TUNING_DB``
         (or the cache path's ``.tuning.json`` sibling)."""
-        from .envutil import env_path
+        from .config import halo_config
         from .tuning import TuningDB       # deferred: tuning imports us
-        return cls(cache_path=env_path("HALO_AUTOTUNE_CACHE"),
+        return cls(cache_path=halo_config().autotune_cache,
                    tuning_db=TuningDB.default())
 
     # -- measurement feedback ------------------------------------------------

@@ -178,10 +178,11 @@ class TuningDB:
     def default(cls) -> "TuningDB":
         """Process-default DB: ``HALO_TUNING_DB`` if set, else a
         ``.tuning.json`` sibling of ``HALO_AUTOTUNE_CACHE``, else memory."""
-        from .envutil import env_path
-        path = env_path("HALO_TUNING_DB")
+        from .config import halo_config
+        hc = halo_config()
+        path = hc.tuning_db
         if not path:
-            cache = env_path("HALO_AUTOTUNE_CACHE")
+            cache = hc.autotune_cache
             if cache:
                 path = str(Path(cache).with_suffix(".tuning.json"))
         return cls(path or None)

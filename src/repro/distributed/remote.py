@@ -60,7 +60,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.agents import HaloFuture, VirtualizationAgent
-from ..core.envutil import env_flag, env_float, env_int
+from ..core.config import halo_config
 from ..core.registry import KernelRecord, clone_record
 
 log = logging.getLogger("repro.halo.remote")
@@ -165,9 +165,10 @@ class _WireCache:
     frame's new digests after the send succeeds or fails."""
 
     def __init__(self) -> None:
-        self.enabled = env_flag("HALO_WIRE_CACHE", True)
-        self.min_bytes = env_int("HALO_WIRE_CACHE_MIN", 4096)
-        self.cap_bytes = env_int("HALO_WIRE_CACHE_MB", 256) * (1 << 20)
+        hc = halo_config()
+        self.enabled = hc.wire_cache
+        self.min_bytes = hc.wire_cache_min
+        self.cap_bytes = hc.wire_cache_mb * (1 << 20)
         self.known: set = set()
         self.pinned_bytes = 0
         self.bytes_sent = 0                 # every frame byte written
@@ -510,7 +511,7 @@ class RemoteAgent(VirtualizationAgent):
         self._session = None
         self._clones: List[KernelRecord] = []
         self._applied_quarantine: set = set()
-        self._timeout = env_float("HALO_REMOTE_TIMEOUT", None)
+        self._timeout = halo_config().remote_timeout
 
     # -- session wiring ------------------------------------------------------
     def attach(self, session) -> "RemoteAgent":
@@ -716,9 +717,10 @@ def spawn_worker(name: str = "w0", devices: Optional[int] = None,
     details overridden by ``env``.  Blocks until the worker's hello frame
     (default budget ``HALO_WORKER_TIMEOUT``, 120 s: the child pays a full
     jax import)."""
-    devices = devices if devices is not None else env_int("HALO_WORKER_DEVICES", 1)
+    devices = devices if devices is not None \
+        else halo_config().worker_devices
     timeout = timeout if timeout is not None \
-        else env_float("HALO_WORKER_TIMEOUT", 120.0)
+        else halo_config().worker_timeout
     listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     listener.bind(("127.0.0.1", 0))
     listener.listen(1)

@@ -1,0 +1,117 @@
+"""``repro.halo`` — the unified HALO public API (one import, whole paper).
+
+Everything a host application needs, under short stable names::
+
+    from repro import halo
+
+    halo.initialize()
+    out = halo.dispatch("MMM", a, b)               # hardware-agnostic compute
+    comm = halo.comm_split(["xla", "pallas"])      # C²MPI device group
+    parts = halo.scatter(x, comm)                  # collective verbs
+    with halo.graph(launch=False) as g:            # capture → compile → replay
+        comm.imap("EWADD", list(zip(parts, parts)))
+    state, history = halo.train("h2o-danube-1.8b", steps=20, reduced=True,
+                                comm=comm)         # data-parallel training
+    halo.finalize()
+
+The module is a *facade*: every name re-exports (or thinly wraps) the same
+object the subsystem modules define, so ``halo.dispatch is
+repro.core.c2mpi.halo_dispatch`` — adopting the facade never forks behavior.
+The MPIX_* spellings of the paper's Tables III–V remain available from
+:mod:`repro.core.c2mpi` for hosts that prefer MPI idiom.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+# -- session + dispatch (paper §IV) -----------------------------------------
+from .core.c2mpi import (MPIX_Allgather as allgather,
+                         MPIX_Allreduce as allreduce, MPIX_Bcast as bcast,
+                         MPIX_Claim as claim, MPIX_Finalize as finalize,
+                         MPIX_Gather as gather, MPIX_IAllgather as iallgather,
+                         MPIX_IAllreduce as iallreduce, MPIX_IBcast as ibcast,
+                         MPIX_IGather as igather, MPIX_Initialize as initialize,
+                         MPIX_IRecv as irecv, MPIX_IReduce as ireduce,
+                         MPIX_IScatter as iscatter, MPIX_ISend as isend,
+                         MPIX_Recv as recv, MPIX_Reduce as reduce,
+                         MPIX_Scatter as scatter, MPIX_Send as send,
+                         MPIX_Test as test, MPIX_Wait as wait,
+                         MPIX_Waitall as waitall, halo_dispatch as dispatch,
+                         halo_session as session)
+from .core.agents import HaloFuture
+from .core.collective import HaloComm
+from .core.collective import comm_split as _comm_split
+from .core.config import HaloConfig, configure
+from .core.config import halo_config as config
+from .core.fusion import CompiledGraph, compile_graph
+from .core.graph import ExecutionGraph
+from .core.graph import halo_graph as graph
+from .distributed.remote import spawn_worker
+
+__all__ = [
+    # session lifecycle + dispatch
+    "initialize", "finalize", "session", "dispatch", "claim", "send",
+    "recv", "isend", "irecv", "wait", "waitall", "test", "HaloFuture",
+    # device groups + collective verbs (§10)
+    "HaloComm", "comm_split", "bcast", "ibcast", "scatter", "iscatter",
+    "gather", "igather", "allgather", "iallgather", "reduce", "ireduce",
+    "allreduce", "iallreduce",
+    # graph capture / compiled replay (§8, §12)
+    "graph", "compile_graph", "ExecutionGraph", "CompiledGraph",
+    # configuration (typed env knobs)
+    "HaloConfig", "configure", "config",
+    # multi-process workers (§13)
+    "spawn_worker",
+    # training (§15)
+    "train",
+]
+
+
+def comm_split(platforms: Optional[Sequence[str]] = None,
+               name: Optional[str] = None) -> HaloComm:
+    """Build a C²MPI device group over the ambient session's agents
+    (:func:`repro.core.collective.comm_split`; initializes the session on
+    first use)."""
+    initialize()
+    return _comm_split(session(), platforms, name=name)
+
+
+def train(arch: str, *, steps: int = 20, seq_len: int = 128, batch: int = 8,
+          comm: Any = None, reduced: bool = False, lr: float = 3e-3,
+          microbatches: Optional[int] = None, seed: int = 0,
+          log_every: int = 10) -> Tuple[Any, list]:
+    """One-call LM training on synthetic data: single-agent when ``comm`` is
+    None, data-parallel over a device group otherwise (``comm`` may be a
+    :class:`HaloComm` or a member count).  Returns ``(TrainState,
+    [(step, loss), ...])`` — DESIGN.md §15."""
+    import jax
+    import jax.numpy as jnp
+
+    from .configs import get_config
+    from .data.pipeline import SyntheticLM
+    from .models import build_model
+    from .train.trainer import TrainHyper, Trainer
+
+    if isinstance(comm, int):
+        subs = comm_split().platforms
+        comm = comm_split([subs[i % len(subs)] for i in range(comm)])
+    n = comm.size if comm is not None else 1
+    m = microbatches or n
+    if m % n:
+        raise ValueError(f"microbatches ({m}) must be a multiple of the "
+                         f"member count ({n})")
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    hp = TrainHyper(base_lr=lr, warmup_steps=max(1, steps // 10),
+                    total_steps=steps, microbatches=m)
+    trainer = Trainer(model=model, hp=hp, comm=comm, arch=arch,
+                      arch_reduced=reduced, log_every=log_every)
+    pipe = SyntheticLM(cfg, seq_len=seq_len, global_batch=batch, seed=seed)
+
+    def data_fn(step):
+        return {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
+
+    state = trainer.init_state(jax.random.PRNGKey(seed))
+    return trainer.run(state, data_fn, steps)

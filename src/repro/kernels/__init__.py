@@ -88,6 +88,10 @@ def register_all(registry=None) -> None:
     from .rmsnorm.ref import rmsnorm_xla
     from .ssd import ssd_chunked, ssd_decode_step, ssd_ref
     from .moe_ffn import grouped_ffn, grouped_ffn_ref
+    from .fft import fft, fft_ref, fft_xla
+    from .fft.ops import fft_space
+    from .sorthist import hist, hist_ref, sort, sort_ref
+    from .sorthist.ops import hist_space, sort_space
 
     def mmm_cost(a, b, **kw):
         m, k = a.shape
@@ -98,6 +102,16 @@ def register_all(registry=None) -> None:
     # (the chunked mea formulation tiles its q/kv block loop like the
     # pallas kernel does, so it shares the FLASH_ATTN space)
     xla_spaces = {"FLASH_ATTN": fa_space}
+
+    def _fft_ok(x, **kw):
+        # DFT-by-matmul: twiddle planes are n×n, so cap the transform
+        # length even on TPU (longer signals go to the xla jnp.fft record)
+        n = getattr(x, "shape", (0,))[-1]
+        return _floaty(x) and n <= 4096 and small_enough_off_tpu(x)
+
+    # per-alias pallas feasibility overrides (default: _pallas_ok, or
+    # _ewise_ok for the EW* family)
+    pallas_ok = {"FFT": _fft_ok}
 
     table = [
         # (alias, ref_fn, xla_fn, pallas_fn, cost, pallas_space)
@@ -114,14 +128,19 @@ def register_all(registry=None) -> None:
         ("RMSNORM", rmsnorm_ref, rmsnorm_xla, rmsnorm, None, rmsnorm_space),
         ("FLASH_ATTN", attention_ref, mea_attention, flash_attention, None,
          fa_space),
+        # data-reorganization + spectral class (paper Table II rows 9–11)
+        ("FFT", fft_ref, fft_xla, fft, None, fft_space),
+        ("SORT", sort_ref, sort_ref, sort, None, sort_space),
+        ("HIST", hist_ref, hist_ref, hist, None, hist_space),
     ]
     for alias, ref_fn, xla_fn, pallas_fn, cost, space in table:
         registry.register(_rec(alias, ref_fn, "jnp", 0, failsafe=True))
         registry.register(_rec(alias, xla_fn, "xla", 10, cost=cost,
                                space=xla_spaces.get(alias)))
         registry.register(_rec(alias, pallas_fn, "pallas", 20,
-                               supports=_ewise_ok if alias.startswith("EW")
-                               else _pallas_ok,
+                               supports=pallas_ok.get(
+                                   alias, _ewise_ok if alias.startswith("EW")
+                                   else _pallas_ok),
                                cost=cost, space=space))
 
     # SMMM: the xla variant is a dense-gather einsum over the blocked-ELL
@@ -167,6 +186,21 @@ def register_all(registry=None) -> None:
     registry.register(_rec("CONCAT", concat_ref, "jnp", 0, failsafe=True))
     registry.register(_rec("CONCAT", concat_blocks, "xla", 10))
     registry.register(_rec("CONCAT", concat_blocks, "pallas", 20))
+
+    # Training-step builtins (DESIGN.md §15): data-parallel device groups
+    # dispatch the forward/backward and the optimizer update as registry
+    # aliases, so member ranks — including remote workers, which resolve
+    # these rows in their own process — compute bit-identical results.
+    # Every platform row shares ONE internally-jitted callable (the
+    # single-config tuning space keeps agents from re-jitting it, which
+    # would trace the static string kwargs).
+    from ..train.step_kernels import adamw_step_vec, lm_grad_vec, step_space
+    for alias, fn in (("LM_GRAD", lm_grad_vec),
+                      ("ADAMW_STEP", adamw_step_vec)):
+        registry.register(_rec(alias, fn, "jnp", 0, failsafe=True,
+                               space=step_space))
+        registry.register(_rec(alias, fn, "xla", 10, space=step_space))
+        registry.register(_rec(alias, fn, "pallas", 20, space=step_space))
 
     # Fusibility rules (DESIGN.md §12): which aliases the graph fusion pass
     # may collapse into same-agent linear chains.  EW* members carry the

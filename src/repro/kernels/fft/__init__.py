@@ -1,0 +1,5 @@
+"""FFT kernel family: Pallas DFT-by-matmul, XLA jnp.fft, jnp fail-safe."""
+from .ops import fft, fft_space
+from .ref import fft_ref, fft_xla
+
+__all__ = ["fft", "fft_ref", "fft_space", "fft_xla"]

@@ -1,0 +1,20 @@
+"""FFT references: the jnp fail-safe oracle and the XLA-optimized variant."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fft_ref(x: jax.Array) -> jax.Array:
+    """DFT along the last axis of a real batch (m, n) → complex64.
+
+    The C²MPI fail-safe: plain ``jnp.fft`` (Cooley–Tukey on every backend)."""
+    return jnp.fft.fft(jnp.asarray(x, jnp.float32), axis=-1).astype(
+        jnp.complex64)
+
+
+@jax.jit
+def fft_xla(x: jax.Array) -> jax.Array:
+    """Jitted XLA variant of :func:`fft_ref` (same algorithm, fused)."""
+    return jnp.fft.fft(jnp.asarray(x, jnp.float32), axis=-1).astype(
+        jnp.complex64)

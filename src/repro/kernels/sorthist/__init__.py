@@ -1,0 +1,6 @@
+"""SORT / HIST kernel family: Pallas VPU kernels + jnp fail-safes."""
+from .ops import hist, hist_space, sort, sort_space
+from .ref import hist_ref, sort_ref
+
+__all__ = ["hist", "hist_ref", "hist_space", "sort", "sort_ref",
+           "sort_space"]

@@ -1,0 +1,27 @@
+"""SORT / HIST pure-jnp oracles (the C²MPI fail-safe implementations)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_ref(x: jax.Array) -> jax.Array:
+    """Ascending sort along the last axis."""
+    return jnp.sort(jnp.asarray(x), axis=-1)
+
+
+def hist_ref(x: jax.Array, *, bins: int = 64, lo: float = 0.0,
+             hi: float = 1.0) -> jax.Array:
+    """f32 bin counts of ``x`` over ``bins`` equal buckets of [lo, hi].
+
+    Defines the family's binning contract (shared with the Pallas kernel):
+    ``floor((x - lo) / width)`` clipped into range, values outside
+    ``[lo, hi]`` dropped, the right edge closed into the last bin —
+    np.histogram semantics for uniform edges."""
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    width = (hi - lo) / bins
+    ids = jnp.clip(jnp.floor((x - lo) / width).astype(jnp.int32),
+                   0, bins - 1)
+    valid = (x >= lo) & (x <= hi)
+    onehot = jax.nn.one_hot(ids, bins, dtype=jnp.float32)
+    return jnp.sum(onehot * valid[:, None].astype(jnp.float32), axis=0)

@@ -34,6 +34,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--comm", type=int, default=0, metavar="N",
+                    help="train data-parallel over an N-member C²MPI device "
+                         "group (cycling the available substrates); "
+                         "microbatches is raised to a multiple of N")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--heartbeat", default=None)
@@ -48,12 +52,26 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
+
+    comm = None
+    microbatches = args.microbatches
+    if args.comm:
+        from ..core.c2mpi import MPIX_Initialize, halo_session
+        from ..core.collective import comm_split
+        MPIX_Initialize()
+        session = halo_session()
+        subs = comm_split(session).platforms   # available substrates
+        comm = comm_split(
+            session, [subs[i % len(subs)] for i in range(args.comm)])
+        microbatches = -(-microbatches // args.comm) * args.comm
     hp = TrainHyper(base_lr=args.lr, warmup_steps=max(1, args.steps // 10),
-                    total_steps=args.steps, microbatches=args.microbatches,
+                    total_steps=args.steps, microbatches=microbatches,
                     compress_grads=args.compress_grads)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     hb = HeartbeatJournal(args.heartbeat) if args.heartbeat else None
-    trainer = Trainer(model=model, hp=hp, ckpt=ckpt, heartbeat=hb)
+    trainer = Trainer(model=model, hp=hp, ckpt=ckpt, heartbeat=hb,
+                      straggler=StragglerPolicy(), comm=comm, arch=args.arch,
+                      arch_reduced=args.reduced)
 
     mesh = None
     if args.mesh == "debug":
@@ -67,7 +85,6 @@ def main(argv=None):
     def data_fn(step):
         return {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
 
-    straggler = StragglerPolicy()
     with mesh_context(mesh):
         state, start = trainer.restore_or_init(jax.random.PRNGKey(args.seed))
         state, history = trainer.run(state, data_fn,

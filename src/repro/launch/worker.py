@@ -30,9 +30,11 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=None,
                     help="informational; the device count is fixed by "
                          "XLA_FLAGS at process start")
-    ap.add_argument("--log-level", default=os.environ.get(
-        "HALO_WORKER_LOG", "WARNING"))
+    ap.add_argument("--log-level", default=None)
     args = ap.parse_args(argv)
+    if args.log_level is None:
+        from repro.core.config import halo_config
+        args.log_level = halo_config().worker_log
     logging.basicConfig(
         level=args.log_level.upper(),
         format=f"[{args.name}] %(levelname)s %(name)s: %(message)s")

@@ -160,6 +160,44 @@ def _moe_local(p: Params, x2: jax.Array, m: MoEConfig, act: str):
     return y.astype(x2.dtype), aux
 
 
+def moe_expert_parallel(p: Params, x: jax.Array, m: MoEConfig, act: str,
+                        comm) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE over a C²MPI device group (DESIGN.md §15).
+
+    Host-side eager twin of :func:`moe_layer`'s local path: routing and the
+    capacity dispatch run on the session substrate, then the (E,C,D) expert
+    blocks and the expert weight stacks ``MPIX_Scatter`` over the group's
+    member ranks (E split axis-0, ``E % comm.size == 0``), every member runs
+    ``MOE_FFN`` on its expert slice, and ``MPIX_Gather`` reassembles the
+    outputs for the gate-combine.  Per-expert FFNs are independent, so the
+    split-compute-concat is bit-identical to the single-shard path —
+    asserted by the §15 parity test."""
+    e, n = m.n_experts, comm.size
+    if e % n:
+        raise ValueError(f"n_experts ({e}) must divide over the {n}-member "
+                         f"device group")
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    y_sh = None
+    if p.get("ws_g") is not None:
+        g = dense(x2, p["ws_g"])
+        u = dense(x2, p["ws_u"])
+        y_sh = dense(act_fn("swiglu", g, u), p["ws_d"])
+    t = b * s
+    gates, eidx, aux = _route(x2, p["router"], m)
+    c = _capacity(t, m)
+    slot, keep = _dispatch_indices(eidx, t, c, e)
+    xe = _gather_dispatch(x2, slot, keep, e, c, m.top_k)
+    parts = [comm.scatter(jnp.asarray(w, xe.dtype), axis=0)
+             for w in (xe, p["we_g"], p["we_u"], p["we_d"])]
+    ye_parts = comm.map("MOE_FFN", list(zip(*parts)))
+    ye = comm.gather(ye_parts)
+    y = _combine(ye, slot, keep, gates, t, m.top_k).astype(x2.dtype)
+    if y_sh is not None:
+        y = y + y_sh.astype(y.dtype)
+    return y.reshape(b, s, d).astype(x.dtype), aux * m.router_aux_weight
+
+
 # ---------------------------------------------------------------------------
 # Distributed paths
 # ---------------------------------------------------------------------------

@@ -1,0 +1,220 @@
+"""Registry-resident training-step kernels (DESIGN.md §15).
+
+Data-parallel training through the C²MPI collectives needs the
+forward/backward and the optimizer step to be *registry aliases*, not host
+closures: device-group members are virtualization agents (possibly remote
+worker processes) that resolve aliases in their own registries, and a
+closure over a live ``Model`` cannot cross the wire.  Two builtins:
+
+* ``LM_GRAD(params_vec, tokens, labels, mask, arch=…, reduced=…)`` —
+  one microbatch's loss + gradients as a single f32 vector
+  ``concat([loss], grads_flat)``, so the whole backward result rides the
+  comm's ``EWADD`` reduce tree as one payload.
+* ``ADAMW_STEP(gsum_vec, params_vec, mu_vec, nu_vec, step, …hyper)`` —
+  consumes the *summed* microbatch vector (dividing by ``n_micro`` exactly
+  once), applies clip + AdamW + schedule, and returns
+  ``concat(new_params, new_mu, new_nu, [step, loss, lr, grad_norm])``.
+
+Both registry records (jnp / xla / pallas platform rows) share ONE jitted
+callable, so a member rank computes bit-identical results wherever the
+comm binds it — the property the §15 parity suite enforces.  Model
+parameters travel as a flat f32 vector (bf16↔f32 round-trips are lossless),
+unflattened inside the jitted step from the arch's cached template.
+
+``arch`` is a config id resolved via :func:`repro.configs.get_config`
+(wire-safe — a remote worker resolves the same id in its own process);
+in-process custom configs register with :func:`register_arch`.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..configs.base import ArchConfig
+from ..models import build_model
+from ..optim.adamw import AdamWState, adamw_update
+from ..optim.schedule import linear_warmup_cosine
+
+__all__ = ["adamw_step_vec", "flatten_f32", "flatten_params", "lm_grad_vec",
+           "param_size", "register_arch", "resolve_arch", "step_space",
+           "unflatten_f32", "unflatten_params", "unpack_adamw_out"]
+
+#: in-process custom configs (take precedence over the built-in registry)
+_EXTRA_ARCHES: Dict[str, ArchConfig] = {}
+
+
+def register_arch(name: str, cfg: ArchConfig) -> None:
+    """Make a non-registry :class:`ArchConfig` resolvable as ``arch=name``
+    (this process only — remote workers resolve built-in ids)."""
+    _EXTRA_ARCHES[name] = cfg
+    _model_of.cache_clear()
+    _template.cache_clear()
+
+
+def resolve_arch(arch: str, reduced: bool = False) -> ArchConfig:
+    cfg = _EXTRA_ARCHES.get(arch) or get_config(arch)
+    return cfg.reduced() if reduced else cfg
+
+
+@functools.lru_cache(maxsize=None)
+def _model_of(arch: str, reduced: bool):
+    return build_model(resolve_arch(arch, reduced))
+
+
+@functools.lru_cache(maxsize=None)
+def _template(arch: str, reduced: bool):
+    """(treedef, shapes, dtypes, offsets, total) of the arch's params."""
+    model = _model_of(arch, reduced)
+    specs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree.flatten(specs)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = [int(math.prod(s)) for s in shapes]
+    offsets = []
+    off = 0
+    for n in sizes:
+        offsets.append(off)
+        off += n
+    return treedef, shapes, dtypes, tuple(offsets), off
+
+
+def param_size(arch: str, reduced: bool = False) -> int:
+    """Flat-vector length of the arch's parameters (= moment length)."""
+    return _template(arch, reduced)[4]
+
+
+# ---------------------------------------------------------------------------
+# Flatten / unflatten
+# ---------------------------------------------------------------------------
+def flatten_params(params) -> jax.Array:
+    """Param pytree → one f32 vector (leaf order = jax.tree.flatten)."""
+    leaves = jax.tree.leaves(params)
+    return jnp.concatenate(
+        [jnp.asarray(l).astype(jnp.float32).reshape(-1) for l in leaves])
+
+
+flatten_f32 = flatten_params    # moments are f32 pytrees of the same shapes
+
+
+def _split(vec, arch: str, reduced: bool):
+    treedef, shapes, dtypes, offsets, total = _template(arch, reduced)
+    parts = []
+    for s, off in zip(shapes, offsets):
+        n = 1
+        for d in s:
+            n *= d
+        parts.append(vec[off:off + n].reshape(s))
+    return treedef, dtypes, parts
+
+
+def unflatten_params(vec, arch: str, reduced: bool = False):
+    """f32 vector → param pytree at the arch's native leaf dtypes."""
+    treedef, dtypes, parts = _split(vec, arch, reduced)
+    return jax.tree.unflatten(
+        treedef, [p.astype(dt) for p, dt in zip(parts, dtypes)])
+
+
+def unflatten_f32(vec, arch: str, reduced: bool = False):
+    """f32 vector → pytree with param shapes but f32 leaves (grads/moments)."""
+    treedef, _, parts = _split(vec, arch, reduced)
+    return jax.tree.unflatten(treedef, parts)
+
+
+# ---------------------------------------------------------------------------
+# LM_GRAD
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("arch", "reduced"))
+def _lm_grad(params_vec, tokens, labels, mask, *, arch: str, reduced: bool):
+    model = _model_of(arch, reduced)
+    if model.cfg.frontend != "none":
+        raise ValueError(
+            f"LM_GRAD supports token-frontend archs only; {arch!r} uses "
+            f"frontend={model.cfg.frontend!r}")
+    params = unflatten_params(params_vec, arch, reduced)
+    batch = {"tokens": tokens, "labels": labels, "mask": mask}
+
+    def loss_of(p):
+        loss, _ = model.loss_fn(p, batch)
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_of)(params)
+    return jnp.concatenate([loss.astype(jnp.float32)[None],
+                            flatten_f32(grads)])
+
+
+def lm_grad_vec(params_vec, tokens, labels, mask, *, arch: str,
+                reduced: bool = False) -> jax.Array:
+    """One microbatch forward/backward: ``concat([loss], grads_flat)`` f32."""
+    return _lm_grad(jnp.asarray(params_vec, jnp.float32),
+                    jnp.asarray(tokens), jnp.asarray(labels),
+                    jnp.asarray(mask), arch=arch, reduced=bool(reduced))
+
+
+# ---------------------------------------------------------------------------
+# ADAMW_STEP
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=(
+    "arch", "reduced", "n_micro", "base_lr", "warmup_steps", "total_steps",
+    "weight_decay", "clip_norm"))
+def _adamw_step(gsum_vec, params_vec, mu_vec, nu_vec, step, *, arch: str,
+                reduced: bool, n_micro: int, base_lr: float,
+                warmup_steps: int, total_steps: int, weight_decay: float,
+                clip_norm: float):
+    # the microbatch mean is taken exactly once, here — members only ever
+    # sum, so the reduce tree stays pure EWADD and composition-invariant
+    loss = gsum_vec[0] / n_micro
+    grads = unflatten_f32(gsum_vec[1:] / n_micro, arch, reduced)
+    params = unflatten_params(params_vec, arch, reduced)
+    mu = unflatten_f32(mu_vec, arch, reduced)
+    nu = unflatten_f32(nu_vec, arch, reduced)
+    lr = linear_warmup_cosine(step, base_lr=base_lr,
+                              warmup_steps=warmup_steps,
+                              total_steps=total_steps)
+    new_p, st, om = adamw_update(params, grads, AdamWState(step, mu, nu),
+                                 lr=lr, weight_decay=weight_decay,
+                                 clip_norm=clip_norm)
+    tail = jnp.stack([st.step.astype(jnp.float32), loss,
+                      jnp.asarray(lr, jnp.float32), om["grad_norm"]])
+    return jnp.concatenate([flatten_params(new_p), flatten_f32(st.mu),
+                            flatten_f32(st.nu), tail])
+
+
+def adamw_step_vec(gsum_vec, params_vec, mu_vec, nu_vec, step, *, arch: str,
+                   reduced: bool = False, n_micro: int = 1,
+                   base_lr: float = 3e-4, warmup_steps: int = 100,
+                   total_steps: int = 1_000, weight_decay: float = 0.1,
+                   clip_norm: float = 1.0) -> jax.Array:
+    """AdamW over a summed ``LM_GRAD`` vector.
+
+    Returns ``concat(new_params, new_mu, new_nu, [step, loss, lr, gnorm])``
+    — slice at ``param_size(arch, reduced)`` boundaries host-side."""
+    return _adamw_step(
+        jnp.asarray(gsum_vec, jnp.float32),
+        jnp.asarray(params_vec, jnp.float32),
+        jnp.asarray(mu_vec, jnp.float32), jnp.asarray(nu_vec, jnp.float32),
+        jnp.asarray(step, jnp.int32), arch=arch, reduced=bool(reduced),
+        n_micro=int(n_micro), base_lr=float(base_lr),
+        warmup_steps=int(warmup_steps), total_steps=int(total_steps),
+        weight_decay=float(weight_decay), clip_norm=float(clip_norm))
+
+
+def unpack_adamw_out(out, arch: str, reduced: bool = False
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, Dict]:
+    """Host-side view of an ``ADAMW_STEP`` result: (params_vec, mu_vec,
+    nu_vec, {"step", "loss", "lr", "grad_norm"})."""
+    p = param_size(arch, reduced)
+    tail = out[3 * p:]
+    metrics = {"step": jnp.asarray(tail[0], jnp.int32), "loss": tail[1],
+               "lr": tail[2], "grad_norm": tail[3]}
+    return out[:p], out[p:2 * p], out[2 * p:3 * p], metrics
+
+
+def step_space(*args, **kw):
+    """Single-config tuning space: marks the records as internally jitted
+    (string/static kwargs must never meet an agent's outer ``jax.jit``)."""
+    return [{}]

@@ -5,13 +5,23 @@ The train step is a single pjit program: loss (scanned stages with per-layer
 remat) → grads → (optional quantize/dequant with error feedback) → AdamW.
 Under a mesh, in/out shardings come from the model's ParamSpec planning; on a
 single device everything degrades gracefully.
+
+**Data-parallel comm mode** (DESIGN.md §15): constructing the Trainer with
+``comm=`` (a :class:`~repro.core.collective.HaloComm` device group) and
+``arch=`` switches :meth:`Trainer.run` to the C²MPI path — per-member
+microbatch ``LM_GRAD`` dispatches, a balanced ``EWADD`` reduce tree, an
+``iallreduce`` across members, and one ``ADAMW_STEP`` node, captured once
+into a ``halo_graph`` and replayed each step through the §12 CompiledGraph
+cache.  Loss histories are bit-identical across member counts at equal
+global batch (see step_kernels.py for why); a member death mid-run bumps
+``comm.epoch`` and the loop recaptures on the re-bound group (§11).
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +31,7 @@ from ..optim.adamw import AdamWState, adamw_init, adamw_update
 from ..optim.compression import compress_gradients
 from ..optim.schedule import linear_warmup_cosine
 from .checkpoint import CheckpointManager
-from .fault_tolerance import HeartbeatJournal
+from .fault_tolerance import HeartbeatJournal, StragglerPolicy
 
 log = logging.getLogger("repro.train")
 PyTree = Any
@@ -99,11 +109,21 @@ def make_train_step(model: Model, hp: TrainHyper) -> Callable:
 
 @dataclasses.dataclass
 class Trainer:
-    """Host-side loop: data, jitted step, checkpoints, heartbeat, resume."""
+    """Host-side loop: data, jitted step, checkpoints, heartbeat, resume.
+
+    ``straggler`` (when set) observes every step's wall time in both modes;
+    straggler events are logged with the policy's recommendation.  ``comm``
+    + ``arch`` select the data-parallel C²MPI mode (module docstring);
+    ``arch`` must resolve through :func:`repro.train.step_kernels.
+    resolve_arch` to the same architecture as ``model``."""
     model: Model
     hp: TrainHyper
     ckpt: Optional[CheckpointManager] = None
     heartbeat: Optional[HeartbeatJournal] = None
+    straggler: Optional[StragglerPolicy] = None
+    comm: Optional[Any] = None           # HaloComm device group (§15)
+    arch: Optional[str] = None           # config id for LM_GRAD/ADAMW_STEP
+    arch_reduced: bool = False
     log_every: int = 10
     ckpt_every: int = 50
 
@@ -124,15 +144,26 @@ class Trainer:
                 return restored, step
         return state, 0
 
+    def _observe_straggler(self, step: int, dt: float) -> None:
+        if self.straggler is not None and self.straggler.observe(dt):
+            log.warning("step %d straggler: %.2fs vs median %.2fs (%s)",
+                        step, dt, self.straggler.median(),
+                        self.straggler.recommendation())
+
     def run(self, state: TrainState, data_fn: Callable[[int], Any],
             steps: int, start_step: int = 0):
+        if self.comm is not None:
+            return self._run_comm(state, data_fn, steps, start_step)
         step_fn = jax.jit(make_train_step(self.model, self.hp),
                           donate_argnums=(0,))
         history = []
         t_last = time.perf_counter()
         for step in range(start_step, start_step + steps):
+            t0 = time.perf_counter()
             batch = data_fn(step)
             state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"]) if self.straggler else None
+            self._observe_straggler(step, time.perf_counter() - t0)
             if self.heartbeat is not None:
                 self.heartbeat.beat(step)
             if step % self.log_every == 0 or step == start_step + steps - 1:
@@ -148,3 +179,174 @@ class Trainer:
         if self.ckpt is not None:
             self.ckpt.save(start_step + steps - 1, state, wait=True)
         return state, history
+
+    # -- data-parallel comm mode (DESIGN.md §15) ----------------------------
+    def _microbatches(self, batch) -> List[List[Any]]:
+        """Split a global batch into per-rank microbatch columns:
+        ``out[r][j]`` = (tokens, labels, mask) of global microbatch
+        ``r * m_local + j`` — member *r* owns a *contiguous* block, so the
+        local trees compose into the same balanced tree for every member
+        count (step_kernels docstring)."""
+        n = self.comm.size
+        m = self.hp.microbatches
+        if m % n:
+            raise ValueError(
+                f"microbatches ({m}) must divide evenly over the "
+                f"{n}-member device group")
+        m_local = m // n
+        toks, labs, mask = batch["tokens"], batch["labels"], batch["mask"]
+        b = toks.shape[0]
+        if b % m:
+            raise ValueError(f"global batch {b} not divisible into {m} "
+                             f"microbatches")
+        mb = b // m
+        out = []
+        for r in range(n):
+            cols = []
+            for j in range(m_local):
+                i = (r * m_local + j) * mb
+                cols.append((toks[i:i + mb], labs[i:i + mb],
+                             mask[i:i + mb]))
+            out.append(cols)
+        return out
+
+    def _step_kwargs(self) -> Dict[str, Any]:
+        hp = self.hp
+        return dict(arch=self.arch, reduced=self.arch_reduced,
+                    n_micro=hp.microbatches, base_lr=hp.base_lr,
+                    warmup_steps=hp.warmup_steps,
+                    total_steps=hp.total_steps,
+                    weight_decay=hp.weight_decay, clip_norm=hp.clip_norm)
+
+    def _capture_comm_step(self, vecs, parts):
+        """Capture one data-parallel step into a compiled graph.
+
+        ``vecs`` = (pvec, mu, nu, step) arrays, ``parts`` the per-rank
+        microbatch columns.  Per column an ``LM_GRAD`` runs pinned on each
+        member; each member's results fold through a balanced local
+        ``EWADD`` tree; the member partials ``iallreduce``; rank 0's copy
+        feeds the single ``ADAMW_STEP`` node (recorded last, so it is the
+        final replay output).  Returns (CompiledGraph, updates-slot map)."""
+        from ..core.graph import halo_graph
+        comm = self.comm
+        session = comm.session
+        pvec, mu, nu, step_arr = vecs
+        n = comm.size
+        gkw = {"arch": self.arch, "reduced": self.arch_reduced}
+        with halo_graph(session, launch=False) as g:
+            cols = [list() for _ in range(n)]
+            for j in range(len(parts[0])):
+                nodes = comm.imap(
+                    "LM_GRAD",
+                    [(pvec,) + parts[r][j] for r in range(n)], kwargs=gkw)
+                for r in range(n):
+                    cols[r].append(nodes[r])
+            while len(cols[0]) > 1:
+                nxt = [list() for _ in range(n)]
+                for i in range(0, len(cols[0]) - 1, 2):
+                    nodes = comm.imap(
+                        "EWADD",
+                        [(cols[r][i], cols[r][i + 1]) for r in range(n)])
+                    for r in range(n):
+                        nxt[r].append(nodes[r])
+                if len(cols[0]) % 2:
+                    for r in range(n):
+                        nxt[r].append(cols[r][-1])
+                cols = nxt
+            reduced = comm.iallreduce([cols[r][0] for r in range(n)])
+            p0 = comm.platforms[0]
+            session.dispatch(
+                "ADAMW_STEP", reduced[0], pvec, mu, nu, step_arr,
+                overrides={"allowed_platforms": [p0],
+                           "platform_preference": [p0]},
+                **self._step_kwargs())
+        cg = g.compile()
+        slots = {
+            "pvec": cg.slot_of(pvec), "mu": cg.slot_of(mu),
+            "nu": cg.slot_of(nu), "step": cg.slot_of(step_arr),
+            "parts": [[tuple(cg.slot_of(a) for a in col) for col in row]
+                      for row in parts],
+        }
+        return cg, slots
+
+    def _run_comm(self, state: TrainState, data_fn, steps: int,
+                  start_step: int = 0):
+        from .step_kernels import (flatten_f32, flatten_params, param_size,
+                                   unflatten_f32, unflatten_params,
+                                   unpack_adamw_out)
+        if self.arch is None:
+            raise ValueError("comm mode needs arch= (a config id "
+                             "resolvable by repro.train.step_kernels)")
+        comm = self.comm
+        p_len = param_size(self.arch, self.arch_reduced)
+        pvec = flatten_params(state.params)
+        if pvec.shape[0] != p_len:
+            raise ValueError(
+                f"model/arch mismatch: params flatten to {pvec.shape[0]} "
+                f"but arch {self.arch!r} expects {p_len}")
+        mu = flatten_f32(state.opt.mu)
+        nu = flatten_f32(state.opt.nu)
+        step_arr = jnp.asarray(state.opt.step, jnp.int32)
+
+        cg = slots = None
+        cap_epoch = -1
+        history = []
+        t_last = time.perf_counter()
+        for step in range(start_step, start_step + steps):
+            t0 = time.perf_counter()
+            parts = self._microbatches(data_fn(step))
+            out = None
+            for attempt in (0, 1):
+                if cg is None or comm.epoch != cap_epoch:
+                    cap_epoch = comm.epoch
+                    cg, slots = self._capture_comm_step(
+                        (pvec, mu, nu, step_arr), parts)
+                    updates = None
+                else:
+                    updates = {slots["pvec"]: pvec, slots["mu"]: mu,
+                               slots["nu"]: nu, slots["step"]: step_arr}
+                    for row, srow in zip(parts, slots["parts"]):
+                        for col, scol in zip(row, srow):
+                            for arr, slot in zip(col, scol):
+                                updates[slot] = arr
+                try:
+                    out = cg.replay(updates)[-1]
+                    break
+                except Exception:
+                    # §11 repair path: a member died (or the pinned plan
+                    # went stale) mid-replay — recapture on the re-bound
+                    # group and retry once before surfacing the error
+                    if attempt:
+                        raise
+                    log.warning("comm-step replay failed; recapturing on "
+                                "current group %s", list(comm.platforms))
+                    cg = None
+            pvec, mu, nu, metrics = unpack_adamw_out(
+                out, self.arch, self.arch_reduced)
+            step_arr = metrics["step"]
+            self._observe_straggler(step, time.perf_counter() - t0)
+            if self.heartbeat is not None:
+                self.heartbeat.beat(step)
+            if step % self.log_every == 0 or step == start_step + steps - 1:
+                m = jax.device_get(metrics)
+                dt = time.perf_counter() - t_last
+                t_last = time.perf_counter()
+                history.append((step, float(m["loss"])))
+                log.info("step %5d loss %.4f lr %.2e gnorm %.3f "
+                         "[%d members] (%.2fs)", step, m["loss"], m["lr"],
+                         m["grad_norm"], comm.size, dt)
+            if self.ckpt is not None and step and step % self.ckpt_every == 0:
+                self.ckpt.save(step, self._comm_state(pvec, mu, nu, step_arr))
+        state = self._comm_state(pvec, mu, nu, step_arr)
+        if self.ckpt is not None:
+            self.ckpt.save(start_step + steps - 1, state, wait=True)
+        return state, history
+
+    def _comm_state(self, pvec, mu, nu, step_arr) -> TrainState:
+        from .step_kernels import unflatten_f32, unflatten_params
+        return TrainState(
+            params=unflatten_params(pvec, self.arch, self.arch_reduced),
+            opt=AdamWState(
+                step=jnp.asarray(step_arr, jnp.int32),
+                mu=unflatten_f32(mu, self.arch, self.arch_reduced),
+                nu=unflatten_f32(nu, self.arch, self.arch_reduced)))

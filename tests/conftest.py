@@ -21,6 +21,14 @@ def _no_ambient_halo_env(monkeypatch):
     not leak persisted latency tables into CostModelScheduler.default()
     instances, and a shell with HALO_HEALTH_MONITOR / HALO_HEARTBEAT_TIMEOUT
     set must not silently change agent liveness behaviour under test.
-    Tests that exercise a knob set it explicitly via monkeypatch.setenv."""
+    Tests that exercise a knob set it explicitly via monkeypatch.setenv.
+
+    The typed HaloConfig caches override state at module level, so the
+    snapshot is reset around each test too — ``configure()`` calls made by
+    a test must not leak into the next."""
     for var in [v for v in os.environ if v.startswith("HALO_")]:
         monkeypatch.delenv(var, raising=False)
+    from repro.core.config import reset_config
+    reset_config()
+    yield
+    reset_config()

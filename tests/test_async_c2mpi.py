@@ -44,6 +44,12 @@ def _alias_args(rng):
     ssd_c = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
     ssd_d = jax.random.normal(ks[5], (H,)) * 0.1
     km = jax.random.split(k[7], 4)
+    from repro.train.step_kernels import param_size, resolve_arch
+    step_kw = dict(arch="h2o-danube-1.8b", reduced=True)
+    p = param_size(**step_kw)
+    v = resolve_arch(**step_kw).vocab_size
+    pvec = jax.random.normal(km[0], (p,)) * 0.02
+    toks = jax.random.randint(km[1], (2, 16), 0, v)
     return {
         "MMM": (a, b),
         "EWMM": (a, b),
@@ -68,6 +74,15 @@ def _alias_args(rng):
                     jax.random.normal(km[1], (2, 16, 32)) * 0.1,
                     jax.random.normal(km[2], (2, 16, 32)) * 0.1,
                     jax.random.normal(km[3], (2, 32, 16)) * 0.1),
+        "FFT": (a[:8],),
+        "SORT": (x,),
+        "HIST": (jax.nn.sigmoid(x),),
+        "LM_GRAD": ((pvec, toks, jnp.roll(toks, -1, 1),
+                     jnp.ones((2, 16), jnp.float32)), step_kw),
+        "ADAMW_STEP": ((jax.random.normal(km[2], (p + 1,)) * 0.01, pvec,
+                        jnp.zeros_like(pvec), jnp.zeros_like(pvec),
+                        jnp.asarray(0, jnp.int32)),
+                       dict(step_kw, n_micro=2)),
     }
 
 
@@ -76,12 +91,14 @@ def test_isend_wait_matches_blocking_for_all_registered_aliases(agent, rng):
     blocking path for every alias in the registry."""
     jobs = _alias_args(rng)
     assert sorted(jobs) == agent.registry.aliases()   # full coverage
-    for alias, args in jobs.items():
+    for alias, job in jobs.items():
+        args, kwargs = (job if len(job) == 2 and isinstance(job[1], dict)
+                        else (job, {}))
         cr_sync = agent.claim(alias)
-        agent.send(args, cr_sync)
+        agent.send(args, cr_sync, **kwargs)
         ref = agent.recv(cr_sync)
         cr_async = agent.claim(alias)
-        fut = agent.isend(args, cr_async)
+        fut = agent.isend(args, cr_async, **kwargs)
         out = jax.block_until_ready(fut.result(timeout=60))
         for l_ref, l_out in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
             np.testing.assert_allclose(np.asarray(l_out), np.asarray(l_ref),

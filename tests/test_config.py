@@ -1,0 +1,84 @@
+"""HaloConfig: the consolidated typed ``HALO_*`` knob surface — precedence
+(override > env > default), typo safety, and subsystem pickup."""
+import os
+
+import pytest
+
+from repro.core.config import HaloConfig, configure, halo_config, reset_config
+
+
+def test_defaults_match_dataclass():
+    cfg = halo_config()
+    assert cfg == HaloConfig()
+    assert cfg.fusion is True and cfg.graph_cache == 16
+    assert cfg.heartbeat_timeout == 30.0
+
+
+def test_env_beats_default(monkeypatch):
+    monkeypatch.setenv("HALO_FUSION", "0")
+    monkeypatch.setenv("HALO_GRAPH_CACHE", "3")
+    monkeypatch.setenv("HALO_HEARTBEAT_TIMEOUT", "7.5")
+    cfg = halo_config()
+    assert cfg.fusion is False
+    assert cfg.graph_cache == 3
+    assert cfg.heartbeat_timeout == 7.5
+
+
+def test_override_beats_env_and_never_touches_environ(monkeypatch):
+    monkeypatch.setenv("HALO_GRAPH_CACHE", "3")
+    try:
+        cfg = configure(graph_cache=9, fusion=False)
+        assert cfg.graph_cache == 9 and cfg.fusion is False
+        assert os.environ["HALO_GRAPH_CACHE"] == "3"
+        assert "HALO_FUSION" not in os.environ
+        # clearing an override falls back to the env layer
+        assert configure(graph_cache=None).graph_cache == 3
+    finally:
+        reset_config()
+
+
+def test_unknown_field_raises():
+    with pytest.raises(TypeError, match="unknown HaloConfig field"):
+        configure(fusoin=True)
+
+
+def test_snapshot_is_frozen_and_rebuilt_per_call(monkeypatch):
+    cfg = halo_config()
+    with pytest.raises(dataclasses_frozen_error()):
+        cfg.fusion = False
+    monkeypatch.setenv("HALO_FUSION", "0")
+    assert halo_config().fusion is False     # later reads see the change
+    assert cfg.fusion is True                # earlier snapshots don't move
+
+
+def dataclasses_frozen_error():
+    import dataclasses
+    return dataclasses.FrozenInstanceError
+
+
+def test_compile_graph_reads_config_override():
+    """HALO_FUSION=off via configure(): compile_graph keeps replay caching
+    but skips the fusion pass (fused == nodes count unchanged)."""
+    import jax.numpy as jnp
+
+    from repro.core.c2mpi import MPIX_Initialize, halo_session
+    from repro.core.graph import halo_graph
+
+    MPIX_Initialize()
+    sess = halo_session()
+    try:
+        configure(fusion=False)
+        with halo_graph(sess, launch=False) as g:
+            a = sess.dispatch("EWADD", jnp.ones(8), jnp.ones(8))
+            b = sess.dispatch("EWMM", a, jnp.ones(8))
+            sess.dispatch("EWSUB", b, jnp.ones(8))
+        cg = g.compile()
+        assert cg.stats["fused_nodes"] == 0
+        assert cg.stats["nodes"] == cg.stats["captured_nodes"] == 3
+    finally:
+        reset_config()
+
+
+def test_facade_exposes_config():
+    from repro import halo
+    assert halo.config is halo_config and halo.configure is configure

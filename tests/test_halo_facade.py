@@ -1,0 +1,62 @@
+"""The unified ``repro.halo`` facade: every export resolves, facade names
+are the subsystem objects (no forked behavior), and the one-call training
+entry point works in both single-agent and device-group modes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import halo
+
+
+def test_every_export_resolves():
+    assert halo.__all__ == sorted(set(halo.__all__), key=halo.__all__.index)
+    for name in halo.__all__:
+        assert getattr(halo, name, None) is not None, name
+
+
+def test_facade_names_are_the_subsystem_objects():
+    from repro.core import c2mpi
+    from repro.core.config import HaloConfig, configure, halo_config
+    from repro.core.fusion import compile_graph
+    from repro.core.graph import halo_graph
+    from repro.distributed.remote import spawn_worker
+
+    assert halo.dispatch is c2mpi.halo_dispatch
+    assert halo.session is c2mpi.halo_session
+    assert halo.initialize is c2mpi.MPIX_Initialize
+    assert halo.claim is c2mpi.MPIX_Claim
+    assert halo.allreduce is c2mpi.MPIX_Allreduce
+    assert halo.graph is halo_graph
+    assert halo.compile_graph is compile_graph
+    assert halo.configure is configure
+    assert halo.config is halo_config
+    assert halo.HaloConfig is HaloConfig
+    assert halo.spawn_worker is spawn_worker
+
+
+def test_dispatch_and_collectives_through_facade():
+    halo.initialize()
+    out = halo.dispatch("EWADD", jnp.ones(8), jnp.ones(8))
+    np.testing.assert_array_equal(np.asarray(out), np.full(8, 2.0))
+    comm = halo.comm_split(["xla", "jnp"])
+    parts = halo.scatter(jnp.arange(8, dtype=jnp.float32), comm)
+    assert [p.shape[0] for p in parts] == [4, 4]
+    total = halo.allreduce([p.sum() for p in parts], comm)
+    assert [float(t) for t in total] == [28.0, 28.0]
+    comm.free()
+
+
+def test_train_entry_point_single_vs_group_bit_identical():
+    """halo.train at equal global batch: a 2-member group reproduces the
+    1-member loss history bit-for-bit (DESIGN.md §15)."""
+    kw = dict(steps=2, seq_len=32, batch=8, reduced=True, microbatches=2,
+              log_every=1)
+    _, h1 = halo.train("h2o-danube-1.8b", **kw)
+    _, h2 = halo.train("h2o-danube-1.8b", comm=2, **kw)
+    assert len(h1) == 2 and h1 == h2
+
+
+def test_train_rejects_bad_microbatches():
+    with pytest.raises(ValueError, match="multiple"):
+        halo.train("h2o-danube-1.8b", reduced=True, comm=2, microbatches=3,
+                   steps=1)

@@ -191,3 +191,59 @@ def test_flash_attention_grad(rng):
                   argnums=(0, 1, 2))(q, k, v)
     for u, v_ in zip(g1, g2):
         np.testing.assert_allclose(u, v_, rtol=2e-4, atol=2e-4)
+
+
+# -- data-reorganization + spectral class (paper Table II rows 9–11) ----------
+from repro.kernels.fft import fft, fft_ref                      # noqa: E402
+from repro.kernels.sorthist import hist, hist_ref, sort, sort_ref  # noqa: E402
+
+
+@pytest.mark.parametrize("m,n", [(1, 64), (4, 128), (3, 500), (8, 1024)])
+def test_fft_sweep(rng, m, n):
+    x = jax.random.normal(rng, (m, n), F32)
+    out = fft(x)
+    ref = np.fft.fft(np.asarray(x), axis=-1)
+    assert out.dtype == jnp.complex64
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-3,
+                               atol=2e-3 * np.sqrt(n))
+    np.testing.assert_allclose(np.asarray(fft_ref(x)), ref, rtol=1e-4,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(64,), (4, 100), (2, 3, 128), (5, 1000)])
+@pytest.mark.parametrize("dt", [F32, BF16])
+def test_sort_sweep(rng, shape, dt):
+    x = jax.random.normal(rng, shape, dt)
+    out = sort(x)
+    assert out.shape == shape and out.dtype == dt
+    np.testing.assert_array_equal(
+        np.asarray(out, np.float32),
+        np.sort(np.asarray(x, np.float32), axis=-1))
+    np.testing.assert_array_equal(np.asarray(sort_ref(x), np.float32),
+                                  np.sort(np.asarray(x, np.float32), -1))
+
+
+@pytest.mark.parametrize("n,bins,lo,hi", [(256, 16, 0.0, 1.0),
+                                          (1000, 64, -2.0, 2.0),
+                                          (65536, 128, -1.0, 3.0),
+                                          (100, 7, 0.0, 0.5)])
+def test_hist_sweep(rng, n, bins, lo, hi):
+    x = jax.random.normal(rng, (n,), F32)
+    out = np.asarray(hist(x, bins=bins, lo=lo, hi=hi))
+    assert out.shape == (bins,)
+    # the kernel reproduces the family contract (hist_ref) bit-exactly
+    np.testing.assert_array_equal(
+        out, np.asarray(hist_ref(x, bins=bins, lo=lo, hi=hi)))
+    # …and np.histogram up to f32-vs-f64 edge rounding: a value exactly on
+    # a bin edge may land one bin over, so mass is conserved and any
+    # per-bin delta is a neighbour swap
+    ref, _ = np.histogram(np.asarray(x), bins=bins, range=(lo, hi))
+    assert out.sum() == ref.sum()
+    assert np.abs(out - ref).max() <= 2
+
+
+def test_hist_total_mass_only_counts_in_range(rng):
+    x = jnp.concatenate([jnp.linspace(0.0, 1.0, 101),
+                         jnp.asarray([-0.5, 1.5, jnp.inf, -jnp.inf])])
+    out = hist(x, bins=10, lo=0.0, hi=1.0)
+    assert float(out.sum()) == 101.0      # edges included, outliers dropped

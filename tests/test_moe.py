@@ -97,3 +97,39 @@ def test_moe_specs_have_expert_sharding(cfg):
     specs = moe_param_specs(64, cfg, jnp.bfloat16)
     assert specs["we_g"].logical[0] == "expert"
     assert specs["we_d"].logical == ("expert", None, "fsdp")
+
+
+# -- expert-parallel execution over a C²MPI device group (DESIGN.md §15) ------
+def test_expert_parallel_matches_local_bitwise(cfg, rng):
+    """Scatter experts over member ranks, MOE_FFN per member, gather,
+    combine: per-expert FFNs are independent, so the distributed layer is
+    bit-identical to moe_layer's single-shard path on any substrate mix."""
+    from repro.core.c2mpi import MPIX_Initialize, halo_session
+    from repro.models.moe import moe_expert_parallel, moe_layer
+
+    MPIX_Initialize()
+    sess = halo_session()
+    d = 16
+    p = _params(cfg, d, rng)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 8, d), jnp.float32)
+    y0, a0 = moe_layer(p, x, cfg, "swiglu")
+    for platforms in (["xla", "xla"], ["xla", "pallas", "jnp", "xla"]):
+        comm = sess.comm_split(platforms)
+        y, a = moe_expert_parallel(p, x, cfg, "swiglu", comm)
+        comm.free()
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y0))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(a0))
+
+
+def test_expert_parallel_rejects_indivisible_groups(cfg, rng):
+    from repro.core.c2mpi import MPIX_Initialize, halo_session
+    from repro.models.moe import moe_expert_parallel
+
+    MPIX_Initialize()
+    sess = halo_session()
+    comm = sess.comm_split(["xla", "xla", "xla"])   # 8 experts % 3 != 0
+    p = _params(cfg, 16, rng)
+    x = jnp.zeros((1, 4, 16), jnp.float32)
+    with pytest.raises(ValueError, match="divide"):
+        moe_expert_parallel(p, x, cfg, "swiglu", comm)
+    comm.free()

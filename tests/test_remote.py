@@ -297,7 +297,35 @@ def _alias_payloads():
         "GQA_DECODE": ((a(2, (1, 2, 4, 16)), kk, v), {}),
         "COPY": ((a(22, (8, 8)),), {}),
         "CONCAT": ((a(23, (4, 4)), a(5, (4, 4))), {}),
+        "FFT": ((a(6, (4, 32)),), {}),
+        "SORT": ((a(7, (33,)),), {}),
+        "HIST": ((jax.nn.sigmoid(a(8, (200,))),), {}),
+        "LM_GRAD": (_lm_grad_payload(), _STEP_KW),
+        "ADAMW_STEP": (_adamw_payload(), dict(_STEP_KW, n_micro=2)),
     }
+
+
+_STEP_KW = dict(arch="h2o-danube-1.8b", reduced=True)
+
+
+def _lm_grad_payload():
+    from repro.train.step_kernels import param_size, resolve_arch
+    p = param_size(**_STEP_KW)
+    v = resolve_arch(**_STEP_KW).vocab_size
+    kp, kt = jax.random.split(jax.random.PRNGKey(12))
+    toks = jax.random.randint(kt, (2, 16), 0, v)
+    return (jax.random.normal(kp, (p,)) * 0.02, toks,
+            jnp.roll(toks, -1, 1), jnp.ones((2, 16), jnp.float32))
+
+
+def _adamw_payload():
+    from repro.train.step_kernels import param_size
+    p = param_size(**_STEP_KW)
+    kg, kp = jax.random.split(jax.random.PRNGKey(13))
+    return (jax.random.normal(kg, (p + 1,)) * 0.01,
+            jax.random.normal(kp, (p,)) * 0.02,
+            jnp.zeros(p, jnp.float32), jnp.zeros(p, jnp.float32),
+            jnp.asarray(0, jnp.int32))
 
 
 @pytest.mark.slow

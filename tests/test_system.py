@@ -28,7 +28,9 @@ def test_paper_template_runs_all_eight_subroutines(rng):
     taps = jax.random.normal(k2, (9,))
     jobs = {"MMM": (a, b), "EWMM": (a, b), "EWMD": (a, b), "MVM": (a, x),
             "VDP": (x, x), "JS": (a + n * jnp.eye(n), jnp.zeros(n), x),
-            "1DCONV": (sig, taps), "SMMM": (vals, idx, b)}
+            "1DCONV": (sig, taps), "SMMM": (vals, idx, b),
+            "FFT": (sig[:1024],), "SORT": (x,),
+            "HIST": (jax.nn.sigmoid(sig),)}
     for alias, args in jobs.items():
         cr = MPIX_Claim(alias)
         MPIX_Send(args, cr)

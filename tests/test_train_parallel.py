@@ -1,0 +1,199 @@
+"""Data-parallel training over C²MPI device groups (DESIGN.md §15).
+
+The §15 contract: at equal global batch the loss history is **bit-identical**
+for every member count (1 vs 2 vs 4, local or remote, any substrate mix),
+because members only ever sum along one balanced EWADD tree and the
+LM_GRAD/ADAMW_STEP records share one jitted callable on every platform.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.agents import RuntimeAgent
+from repro.core.c2mpi import MPIX_Initialize, halo_session
+from repro.core.manifest import default_manifest
+from repro.core.registry import KernelRegistry
+from repro.data import SyntheticLM
+from repro.kernels import register_all
+from repro.models import build_model
+from repro.train.fault_tolerance import StragglerPolicy
+from repro.train.step_kernels import flatten_params
+from repro.train.trainer import TrainHyper, Trainer
+
+ARCH = "h2o-danube-1.8b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    pipe = SyntheticLM(cfg, seq_len=32, global_batch=8)
+    data = lambda s: {k: jnp.asarray(v) for k, v in pipe.batch(s).items()}
+    return cfg, model, data
+
+
+@pytest.fixture(scope="module")
+def session():
+    MPIX_Initialize()
+    return halo_session()
+
+
+def _hp():
+    return TrainHyper(microbatches=4, warmup_steps=2, total_steps=20)
+
+
+def _train(session, model, data, platforms, steps=3):
+    comm = session.comm_split(platforms)
+    tr = Trainer(model=model, hp=_hp(), comm=comm, arch=ARCH,
+                 arch_reduced=True, log_every=1)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    out = tr.run(state, data, steps)
+    comm.free()
+    return out
+
+
+def test_member_count_parity(session, setup):
+    """1 vs 2 vs 4 members, mixed substrates: bit-identical histories AND
+    bit-identical final parameters."""
+    cfg, model, data = setup
+    s1, h1 = _train(session, model, data, ["xla"])
+    s2, h2 = _train(session, model, data, ["xla", "xla"])
+    s4, h4 = _train(session, model, data, ["xla", "pallas", "xla", "jnp"])
+    assert h1 == h2 == h4
+    p1, p2, p4 = (flatten_params(s.params) for s in (s1, s2, s4))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p4))
+    # the optimizer moments went through the same tree too
+    np.testing.assert_array_equal(np.asarray(flatten_params(s1.opt.nu)),
+                                  np.asarray(flatten_params(s4.opt.nu)))
+
+
+def test_compiled_graph_cache_across_runs(session, setup):
+    """A second run with the same topology replays through the §12 compiled
+    graph cache (input re-bind, no re-capture) and stays deterministic."""
+    cfg, model, data = setup
+    _, h_a = _train(session, model, data, ["xla", "xla"], steps=2)
+    _, h_b = _train(session, model, data, ["xla", "xla"], steps=2)
+    assert h_a == h_b
+
+
+def test_comm_mode_requires_arch_and_divisibility(session, setup):
+    cfg, model, data = setup
+    comm = session.comm_split(["xla", "xla"])
+    tr = Trainer(model=model, hp=_hp(), comm=comm)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="arch"):
+        tr.run(state, data, steps=1)
+    tr3 = Trainer(model=model, hp=TrainHyper(microbatches=3), comm=comm,
+                  arch=ARCH, arch_reduced=True)
+    with pytest.raises(ValueError, match="divide"):
+        tr3.run(state, data, steps=1)
+    comm.free()
+
+
+def test_chaos_member_death_mid_run_repairs_and_stays_bit_identical(setup):
+    """A member dies between steps (§11): the comm re-binds its rank onto
+    survivors, the trainer recaptures on the bumped epoch, and the full
+    history still matches the fault-free single-member run bit-for-bit."""
+    cfg, model, data = setup
+    registry = KernelRegistry()
+    register_all(registry)
+    sess = RuntimeAgent(registry=registry, manifest=default_manifest())
+    try:
+        ref_comm = sess.comm_split(["xla"])
+        tr = Trainer(model=model, hp=_hp(), comm=ref_comm, arch=ARCH,
+                     arch_reduced=True, log_every=1)
+        state0 = tr.init_state(jax.random.PRNGKey(0))
+        _, h_ref = tr.run(state0, data, steps=4)
+        ref_comm.free()
+
+        comm = sess.comm_split(["xla", "pallas"])
+        killed = []
+
+        def chaotic_data(step):
+            if step == 2 and not killed:
+                sess.handle_dead_agent(sess.agents["pallas"],
+                                       reason="chaos drill")
+                killed.append(step)
+            return data(step)
+
+        tr = Trainer(model=model, hp=_hp(), comm=comm, arch=ARCH,
+                     arch_reduced=True, log_every=1)
+        epoch0 = comm.epoch
+        _, h_mix = tr.run(tr.init_state(jax.random.PRNGKey(0)),
+                          chaotic_data, steps=4)
+        assert killed and comm.epoch > epoch0
+        assert "pallas" not in comm.platforms
+        assert h_mix == h_ref
+    finally:
+        sess.finalize()
+
+
+def test_launcher_wires_straggler_and_comm(monkeypatch, tmp_path):
+    """repro.launch.train passes its StragglerPolicy into the Trainer (it
+    used to construct one and drop it) and builds the --comm group."""
+    from repro.launch import train as lt
+    seen = {}
+    real = lt.Trainer
+
+    def spy(**kw):
+        seen.update(kw)
+        return real(**kw)
+
+    monkeypatch.setattr(lt, "Trainer", spy)
+    lt.main(["--arch", ARCH, "--reduced", "--steps", "2", "--seq-len", "32",
+             "--comm", "2"])
+    assert isinstance(seen["straggler"], StragglerPolicy)
+    assert seen["comm"] is not None and seen["comm"].size == 2
+    assert seen["arch"] == ARCH and seen["arch_reduced"] is True
+    assert seen["hp"].microbatches == 2
+
+
+def test_straggler_observed_in_classic_loop(setup):
+    cfg, model, data = setup
+
+    class Spy(StragglerPolicy):
+        seen = 0
+
+        def observe(self, dt):
+            Spy.seen += 1
+            return super().observe(dt)
+
+    tr = Trainer(model=model, hp=TrainHyper(), straggler=Spy(), log_every=1)
+    tr.run(tr.init_state(jax.random.PRNGKey(0)), data, steps=2)
+    assert Spy.seen == 2
+
+
+@pytest.mark.slow
+def test_remote_member_parity(setup):
+    """One member rank lives in a spawned worker process: the wire protocol
+    carries the LM_GRAD vectors bit-exactly, so the mixed local/remote
+    group still reproduces the single-agent history."""
+    from repro.distributed.remote import spawn_worker
+    cfg, model, data = setup
+    registry = KernelRegistry()
+    register_all(registry)
+    sess = RuntimeAgent(registry=registry, manifest=default_manifest())
+    w = spawn_worker("tw-train", devices=2)
+    try:
+        ref_comm = sess.comm_split(["xla"])
+        tr = Trainer(model=model, hp=_hp(), comm=ref_comm, arch=ARCH,
+                     arch_reduced=True, log_every=1)
+        state0 = tr.init_state(jax.random.PRNGKey(0))
+        _, h_ref = tr.run(state0, data, steps=2)
+        ref_comm.free()
+
+        agent = w.agent("xla").attach(sess)
+        comm = sess.comm_split(["xla", agent.platform])
+        tr = Trainer(model=model, hp=_hp(), comm=comm, arch=ARCH,
+                     arch_reduced=True, log_every=1)
+        _, h_mix = tr.run(tr.init_state(jax.random.PRNGKey(0)), data,
+                          steps=2)
+        assert h_mix == h_ref
+    finally:
+        w.kill()
+        sess.finalize()
